@@ -1,0 +1,69 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core import Direction, MMAConfig, SimWorld, make_sim_engine
+from repro.core.config import GB, MB
+from repro.core.engine import MMAEngine
+from repro.core.task_launcher import SimBackend
+from repro.core.topology import h20_server
+
+
+def mma_bandwidth(
+    nbytes: int,
+    direction: Direction = Direction.H2D,
+    relays=None,
+    cfg: Optional[MMAConfig] = None,
+    topo=None,
+) -> float:
+    """GB/s for one MMA transfer on a fresh simulated 8xH20."""
+    world = SimWorld()
+    cfg = cfg or MMAConfig()
+    topo = topo or h20_server()
+    backend = SimBackend(world, topo, cfg)
+    eng = MMAEngine(topo, backend, cfg)
+    if relays is not None:
+        eng.set_relay_devices(relays)
+    t = eng.memcpy(nbytes, device=0, direction=direction)
+    world.run()
+    return t.bandwidth_gbps()
+
+
+def native_bandwidth(
+    nbytes: int, direction: Direction = Direction.H2D
+) -> float:
+    world = SimWorld()
+    cfg = MMAConfig()
+    topo = h20_server()
+    backend = SimBackend(world, topo, cfg)
+    res: Dict = {}
+    backend.native_copy(
+        nbytes, 0, direction, lambda: res.setdefault("t", world.now)
+    )
+    world.run()
+    return nbytes / res["t"] / GB
+
+
+class CSV:
+    """Collects ``name,us_per_call,derived`` rows for benchmarks/run.py."""
+
+    def __init__(self) -> None:
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append(f"{name},{us_per_call:.3f},{derived}")
+
+    def emit(self) -> None:
+        for r in self.rows:
+            print(r)
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.monotonic()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.monotonic() - t0) / repeats
+    return out, dt * 1e6

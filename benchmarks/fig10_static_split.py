@@ -1,0 +1,91 @@
+"""Fig 10: MMA's pull-based scheduling vs static splitting, with and
+without background traffic (2 relay paths).
+
+Paper: MMA tracks the better static split in both conditions; any fixed
+split only wins under the traffic pattern it was tuned for.
+"""
+from repro.core import Direction, MMAConfig, SimWorld
+from repro.core.config import GB, MB
+from repro.core.engine import MMAEngine
+from repro.core.simlink import BackgroundFlow, submit_path
+from repro.core.task_launcher import SimBackend
+from repro.core.topology import h20_server
+
+from .common import CSV
+
+SIZE = 1 * GB
+
+
+def _static_split(ratio, background: bool) -> float:
+    """Fixed chunk assignment between relay paths 1 and 2 (plus nothing on
+    the direct path, mirroring the paper's 2-path restriction)."""
+    topo = h20_server()
+    world = SimWorld()
+    cfg = MMAConfig()
+    backend = SimBackend(world, topo, cfg)
+    if background:
+        BackgroundFlow(
+            world, [(backend.dram[0], 1.0), (backend.pcie_h2d[1], 1.0)],
+            t_stop=3.0,
+        )
+    done = {"n": 0}
+    chunk = cfg.chunk_bytes
+    n_chunks = SIZE // chunk
+    n1 = int(n_chunks * ratio[0] / (ratio[0] + ratio[1]))
+    fin = []
+
+    def mark(i):
+        def f():
+            done["n"] += 1
+            if done["n"] == n_chunks:
+                fin.append(world.now)
+        return f
+
+    for i in range(n_chunks):
+        relay = 1 if i < n1 else 2
+        stages = [
+            (backend.dram[0], 1.0),
+            (backend.pcie_h2d[relay], topo.relay_penalty),
+            (backend.nvl_out[relay], topo.relay_penalty),
+            (backend.nvl_in[0], topo.relay_penalty),
+        ]
+        submit_path(world, stages, chunk, mark(i),
+                    initial_delay=topo.chunk_overhead_s)
+    world.run()
+    return fin[0]
+
+
+def _mma(background: bool) -> float:
+    topo = h20_server()
+    world = SimWorld()
+    cfg = MMAConfig()
+    backend = SimBackend(world, topo, cfg)
+    eng = MMAEngine(topo, backend, cfg)
+    eng.set_relay_devices([1, 2])
+    if background:
+        BackgroundFlow(
+            world, [(backend.dram[0], 1.0), (backend.pcie_h2d[1], 1.0)],
+            t_stop=3.0,
+        )
+    t = eng.memcpy(SIZE, device=0, direction=Direction.H2D)
+    world.run()
+    return t.elapsed
+
+
+def run(csv: CSV) -> None:
+    print("# Fig 10 — completion time (ms), 2 relay paths, 1 GB")
+    for background in (False, True):
+        s11 = _static_split((1, 1), background) * 1e3
+        s12 = _static_split((1, 2), background) * 1e3
+        mma = _mma(background) * 1e3
+        tag = "with-bg" if background else "no-bg"
+        best = min(s11, s12)
+        print(f"{tag:8s}: static 1:1 {s11:7.1f}  static 1:2 {s12:7.1f}  "
+              f"MMA {mma:7.1f}  (MMA vs best static: {mma / best:.2f}x)")
+        csv.add(f"fig10.{tag}.mma_ms", mma, f"best_static={best:.1f}")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

@@ -1,0 +1,24 @@
+"""Fig 11: additional CPU cores consumed by MMA vs active relay GPUs.
+
+Paper: 2 engines x 3 threads/GPU (48 threads at 8 GPUs); only the sync
+threads busy-wait; ~8.2 equivalent cores at 8 GPUs, linear in GPU count.
+"""
+from repro.core import make_sim_engine
+
+from .common import CSV
+
+
+def run(csv: CSV) -> None:
+    print("# Fig 11 — additional CPU cores vs active GPUs")
+    eng, _, _ = make_sim_engine()
+    for n in range(1, 9):
+        cores = eng.estimated_cpu_cores(n)
+        print(f"GPUs={n}: {cores:.2f} cores")
+        csv.add(f"fig11.cores.gpus{n}", 0.0, f"{cores:.2f}")
+    print("paper: ~8.2 cores at 8 GPUs out of 384 logical cores")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

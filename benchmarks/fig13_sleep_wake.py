@@ -1,0 +1,36 @@
+"""Fig 13: model fall-asleep / wake-up latency (vLLM Sleep Mode), baseline
+vs MMA, four Qwen model sizes.
+
+Paper: 1.12-2.48x faster switching; Qwen3-32B fall-asleep -56.8%, wake-up
+-59.7%; transfer dominates total latency as size grows (Fig 3: 40->95%).
+"""
+from repro.configs import PAPER_MODELS
+from repro.serving import LatencyModel
+
+from .common import CSV
+
+MODELS = ["qwen3-0.6b", "qwen3-4b", "qwen-7b-chat", "qwen3-32b"]
+
+
+def run(csv: CSV) -> None:
+    print("# Fig 13 — sleep/wake latency (s): baseline vs MMA")
+    speedups = []
+    for name in MODELS:
+        cfg = PAPER_MODELS[name]
+        sb, wb = LatencyModel(cfg, use_mma=False).model_switch()
+        sm, wm = LatencyModel(cfg, use_mma=True).model_switch()
+        sp_s, sp_w = sb / sm, wb / wm
+        speedups += [sp_s, sp_w]
+        print(
+            f"{name:13s}: sleep {sb:6.3f}->{sm:6.3f}s ({sp_s:.2f}x)   "
+            f"wake {wb:6.3f}->{wm:6.3f}s ({sp_w:.2f}x)"
+        )
+        csv.add(f"fig13.{name}.wake", wm * 1e6, f"speedup={sp_w:.2f}")
+    print(f"speedup range {min(speedups):.2f}-{max(speedups):.2f}x "
+          f"(paper: 1.12-2.48x)")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

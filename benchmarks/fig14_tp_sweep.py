@@ -1,0 +1,32 @@
+"""Fig 14 / §6 scope: single-target H2D bandwidth vs relay availability,
+emulating tensor-parallel serving configs TP=1..8 (TP group members are
+busy serving and unavailable as relays).
+
+Paper: TP=1 192.5 GB/s (3.59x), TP=4 156.6 GB/s (2.92x), TP=8 falls back
+to the direct path at 0.94x native.
+"""
+from repro.core import Direction
+from repro.core.config import GB, MB
+
+from .common import CSV, mma_bandwidth, native_bandwidth
+
+# 512 MB transfers (weight shard per GPU at TP>=2 shrinks with TP)
+SIZE = 512 * MB
+
+
+def run(csv: CSV) -> None:
+    print("# Fig 14 — bandwidth vs TP configuration (512 MB)")
+    nat = native_bandwidth(SIZE)
+    for tp in (1, 2, 4, 8):
+        relays = list(range(tp, 8))   # spare GPUs outside the TP group
+        bw = mma_bandwidth(SIZE, Direction.H2D, relays=relays)
+        print(f"TP={tp}: {len(relays)} relays, {bw:6.1f} GB/s "
+              f"({bw / nat:.2f}x native)")
+        csv.add(f"fig14.tp{tp}", 0.0, f"{bw:.1f}")
+    print("paper: TP=1 192.5 (3.59x), TP=4 156.6 (2.92x), TP=8 0.94x")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

@@ -1,0 +1,44 @@
+"""Fig 15: sensitivity to chunk size and outstanding-queue length (512 MB).
+
+Paper: H2D peaks around 2.81 MB chunks, D2H around 5.37 MB; outstanding
+queue length 2 is optimal (1 leaves idle gaps, >2 coarsens balancing).
+"""
+from repro.core import Direction, MMAConfig
+from repro.core.config import MB
+
+from .common import CSV
+
+SIZE = 512 * MB
+CHUNKS = [int(0.5 * MB), 1 * MB, int(2.81 * MB), int(5.37 * MB),
+          11 * MB, 22 * MB, 45 * MB]
+QUEUES = [1, 2, 4, 8]
+
+
+def run(csv: CSV) -> None:
+    from .common import mma_bandwidth
+
+    print("# Fig 15a — bandwidth vs chunk size (queue depth 2)")
+    best = {}
+    for d in (Direction.H2D, Direction.D2H):
+        for c in CHUNKS:
+            bw = mma_bandwidth(SIZE, d, cfg=MMAConfig(chunk_bytes=c))
+            print(f"{d.value} chunk {c / MB:5.2f} MB: {bw:6.1f} GB/s")
+            if bw > best.get(d.value, (0, 0))[1]:
+                best[d.value] = (c, bw)
+        csv.add(f"fig15.best_chunk.{d.value}", 0.0,
+                f"{best[d.value][0] / MB:.2f}MB@{best[d.value][1]:.0f}GB/s")
+    print(f"optima: H2D {best['h2d'][0] / MB:.2f} MB, "
+          f"D2H {best['d2h'][0] / MB:.2f} MB "
+          f"(paper: 2.81 / 5.37 MB)")
+
+    print("# Fig 15b — bandwidth vs outstanding queue length (5 MB chunks)")
+    for q in QUEUES:
+        bw = mma_bandwidth(SIZE, Direction.H2D, cfg=MMAConfig(queue_depth=q))
+        print(f"queue={q}: {bw:6.1f} GB/s")
+        csv.add(f"fig15.queue{q}", 0.0, f"{bw:.1f}")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

@@ -1,0 +1,36 @@
+"""Fig 16: optimal fallback threshold — transfer size below which native
+single-path beats raw multipath (setup overhead dominates).
+
+Paper: break-even at 11.3 MB (H2D) / 13 MB (D2H) with 5 MB chunks, i.e.
+between two and five chunks.
+"""
+from repro.core import Direction, MMAConfig
+from repro.core.config import MB
+
+from .common import CSV, mma_bandwidth, native_bandwidth
+
+
+def run(csv: CSV) -> None:
+    print("# Fig 16 — fallback break-even (5 MB chunks, fallback disabled)")
+    for d in (Direction.H2D, Direction.D2H):
+        breakeven = None
+        for n in range(1, 13):
+            size = n * 5 * MB
+            raw = mma_bandwidth(size, d, cfg=MMAConfig(fallback_bytes=0))
+            nat = native_bandwidth(size, d)
+            marker = ""
+            if breakeven is None and raw > nat:
+                breakeven = size
+                marker = "  <- break-even"
+            print(f"{d.value} {size / MB:5.0f} MB: raw-MMA {raw:6.1f} vs "
+                  f"native {nat:6.1f} GB/s{marker}")
+        be_mb = (breakeven or 0) / MB
+        print(f"{d.value} break-even ~{be_mb:.0f} MB "
+              f"(paper: {'11.3' if d == Direction.H2D else '13'} MB)")
+        csv.add(f"fig16.breakeven.{d.value}", 0.0, f"{be_mb:.0f}MB")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

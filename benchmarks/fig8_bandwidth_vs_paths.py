@@ -1,0 +1,32 @@
+"""Fig 8: MMA bandwidth vs number of participating relay GPUs.
+
+Paper: bandwidth rises with relay count and saturates once ~6 GPUs
+participate (the xGMI inter-socket fabric becomes the residual bottleneck).
+"""
+from repro.core import Direction
+from repro.core.config import GB
+
+from .common import CSV, mma_bandwidth
+
+
+def run(csv: CSV) -> None:
+    print("# Fig 8 — bandwidth vs relay count (1 GB transfers)")
+    prev = None
+    sat_at = None
+    for k in range(8):
+        relays = list(range(1, 1 + k))
+        h2d = mma_bandwidth(1 * GB, Direction.H2D, relays=relays)
+        d2h = mma_bandwidth(1 * GB, Direction.D2H, relays=relays)
+        gain = "" if prev is None else f"(+{h2d - prev:.0f})"
+        print(f"relays={k}: H2D {h2d:6.1f} GB/s {gain:>8}  D2H {d2h:6.1f}")
+        if prev is not None and sat_at is None and h2d - prev < 0.05 * prev:
+            sat_at = k + 1  # GPUs participating = relays + target
+        prev = h2d
+        csv.add(f"fig8.h2d.relays{k}", 0.0, f"{h2d:.1f}")
+    print(f"saturation at ~{sat_at} participating GPUs (paper: 6)")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

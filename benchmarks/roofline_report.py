@@ -1,0 +1,65 @@
+"""Roofline report: reads the dry-run results (dryrun_results.jsonl,
+produced by ``python -m repro.launch.dryrun --all``) and prints the
+per-(arch x shape) roofline-term table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import CSV
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.jsonl")
+
+
+def load(path: str = RESULTS) -> List[Dict]:
+    if not os.path.exists(path):
+        return []
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    # keep the latest entry per (arch, shape, mesh)
+    dedup: Dict = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r.get("mesh"))] = r
+    return list(dedup.values())
+
+
+def run(csv: CSV) -> None:
+    rows = load()
+    if not rows:
+        print("# Roofline — no dryrun_results.jsonl yet; run:")
+        print("#   PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--out dryrun_results.jsonl")
+        return
+    rows = [r for r in rows if r.get("ok")]
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    print("# Roofline terms per (arch x shape), single-pod 16x16 "
+          "(seconds/step, per chip)")
+    print(f"{'arch':28s} {'shape':12s} {'compute':>10} {'memory':>10} "
+          f"{'collect':>10} {'dominant':>10} {'useful':>7}")
+    for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
+        print(
+            f"{r['arch']:28s} {r['shape']:12s} "
+            f"{r['compute_s']:10.4g} {r['memory_s']:10.4g} "
+            f"{r['collective_s']:10.4g} {r['dominant']:>10} "
+            f"{r['flops_ratio']:7.2f}"
+        )
+        csv.add(
+            f"roofline.{r['arch']}.{r['shape']}",
+            r["compute_s"] * 1e6,
+            f"dom={r['dominant']};mem={r['memory_s']:.4g};"
+            f"coll={r['collective_s']:.4g}",
+        )
+    multi = [r for r in rows if r["mesh"] == "2x16x16"]
+    print(f"\nsingle-pod combos OK: {len(single)}; "
+          f"multi-pod combos OK: {len(multi)}")
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure, plus the roofline
+report. Prints ``name,us_per_call,derived`` CSV at the end.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,fig12]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from .common import CSV
+
+MODULES = [
+    ("fig7", "fig7_bandwidth_vs_size"),
+    ("fig8", "fig8_bandwidth_vs_paths"),
+    ("fig9", "fig9_congestion"),
+    ("fig10", "fig10_static_split"),
+    ("fig11", "fig11_cpu_overhead"),
+    ("fig12", "fig12_ttft"),
+    ("fig13", "fig13_sleep_wake"),
+    ("fig14", "fig14_tp_sweep"),
+    ("fig15", "fig15_chunk_queue"),
+    ("fig16", "fig16_fallback"),
+    ("table2", "table2_direct_priority"),
+    ("ablation", "ablation"),
+    ("trace", "trace_serving"),
+    ("tpu_wakeup", "tpu_wakeup"),
+    ("roofline", "roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure keys (e.g. fig7,fig12)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    csv = CSV()
+    t0 = time.monotonic()
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+        print(f"\n{'=' * 72}")
+        t = time.monotonic()
+        try:
+            mod.run(csv)
+        except Exception as e:  # keep the harness running end to end
+            print(f"[{key} FAILED: {type(e).__name__}: {e}]")
+            csv.add(f"{key}.FAILED", 0.0, str(e)[:60])
+            continue
+        print(f"[{key} took {time.monotonic() - t:.1f}s]")
+    print(f"\n{'=' * 72}")
+    print(f"# CSV (name,us_per_call,derived) — total "
+          f"{time.monotonic() - t0:.0f}s")
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""End-to-end training driver: train a ~100M-param llama-family model for
+a few hundred steps on CPU with the full substrate (synthetic data
+pipeline with prefetch, AdamW + cosine schedule, checkpointing through the
+MMA engine, loss curve).
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.training import (
+    AdamWConfig,
+    DataConfig,
+    PrefetchLoader,
+    SyntheticTokenStream,
+    TrainConfig,
+    train,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    # full-size variant of the brief's "~100M params, few hundred steps":
+    #   --hundred-m --steps 300   (several CPU-hours; same code path)
+    ap.add_argument("--hundred-m", action="store_true")
+    args = ap.parse_args()
+
+    # tinyllama family scaled down but real depth (~37M); --hundred-m
+    # gives the brief's ~100M variant (slower on CPU).
+    if args.hundred_m:
+        cfg = dataclasses.replace(
+            get_config("tinyllama-1.1b"),
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+            d_ff=2304, vocab=16384, dtype=jnp.float32,
+        )
+    else:
+        cfg = dataclasses.replace(
+            get_config("tinyllama-1.1b"),
+            n_layers=8, d_model=512, n_heads=8, n_kv_heads=2, head_dim=64,
+            d_ff=1536, vocab=8192, dtype=jnp.float32,
+        )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n / 1e6:.1f}M params, {cfg.n_layers}L d{cfg.d_model}")
+
+    stream = SyntheticTokenStream(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.batch)
+    )
+    loader = PrefetchLoader(stream, depth=2)
+    tc = TrainConfig(
+        steps=args.steps,
+        log_every=max(args.steps // 10, 1),
+        checkpoint_every=max(args.steps // 2, 1),
+        checkpoint_path="/tmp/repro_train_small.npz",
+        remat=False,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+    )
+    _, _, history = train(
+        cfg, params, loader, tc,
+        on_step=lambda s, m: print(
+            f"step {m['step']:4d}  loss {m['loss']:.4f}  "
+            f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  "
+            f"{m['wall_s']:.0f}s"
+        ),
+    )
+    loader.close()
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""MMA-JAX: Multipath Memory Access for LLM serving, reproduced as a
+multi-pod JAX/TPU framework.
+
+Paper: "Multipath Memory Access: Breaking Host-GPU Bandwidth Bottlenecks
+in LLM Serving" (CS.DC 2025). See DESIGN.md / EXPERIMENTS.md.
+
+Subpackages:
+    core         the paper's contribution (transfer engine, scheduler)
+    models       composable transformer stack (dense/MoE/SSM/hybrid/VLM)
+    kernels      Pallas TPU kernels with jnp oracles
+    serving      KV/prefix cache, weight manager, scheduler, orchestrator
+    training     optimizer, loop, data, checkpointing
+    distributed  sharding rules + multipath collective programs
+    configs      the 10 assigned architectures
+    launch       meshes, dry-run, train/serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,19 @@
+"""olmoe-1b-7b [moe]: 16L d_model=2048 16H (kv=16) expert d_ff=1024
+vocab=50304, 64 experts top-8 [arXiv:2409.02060]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab=50_304,
+    n_experts=64,
+    top_k=8,
+    moe_every=1,
+    rope_theta=10_000.0,
+    source="arXiv:2409.02060",
+)

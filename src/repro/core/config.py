@@ -1,0 +1,89 @@
+"""Runtime configuration for the MMA engine.
+
+Mirrors the paper's environment-variable configuration surface (§4):
+relay GPU list, chunk size, fallback (bandwidth) threshold, outstanding
+queue depth, and flow-control mode. All values can be overridden via
+``MMA_*`` environment variables or programmatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Sequence
+
+MB = 1 << 20
+GB = 1 << 30
+
+
+def _env_float(name: str, default: float) -> float:
+    v = os.environ.get(name)
+    return float(v) if v is not None else default
+
+
+def _env_int(name: str, default: int) -> int:
+    v = os.environ.get(name)
+    return int(v) if v is not None else default
+
+
+def _env_str(name: str, default: str) -> str:
+    return os.environ.get(name, default)
+
+
+@dataclasses.dataclass
+class MMAConfig:
+    """Tunables of the Multipath Transfer Engine.
+
+    Defaults follow the paper's sensitivity study (§5.3): chunk size in the
+    low-MB range (H2D optimum ~2.81 MB, D2H ~5.37 MB; 5 MB default buffer),
+    outstanding-queue depth 2, and a fallback threshold of two-to-five
+    chunks (11.3 MB H2D / 13 MB D2H break-even at 5 MB chunks).
+    """
+
+    # Micro-task (chunk) size in bytes.
+    chunk_bytes: int = 5 * MB
+    # Per-link outstanding queue depth (paper: 2 is optimal).
+    queue_depth: int = 2
+    # Transfers below this size fall back to the native single-path copy.
+    fallback_bytes: int = 12 * MB
+    # Explicit relay device list; ``None`` = auto-discover from topology.
+    relay_devices: Optional[Sequence[int]] = None
+    # 'per_gpu' (default) or 'centralized' dispatch (paper §4).
+    flow_control: str = "per_gpu"
+    # Restrict relays to the target's NUMA node (paper §6 latency mode).
+    numa_local_only: bool = False
+    # Direct-path priority (paper §3.4.2; Table 2 ablates it).
+    direct_priority: bool = True
+    # Longest-remaining-destination relay stealing (paper §3.4.2).
+    lrd_stealing: bool = True
+    # Dual-pipeline relay (paper §3.4.3, Fig 6). Number of relay streams
+    # per GPU; 1 = naive single pipeline, 2 = ping-pong dual pipeline.
+    relay_streams: int = 2
+    # Contention backoff: a link whose EWMA chunk service time exceeds
+    # ``backoff_factor`` x its own best-observed (uncontended) service time
+    # only pulls when its queue is empty. The reference is self-calibrating
+    # because PCIe exposes no congestion feedback (paper C3).
+    backoff_factor: float = 2.5
+    backoff_enabled: bool = True
+    # Beyond-paper: EWMA-rate-weighted path selection (see EXPERIMENTS §Perf).
+    score_based_selection: bool = False
+    ewma_alpha: float = 0.3
+
+    @staticmethod
+    def from_env() -> "MMAConfig":
+        cfg = MMAConfig()
+        cfg.chunk_bytes = int(_env_float("MMA_CHUNK_MB", cfg.chunk_bytes / MB) * MB)
+        cfg.queue_depth = _env_int("MMA_QUEUE_DEPTH", cfg.queue_depth)
+        cfg.fallback_bytes = int(
+            _env_float("MMA_FALLBACK_MB", cfg.fallback_bytes / MB) * MB
+        )
+        relays = os.environ.get("MMA_RELAY_GPUS")
+        if relays:
+            cfg.relay_devices = tuple(int(x) for x in relays.split(","))
+        cfg.flow_control = _env_str("MMA_FLOW_CONTROL", cfg.flow_control)
+        cfg.numa_local_only = bool(_env_int("MMA_NUMA_LOCAL", 0))
+        cfg.direct_priority = bool(_env_int("MMA_DIRECT_PRIORITY", 1))
+        cfg.relay_streams = _env_int("MMA_RELAY_STREAMS", cfg.relay_streams)
+        return cfg
+
+    def n_chunks(self, nbytes: int) -> int:
+        return max(1, -(-nbytes // self.chunk_bytes))

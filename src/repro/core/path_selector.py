@@ -1,0 +1,253 @@
+"""Pull-based Path Selector with implicit queue backpressure (paper §3.4.2).
+
+One *outstanding queue* per host link (PCIe path), statically bound to its
+device. Each link's transfer worker pulls micro-tasks from the shared
+destination-tagged micro-task queue whenever its outstanding queue has
+capacity:
+
+  * **Direct priority** — a worker first serves micro-tasks destined for its
+    own device (direct PCIe path, no interconnect hop).
+  * **Longest-remaining-destination stealing** — once its own destination is
+    drained, a worker steals relay work from the destination with the most
+    remaining bytes, maximizing the fraction of data delivered via direct
+    paths across all GPUs.
+  * **Backpressure** — slow paths keep their outstanding queues full and
+    stop pulling; fast paths drain and pull more. No explicit link-state
+    feedback is used.
+  * **Contention backoff** — a worker whose observed chunk service time
+    exceeds ``backoff_factor`` x nominal pulls only when its queue is empty,
+    yielding to latency-sensitive background traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, TYPE_CHECKING
+
+from .config import MMAConfig
+from .topology import Topology
+from .transfer_task import MicroTask, MicroTaskQueue
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .task_launcher import Backend
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """Physical route for one micro-task: which host link carries it and,
+    if that link is not the destination's, which device relays."""
+
+    link_dev: int          # device whose host (PCIe) link is used
+    dest: int              # final destination device
+
+    @property
+    def is_direct(self) -> bool:
+        return self.link_dev == self.dest
+
+
+class LinkWorker:
+    """Transfer worker for one host link (the paper's per-GPU transfer
+    thread, §4). Holds the outstanding queue and the EWMA service-time
+    monitor (the paper's monitor thread)."""
+
+    def __init__(
+        self,
+        dev: int,
+        selector: "PathSelector",
+        backend: "Backend",
+        config: MMAConfig,
+        nominal_rate_gbps: float,
+    ) -> None:
+        self.dev = dev
+        self.selector = selector
+        self.backend = backend
+        self.config = config
+        self.outstanding = 0
+        self.nominal_rate = nominal_rate_gbps * (1 << 30)
+        self.ewma_service: Optional[float] = None   # sec/byte
+        # Best (fastest) observed per-byte service time — the worker's
+        # self-calibrated uncontended reference (PCIe exposes no explicit
+        # congestion signal, so the only baseline is our own history).
+        self.best_service: Optional[float] = None
+        self.contended = False
+        self.enabled = True
+        # stats
+        self.chunks_direct = 0
+        self.chunks_relay = 0
+        self.bytes_total = 0
+
+    # -- backpressure: effective pull capacity ---------------------------
+    def _capacity(self) -> int:
+        if not self.enabled:
+            return 0
+        if self.contended and self.config.backoff_enabled:
+            # Back off: only pull when the queue fully drains (paper §3.4.2,
+            # "waits until the queue depth drops below a threshold").
+            return 1 if self.outstanding == 0 else 0
+        return self.config.queue_depth - self.outstanding
+
+    def maybe_pull(self, direct_only: bool = False) -> None:
+        while self._capacity() > 0:
+            picked = self.selector.select(self, direct_only=direct_only)
+            if picked is None:
+                return
+            mt, route = picked
+            self.outstanding += 1
+            if route.is_direct:
+                self.chunks_direct += 1
+            else:
+                self.chunks_relay += 1
+            self.bytes_total += mt.nbytes
+            t0 = self.backend.now()
+            self.backend.launch(
+                mt, route, lambda mt=mt, t0=t0: self._on_chunk_done(mt, t0)
+            )
+
+    def _on_chunk_done(self, mt: MicroTask, t0: float) -> None:
+        self.outstanding -= 1
+        dt = self.backend.now() - t0
+        if dt > 0 and mt.nbytes > 0:
+            per_byte = dt / mt.nbytes
+            a = self.config.ewma_alpha
+            self.ewma_service = (
+                per_byte
+                if self.ewma_service is None
+                else a * per_byte + (1 - a) * self.ewma_service
+            )
+            if self.best_service is None or per_byte < self.best_service:
+                self.best_service = per_byte
+            self.contended = (
+                self.ewma_service
+                > self.config.backoff_factor * self.best_service
+            )
+        self.selector.task_manager.micro_task_done(mt, self.backend.now())
+        self.maybe_pull()
+        # A completed chunk may have freed shared-link capacity others wait
+        # on; give every worker a pull opportunity.
+        self.selector.kick_all()
+
+    def observed_rate_gbps(self) -> float:
+        if not self.ewma_service:
+            return self.nominal_rate / (1 << 30)
+        return 1.0 / self.ewma_service / (1 << 30)
+
+
+class PathSelector:
+    """Moves micro-tasks from the micro-task queue into per-link outstanding
+    queues (paper Fig 5)."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        config: MMAConfig,
+        task_manager,
+    ) -> None:
+        self.topology = topology
+        self.config = config
+        self.task_manager = task_manager
+        self.queue: MicroTaskQueue = task_manager.queue
+        self.workers: Dict[int, LinkWorker] = {}
+        self._kicking = False
+
+    def register_worker(self, worker: LinkWorker) -> None:
+        self.workers[worker.dev] = worker
+
+    # ------------------------------------------------------------------
+    def _may_relay_for(self, relay_dev: int, dest: int) -> bool:
+        if relay_dev == dest:
+            return True
+        if self.config.relay_devices is not None:
+            if relay_dev not in self.config.relay_devices:
+                return False
+        if self.config.numa_local_only:
+            if not self.topology.same_numa(relay_dev, dest):
+                return False
+        return True
+
+    def select(self, worker: LinkWorker, direct_only: bool = False):
+        """Pick the next micro-task for ``worker``'s link, or None.
+
+        Returns (micro_task, route).
+        """
+        dev = worker.dev
+        # 1. Direct priority: serve our own destination first.
+        if self.config.direct_priority or direct_only:
+            mt = self.queue.pop_for_dest(dev)
+            if mt is not None:
+                return mt, Route(link_dev=dev, dest=dev)
+        if direct_only:
+            return None
+
+        # 2. Relay stealing.
+        dest = self._pick_relay_dest(worker)
+        if dest is not None:
+            mt = self.queue.pop_for_dest(dest)
+            if mt is not None:
+                return mt, Route(link_dev=dev, dest=dest)
+
+        # 3. Without direct priority, fall back to any pending destination
+        #    (including our own) — ablation mode for Table 2.
+        if not self.config.direct_priority:
+            dest = self.queue.any_dest()
+            if dest is not None and self._may_relay_for(dev, dest):
+                mt = self.queue.pop_for_dest(dest)
+                if mt is not None:
+                    return mt, Route(link_dev=dev, dest=dest)
+        return None
+
+    def _pick_relay_dest(self, worker: LinkWorker) -> Optional[int]:
+        dev = worker.dev
+        if self.config.lrd_stealing:
+            # Longest-remaining-destination among destinations we may serve.
+            best, best_bytes = None, 0
+            for dest in list(self.workers) + [
+                d for d in self.queue._by_dest if d not in self.workers
+            ]:
+                if dest == dev or not self._may_relay_for(dev, dest):
+                    continue
+                b = self.queue.remaining_bytes(dest)
+                if b > best_bytes:
+                    best, best_bytes = dest, b
+            return best
+        dest = self.queue.any_dest()
+        if dest is not None and dest != dev and self._may_relay_for(dev, dest):
+            return dest
+        return None
+
+    def _worker_order(self):
+        """Pull order across workers. Per-GPU mode (paper default):
+        registration order — each transfer thread drives its own link.
+        Centralized mode (paper §4): one dispatcher serves the least-loaded
+        link first, then by best observed rate (beyond-paper tiebreak when
+        score_based_selection is on)."""
+        ws = list(self.workers.values())
+        if self.config.flow_control != "centralized":
+            return ws
+        if self.config.score_based_selection:
+            return sorted(
+                ws, key=lambda w: (w.outstanding, -w.observed_rate_gbps())
+            )
+        return sorted(ws, key=lambda w: w.outstanding)
+
+    # ------------------------------------------------------------------
+    def kick_all(self) -> None:
+        """Give every worker a chance to pull (new work or freed capacity).
+
+        Re-entrancy guard: a pull can complete synchronously in the
+        functional backend and recurse into kick_all.
+        """
+        if self._kicking:
+            return
+        self._kicking = True
+        try:
+            # Two-phase: direct pulls first so a synchronously-completing
+            # backend cannot let one relay worker drain the queue before
+            # the destination's own link gets its direct-priority chance.
+            # (Skipped when direct priority is ablated — Table 2.)
+            order = self._worker_order()
+            if self.config.direct_priority:
+                for w in order:
+                    w.maybe_pull(direct_only=True)
+            for w in order:
+                w.maybe_pull()
+        finally:
+            self._kicking = False

@@ -1,0 +1,271 @@
+"""Discrete-event intra-server link simulator.
+
+This container has no PCIe/NVLink hardware, so link *physics* (bandwidth,
+queueing, contention, per-chunk overhead, NUMA/xGMI caps) is simulated; the
+MMA scheduler (path selector, outstanding queues, backpressure, sync engine)
+is the real production code executing against this virtual clock. Each link
+is a FIFO server with a service rate; a chunk's journey over a multi-hop
+path is a tandem queue, which reproduces pipelining (a chunk can occupy the
+NVLink hop while the next occupies the PCIe hop) and emergent fair sharing
+(two flows interleaving chunks on one link each get ~half).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+GB = 1 << 30
+
+
+class SimWorld:
+    """Virtual clock + event heap."""
+
+    def __init__(self) -> None:
+        self.now: float = 0.0
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + dt, fn)
+
+    def run(self, until: Optional[float] = None) -> None:
+        while self._heap:
+            t, _, fn = self._heap[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        if until is not None and self.now < until:
+            self.now = until
+
+    def idle(self) -> bool:
+        return not self._heap
+
+
+@dataclasses.dataclass
+class Completion:
+    """One chunk service completion on a link (for bandwidth timelines)."""
+
+    time: float
+    nbytes: int
+    tag: str
+
+
+class Grant:
+    """Handle for a link slot held by an in-service or held chunk."""
+
+    def __init__(self, link: "SimLink") -> None:
+        self.link = link
+        self.released = False
+
+    def release(self) -> None:
+        if not self.released:
+            self.released = True
+            self.link._slot_freed()
+
+
+class SimLink:
+    """A FIFO bandwidth server (one PCIe direction, NVLink port, DRAM
+    channel group, or the inter-socket fabric).
+
+    ``slots`` parallel service channels model multiple DMA engines sharing
+    the link's aggregate rate: each channel serves at ``rate / slots``, so
+    total capacity is conserved regardless of concurrency.
+    ``submit`` enqueues a chunk; when a slot frees, service takes
+    ``nbytes / (rate / slots * efficiency)`` seconds, after which
+    ``on_done`` fires.
+    If ``hold=True`` the slot is NOT auto-freed at service end — the caller
+    must release the returned Grant (used to model the naive single-pipeline
+    relay, where the PCIe stage stays blocked during the NVLink stage).
+    """
+
+    def __init__(
+        self,
+        world: SimWorld,
+        name: str,
+        rate_gbps: float,
+        slots: int = 1,
+    ) -> None:
+        self.world = world
+        self.name = name
+        self.rate = rate_gbps * GB  # bytes/s
+        self.slots = slots
+        self._busy = 0
+        self._queue: Deque[Tuple[int, float, Callable[[Grant], None], bool, str]] = (
+            deque()
+        )
+        # stats
+        self.bytes_done = 0
+        self.busy_time = 0.0
+        self.completions: List[Completion] = []
+        self.record_completions = False
+
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        nbytes: int,
+        on_done: Callable[[Grant], None],
+        efficiency: float = 1.0,
+        hold: bool = False,
+        tag: str = "",
+    ) -> None:
+        self._queue.append((nbytes, efficiency, on_done, hold, tag))
+        self._try_start()
+
+    def queue_depth(self) -> int:
+        return len(self._queue) + self._busy
+
+    def _try_start(self) -> None:
+        while self._busy < self.slots and self._queue:
+            nbytes, eff, on_done, hold, tag = self._queue.popleft()
+            self._busy += 1
+            per_slot_rate = self.rate / self.slots
+            dt = nbytes / (per_slot_rate * eff) if self.rate > 0 else 0.0
+            grant = Grant(self)
+
+            def finish(nbytes=nbytes, dt=dt, on_done=on_done, hold=hold,
+                       grant=grant, tag=tag) -> None:
+                self.bytes_done += nbytes
+                self.busy_time += dt
+                if self.record_completions:
+                    self.completions.append(
+                        Completion(self.world.now, nbytes, tag)
+                    )
+                if not hold:
+                    grant.release()
+                on_done(grant)
+
+            self.world.after(dt, finish)
+
+    def _slot_freed(self) -> None:
+        self._busy -= 1
+        self._try_start()
+
+    # ------------------------------------------------------------------
+    def throughput_gbps(self, t0: float, t1: float) -> float:
+        """Observed throughput over [t0, t1] from recorded completions."""
+        b = sum(c.nbytes for c in self.completions if t0 <= c.time < t1)
+        return b / max(t1 - t0, 1e-12) / GB
+
+
+def submit_path(
+    world: SimWorld,
+    stages: List[Tuple[SimLink, float]],
+    nbytes: int,
+    on_done: Callable[[], None],
+    initial_delay: float = 0.0,
+    pipelined: bool = True,
+    hold_from: int = 0,
+    tag: str = "",
+) -> None:
+    """Send one chunk through a tandem of ``(link, efficiency)`` stages.
+
+    ``pipelined=False`` models the naive single-pipeline relay (paper
+    Fig 6a): stage slots from index ``hold_from`` onward are held until the
+    final stage completes, so the PCIe and NVLink hops of one chunk cannot
+    overlap with each other's successors. (Host-side stages before
+    ``hold_from`` — DRAM, xGMI — are never held: the relay GPU's internal
+    pipelining is what Fig 6 is about.)
+    """
+
+    held: List[Grant] = []
+
+    def start_stage(i: int) -> None:
+        if i == len(stages):
+            for g in held:
+                g.release()
+            on_done()
+            return
+        link, eff = stages[i]
+        hold = (not pipelined) and hold_from <= i < len(stages) - 1
+
+        def next_stage(grant: Grant) -> None:
+            if hold:
+                held.append(grant)
+            start_stage(i + 1)
+
+        link.submit(nbytes, next_stage, efficiency=eff, hold=hold, tag=tag)
+
+    if initial_delay > 0:
+        world.after(initial_delay, lambda: start_stage(0))
+    else:
+        start_stage(0)
+
+
+class FlowRecorder:
+    """Windowed bandwidth timeline for one logical flow (Fig 9)."""
+
+    def __init__(self, world: SimWorld) -> None:
+        self.world = world
+        self.events: List[Tuple[float, int]] = []
+
+    def record(self, nbytes: int) -> None:
+        self.events.append((self.world.now, nbytes))
+
+    def total_bytes(self) -> int:
+        return sum(n for _, n in self.events)
+
+    def timeline(self, window: float, t_end: Optional[float] = None):
+        """Return [(t_mid, GB/s), ...] over fixed windows."""
+        if not self.events:
+            return []
+        end = t_end if t_end is not None else self.events[-1][0]
+        out = []
+        t = 0.0
+        i = 0
+        while t < end:
+            b = 0
+            while i < len(self.events) and self.events[i][0] < t + window:
+                b += self.events[i][1]
+                i += 1
+            out.append((t + window / 2, b / window / GB))
+            t += window
+        return out
+
+
+class BackgroundFlow:
+    """Chunked native traffic pinned to a fixed path (Fig 9a/10 congestor).
+
+    Keeps ``depth`` chunks outstanding on the given stages from ``t_start``
+    until ``total_bytes`` have moved (or forever if None).
+    """
+
+    def __init__(
+        self,
+        world: SimWorld,
+        stages: List[Tuple[SimLink, float]],
+        chunk_bytes: int = 8 << 20,
+        t_start: float = 0.0,
+        t_stop: Optional[float] = None,
+        depth: int = 2,
+        tag: str = "bg",
+    ) -> None:
+        self.world = world
+        self.stages = stages
+        self.chunk = chunk_bytes
+        self.t_stop = t_stop
+        self.recorder = FlowRecorder(world)
+        self.tag = tag
+        self._depth = depth
+        world.at(t_start, self._kick)
+
+    def _kick(self) -> None:
+        for _ in range(self._depth):
+            self._launch()
+
+    def _launch(self) -> None:
+        if self.t_stop is not None and self.world.now >= self.t_stop:
+            return
+
+        def done() -> None:
+            self.recorder.record(self.chunk)
+            self._launch()
+
+        submit_path(self.world, self.stages, self.chunk, done, tag=self.tag)

@@ -1,0 +1,186 @@
+"""Transfer Tasks and micro-tasks (paper §3.2, §3.4.1).
+
+A *Transfer Task* records one intercepted host<->device copy. The *Task
+Manager* divides it into fixed-size *micro-tasks* (chunks), each tagged with
+its destination device, and tracks distributed completion: the original
+transfer is complete only when every micro-task has landed, at which point
+the Sync Engine is notified (releasing the stream-visible Dummy Task for
+asynchronous copies, or waking the blocked caller for synchronous ones).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+from .config import MMAConfig
+
+
+class Direction(enum.Enum):
+    H2D = "h2d"
+    D2H = "d2h"
+
+
+class TaskState(enum.Enum):
+    RECORDED = "recorded"      # intercepted, awaiting stream activation
+    ACTIVE = "active"          # copy point reached; dispatch enabled
+    COMPLETE = "complete"
+
+
+_task_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class TransferTask:
+    """One logical host<->device copy intercepted by MMA."""
+
+    nbytes: int
+    target: int                      # destination (H2D) / source (D2H) device
+    direction: Direction
+    sync: bool = False               # blocking (cudaMemcpy) vs async
+    task_id: int = dataclasses.field(default_factory=lambda: next(_task_ids))
+    state: TaskState = TaskState.RECORDED
+    # Host/device payload handles — opaque to the scheduler; the functional
+    # backend stores (array, offset) views here.
+    src: object = None
+    dst: object = None
+    on_complete: Optional[Callable[["TransferTask"], None]] = None
+    # Filled by the engine:
+    submit_time: float = 0.0
+    complete_time: float = 0.0
+
+    @property
+    def elapsed(self) -> float:
+        return self.complete_time - self.submit_time
+
+    def bandwidth_gbps(self) -> float:
+        if self.elapsed <= 0:
+            return float("inf")
+        return self.nbytes / self.elapsed / (1 << 30)
+
+
+@dataclasses.dataclass
+class MicroTask:
+    """A fixed-size fragment of a TransferTask (paper Fig 5).
+
+    ``dest`` is the destination-GPU tag the Path Selector keys on ("color"
+    in the paper's figure).
+    """
+
+    parent: TransferTask
+    offset: int
+    nbytes: int
+    seq: int
+
+    @property
+    def dest(self) -> int:
+        return self.parent.target
+
+    @property
+    def direction(self) -> Direction:
+        return self.parent.direction
+
+
+class MicroTaskQueue:
+    """Destination-tagged micro-task queue (paper §3.4.1).
+
+    Organized per destination so the Path Selector can (a) serve a link's
+    own destination first (direct priority) and (b) steal relay work from
+    the destination with the most remaining data (longest-remaining-
+    destination policy).
+    """
+
+    def __init__(self) -> None:
+        self._by_dest: Dict[int, Deque[MicroTask]] = {}
+        self._remaining_bytes: Dict[int, int] = {}
+
+    def push(self, mt: MicroTask) -> None:
+        self._by_dest.setdefault(mt.dest, deque()).append(mt)
+        self._remaining_bytes[mt.dest] = (
+            self._remaining_bytes.get(mt.dest, 0) + mt.nbytes
+        )
+
+    def pop_for_dest(self, dest: int) -> Optional[MicroTask]:
+        q = self._by_dest.get(dest)
+        if not q:
+            return None
+        mt = q.popleft()
+        self._remaining_bytes[dest] -= mt.nbytes
+        return mt
+
+    def remaining_bytes(self, dest: int) -> int:
+        return self._remaining_bytes.get(dest, 0)
+
+    def longest_remaining_dest(self, exclude: int) -> Optional[int]:
+        """Destination with the most pending bytes, excluding ``exclude``."""
+        best, best_bytes = None, 0
+        for dest, q in self._by_dest.items():
+            if dest == exclude or not q:
+                continue
+            b = self._remaining_bytes[dest]
+            if b > best_bytes:
+                best, best_bytes = dest, b
+        return best
+
+    def any_dest(self) -> Optional[int]:
+        for dest, q in self._by_dest.items():
+            if q:
+                return dest
+        return None
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._by_dest.values())
+
+    def is_empty(self) -> bool:
+        return len(self) == 0
+
+
+class TaskManager:
+    """Splits transfers into micro-tasks and tracks distributed completion
+    (paper §3.4.1)."""
+
+    def __init__(self, config: MMAConfig) -> None:
+        self.config = config
+        self.queue = MicroTaskQueue()
+        self._outstanding: Dict[int, int] = {}   # task_id -> incomplete chunks
+        self._tasks: Dict[int, TransferTask] = {}
+        self._completion_cbs: List[Callable[[TransferTask], None]] = []
+
+    def add_completion_listener(self, cb: Callable[[TransferTask], None]) -> None:
+        self._completion_cbs.append(cb)
+
+    def split(self, task: TransferTask) -> List[MicroTask]:
+        """Divide ``task`` into chunk-sized micro-tasks and enqueue them."""
+        chunk = self.config.chunk_bytes
+        micro: List[MicroTask] = []
+        off = 0
+        seq = 0
+        while off < task.nbytes:
+            n = min(chunk, task.nbytes - off)
+            micro.append(MicroTask(parent=task, offset=off, nbytes=n, seq=seq))
+            off += n
+            seq += 1
+        self._outstanding[task.task_id] = len(micro)
+        self._tasks[task.task_id] = task
+        for mt in micro:
+            self.queue.push(mt)
+        return micro
+
+    def micro_task_done(self, mt: MicroTask, now: float) -> None:
+        """Called by the Task Launcher when a micro-task's last hop lands."""
+        tid = mt.parent.task_id
+        self._outstanding[tid] -= 1
+        if self._outstanding[tid] == 0:
+            task = self._tasks.pop(tid)
+            del self._outstanding[tid]
+            task.state = TaskState.COMPLETE
+            task.complete_time = now
+            for cb in self._completion_cbs:
+                cb(task)
+            if task.on_complete is not None:
+                task.on_complete(task)
+
+    def pending_transfers(self) -> int:
+        return len(self._tasks)

@@ -1,0 +1,14 @@
+"""Distribution layer: sharding rules + multipath collective programs."""
+from .mma_collectives import (
+    make_kv_fetch_step,
+    make_wakeup_step,
+    staging_shardings,
+)
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    data_pspec,
+    param_pspec,
+    params_shardings,
+    replicated,
+)

@@ -1,0 +1,87 @@
+"""MMA on the pod fabric: multipath weight distribution / KV fetch as
+jit-able collective programs.
+
+The paper's relay insight — land chunks on every host's local links in
+parallel, then forward over the accelerator interconnect — is expressed in
+JAX as a resharding program: weights enter host-chunked (every host's PCIe
+path carries 1/N of the payload into its local chips' HBM) and an
+all-gather/collective-permute schedule over ICI assembles the serving
+layout. ``wakeup_step`` lowers exactly this; the dry-run counts its
+collective bytes, and the sim engine provides the PCIe-stage timing.
+
+This is the TPU-native generalization recorded in DESIGN.md §2.1: on an
+8-GPU server the relay set is 7 peers; on a pod it is every chip's host
+link, and the "NVLink hop" becomes the compiled ICI schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import batch_axes, params_shardings
+
+
+def staging_shardings(abstract_params: Any, mesh: Mesh):
+    """Ingest layout: every parameter chunked over ALL mesh axes on its
+    largest dimension — each chip's host link lands an equal slice
+    (the multipath ingest), regardless of the serving layout."""
+    axes = tuple(mesh.axis_names)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return NamedSharding(mesh, P())
+        total = mesh.devices.size
+        # chunk the largest divisible dim over all axes
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % total == 0:
+                s = [None] * len(shape)
+                s[i] = axes
+                return NamedSharding(mesh, P(*s))
+        # fall back: replicate (tiny tensors below chip count)
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec, abstract_params)
+
+
+def make_wakeup_step(cfg, mesh: Mesh):
+    """jit'd resharding program: host-chunked staging -> serving layout.
+
+    Returns (fn, staging_shardings, serving_shardings). Lower with
+    abstract params to count the ICI collective schedule; run with real
+    arrays to perform an actual multipath wake-up.
+    """
+    from ..models.init import abstract_params
+
+    aparams = abstract_params(cfg)
+    stage_sh = staging_shardings(aparams, mesh)
+    serve_sh = params_shardings(aparams, mesh)
+
+    def wakeup(params):
+        # identity math; the resharding IS the program
+        return params
+
+    fn = jax.jit(wakeup, in_shardings=(stage_sh,), out_shardings=serve_sh)
+    return fn, stage_sh, serve_sh
+
+
+def make_kv_fetch_step(cfg, mesh: Mesh, batch: int, seq: int, window: int = 0):
+    """Host-pool KV pages enter chunked over all chips; the program
+    reshards them into the decode cache layout."""
+    from ..models.transformer import init_caches
+    from .sharding import cache_shardings
+
+    caches = jax.eval_shape(lambda: init_caches(cfg, batch, seq, window))
+    stage_sh = staging_shardings(caches, mesh)
+    serve_sh = cache_shardings(caches, mesh)
+
+    def fetch(caches):
+        return caches
+
+    fn = jax.jit(fetch, in_shardings=(stage_sh,), out_shardings=serve_sh)
+    return fn, caches, stage_sh, serve_sh

@@ -1,0 +1,265 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per
+architecture for the production meshes.
+
+Megatron-style 2D(+pod) layout:
+  * weights tensor-parallel over ``model`` (attention head projections,
+    MLP hidden dim, MoE expert dim, Mamba inner dim), replicated over
+    ``data``/``pod``;
+  * batch sharded over (``pod``, ``data``);
+  * decode KV caches shard batch over (pod, data) when divisible, else the
+    sequence axis over ``data`` (long_500k batch=1);
+  * optimizer moments follow their parameter (ZeRO-1 over ``data`` is a
+    perf-pass option, see EXPERIMENTS.md §Perf).
+
+Every rule is divisibility-guarded: a dim that doesn't divide the mesh
+axis stays replicated (e.g. yi-34b's 56 heads on a 16-way model axis shard
+on the flattened head*head_dim projection instead; mamba2's 50280 vocab
+embedding stays replicated).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _guard(mesh: Mesh, shape: Tuple[int, ...], spec: Tuple) -> P:
+    """Drop spec entries whose mesh-axis size doesn't divide the dim."""
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        if dim % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+BATCH_AXES = ("pod", "data")
+
+# Perf-pass options (EXPERIMENTS.md §Perf). Baseline = all False; the
+# dry-run CLI toggles them per hillclimb run so paper-faithful and
+# optimized lowering are recorded separately.
+OPT: Dict[str, bool] = {
+    # decode KV layout: when kv_heads don't divide the model axis (GQA on
+    # wide TP), shard the cache SEQUENCE axis over `model` instead of
+    # replicating the whole cache 16x per chip.
+    "kv_seq_shard": False,
+    # ZeRO-1: shard optimizer moments over the data axis.
+    "zero1": False,
+    # donate decode caches (in-place update instead of copy-on-write).
+    "donate_caches": False,
+    # remat policy that saves matmul outputs (avoids recomputing the TP
+    # collectives feeding them in the backward pass).
+    "remat_dots": False,
+    # expert-parallel MoE via shard_map all-to-all (models/moe_ep.py).
+    "moe_ep": False,
+}
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+# name -> spec for the *unstacked* layer shape; block leaves get a leading
+# None for the scan-stacked n_periods axis.
+_COL = "model"      # output-dim sharded (column parallel)
+
+_PARAM_RULES: Dict[str, Tuple] = {
+    # top level
+    "embedding": ("model", None),
+    "head": (None, "model"),
+    "ln_f": (None,),
+    # attention
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "wk_cross": (None, "model"),
+    "wv_cross": (None, "model"),
+    "wo": ("model", None),
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    # mlp
+    "w_gate": (None, "model"),       # moe variant handled by ndim below
+    "w_up": (None, "model"),
+    "w_down": ("model", None),
+    "router": (None, None),
+    # mamba
+    "w_z": (None, "model"),
+    "w_x": (None, "model"),
+    "w_B": (None, None),
+    "w_C": (None, None),
+    "w_dt": (None, "model"),
+    "conv_x_w": (None, "model"),
+    "conv_x_b": ("model",),
+    "conv_B_w": (None, None),
+    "conv_B_b": (None,),
+    "conv_C_w": (None, None),
+    "conv_C_b": (None,),
+    "dt_bias": ("model",),
+    "A_log": ("model",),
+    "D": ("model",),
+    "norm": ("model",),
+    "w_out": ("model", None),
+    # norms
+    "ln1": (None,),
+    "ln2": (None,),
+}
+
+# MoE expert tensors: (E, d, f) / (E, f, d) -> expert parallel over model
+_MOE_RULES: Dict[str, Tuple] = {
+    "w_gate": ("model", None, None),
+    "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+    return ""
+
+
+def param_pspec(path, leaf, mesh: Mesh) -> P:
+    name = _leaf_name(path)
+    shape = tuple(leaf.shape)
+    in_blocks = any(
+        getattr(p, "key", None) == "blocks" for p in path
+    )
+    base_rank = len(shape) - (1 if in_blocks else 0)
+    rules = _PARAM_RULES
+    if name in _MOE_RULES and base_rank == 3:
+        spec = _MOE_RULES[name]
+    elif name in rules:
+        spec = rules[name]
+        if len(spec) != base_rank:
+            spec = tuple(
+                list(spec) + [None] * (base_rank - len(spec))
+            )[:base_rank]
+    else:
+        spec = (None,) * base_rank
+    if in_blocks:
+        spec = (None,) + tuple(spec)
+    return _guard(mesh, shape, spec)
+
+
+def params_shardings(abstract_params: Any, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh)),
+        abstract_params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batches / activations
+# ---------------------------------------------------------------------------
+def data_pspec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard the leading (batch) axis over (pod, data) when divisible."""
+    if not shape:
+        return P()
+    ba = batch_axes(mesh)
+    spec = [ba if ba else None] + [None] * (len(shape) - 1)
+    return _guard(mesh, shape, tuple(spec))
+
+
+def batch_shardings(batch_tree: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, data_pspec(tuple(leaf.shape), mesh)),
+        batch_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+def cache_pspec(path, leaf, mesh: Mesh) -> P:
+    """Caches carry a leading n_periods axis.
+
+    KV tensors (np, B, T, G, D): batch over (pod,data) if divisible, else
+    sequence T over data (the long-context fallback); KV heads over model
+    when divisible.
+    SSM states   (np, B, h, p, n) / conv (np, B, w, ch): batch over
+    (pod,data), heads/channels over model.
+    """
+    name = _leaf_name(path)
+    shape = tuple(leaf.shape)
+    ba = batch_axes(mesh)
+    # leaves may or may not carry the leading n_periods axis (full stack vs
+    # standalone super-block body)
+    if name in ("k", "v") and len(shape) in (4, 5):
+        stacked = len(shape) == 5
+        B = shape[1] if stacked else shape[0]
+        G = shape[3] if stacked else shape[2]
+        lead = (None,) if stacked else ()
+        heads_shardable = G % _axis_size(mesh, "model") == 0
+        if OPT["kv_seq_shard"] and not heads_shardable:
+            # GQA KV heads can't split the model axis: put the sequence
+            # there instead of replicating the cache across it.
+            if ba and B % _axis_size(mesh, ba) == 0:
+                return _guard(mesh, shape, lead + (ba, "model", None, None))
+            return _guard(
+                mesh, shape, lead + (None, ("data", "model"), None, None)
+            )
+        if ba and B % _axis_size(mesh, ba) == 0:
+            return _guard(mesh, shape, lead + (ba, None, "model", None))
+        return _guard(mesh, shape, lead + (None, "data", "model", None))
+    if name == "ssm" and len(shape) in (4, 5):
+        lead = (None,) if len(shape) == 5 else ()
+        return _guard(mesh, shape, lead + (ba, "model", None, None))
+    if name.startswith("conv") and len(shape) in (3, 4):
+        lead = (None,) if len(shape) == 4 else ()
+        return _guard(mesh, shape, lead + (ba, None, "model"))
+    # fallback: batch on axis 1 (stacked) / axis 0
+    spec = [None] * len(shape)
+    if len(shape) >= 2:
+        spec[1] = ba
+    return _guard(mesh, shape, tuple(spec))
+
+
+def cache_shardings(cache_tree: Any, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_pspec(path, leaf, mesh)),
+        cache_tree,
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def zero1_shardings(tree: Any, mesh: Mesh):
+    """ZeRO-1 optimizer-moment layout: the parameter's own spec plus a
+    ``data``-axis split on the first still-replicated divisible dimension
+    (moments are only touched at the update, so the extra gather cost is
+    one reduce-scatter/all-gather pair per step while memory drops ~16x)."""
+
+    def spec(path, leaf):
+        base = param_pspec(path, leaf, mesh)
+        entries = list(base) + [None] * (len(leaf.shape) - len(base))
+        dsz = _axis_size(mesh, "data")
+        for i, (dim, e) in enumerate(zip(leaf.shape, entries)):
+            if e is None and dim % dsz == 0 and dim >= dsz:
+                entries[i] = "data"
+                break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(spec, tree)

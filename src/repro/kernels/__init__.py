@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the performance-critical compute layers, each
+with a pure-jnp ref.py oracle and a jit'd ops.py wrapper. Validated in
+interpret mode on CPU; BlockSpecs target TPU VMEM/MXU tiling."""
+from .decode_attention import decode_attention, decode_attention_op
+from .flash_attention import flash_attention, flash_attention_op
+from .relay_copy import relay_assemble, relay_assemble_op
+from .ssd_chunk import ssd_chunk, ssd_op

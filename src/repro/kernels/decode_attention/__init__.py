@@ -1,0 +1,3 @@
+from .decode_attention import decode_attention
+from .ops import decode_attention_op
+from .ref import decode_attention_ref

@@ -1,0 +1,30 @@
+"""Oracle for flash-decode: single-query GQA attention against a KV cache
+with a valid-length mask."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jax.Array,          # (B, H, D) — one new token per sequence
+    k: jax.Array,          # (B, G, T, D) KV cache (possibly padded)
+    v: jax.Array,          # (B, G, T, D)
+    kv_len: jax.Array,     # scalar or (B,) — valid cache entries
+) -> jax.Array:
+    B, H, D = q.shape
+    G, T = k.shape[1], k.shape[2]
+    R = H // G
+    qg = q.reshape(B, G, R, D)
+    s = jnp.einsum("bgrd,bgtd->bgrt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    kv_len = jnp.asarray(kv_len)
+    valid = jnp.arange(T)[None] < (
+        kv_len[:, None] if kv_len.ndim else kv_len[None, None]
+    )
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrt,bgtd->bgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .flash_attention import flash_attention
+from .ops import flash_attention_op
+from .ref import flash_attention_ref

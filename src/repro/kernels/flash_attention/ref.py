@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel: causal (optionally
+sliding-window) GQA attention over (B, H, S, D) query layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,        # (B, H, Sq, D)
+    k: jax.Array,        # (B, G, T, D)
+    v: jax.Array,        # (B, G, T, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    G, T = k.shape[1], k.shape[2]
+    R = H // G
+    qg = q.reshape(B, G, R, Sq, D)
+    s = jnp.einsum("bgrsd,bgtd->bgrst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    q_idx = jnp.arange(Sq) + q_offset
+    k_idx = jnp.arange(T)
+    mask = jnp.ones((Sq, T), bool)
+    if causal:
+        mask &= k_idx[None, :] <= q_idx[:, None]
+    if window:
+        mask &= k_idx[None, :] > q_idx[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrst,bgtd->bgrsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

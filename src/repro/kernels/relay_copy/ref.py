@@ -1,0 +1,13 @@
+"""Oracle for relay-copy assembly: permutation gather of landed chunks
+into a contiguous payload."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def relay_assemble_ref(staged: jax.Array, perm: jax.Array) -> jax.Array:
+    """staged: (n_chunks, chunk_elems) rows in landing order;
+    perm[i] = row of ``staged`` holding logical chunk i.
+    Returns (n_chunks, chunk_elems) in logical order."""
+    return staged[perm]

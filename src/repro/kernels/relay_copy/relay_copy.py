@@ -1,0 +1,49 @@
+"""Relay-copy Pallas TPU kernel: streaming assembly of multipath chunks.
+
+TPU adaptation of the paper's dual-pipeline relay (Fig 6): on H20 two
+relay streams ping-pong so the PCIe hop of chunk i+1 overlaps the NVLink
+hop of chunk i. On TPU the same overlap is exactly what a Pallas grid
+pipeline provides: with a (n_chunks,) grid, the DMA bringing block i+1
+HBM->VMEM runs while block i is being written out — hardware double
+buffering with zero manual orchestration.
+
+Micro-tasks land out of logical order (whichever path drains first), so
+assembly is a permutation gather: the landing-order -> logical-order map is
+scalar-prefetched (SMEM) and consumed by the input index_map, i.e. the DMA
+engine itself performs the scatter/gather — no compute-core shuffling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(perm_ref, staged_ref, out_ref):
+    out_ref[...] = staged_ref[...]
+
+
+def relay_assemble(
+    staged: jax.Array,    # (n_chunks, chunk_elems) rows in landing order
+    perm: jax.Array,      # (n_chunks,) perm[i] = staged row of logical chunk i
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    n_chunks, chunk_elems = staged.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, chunk_elems), lambda i, perm_ref: (perm_ref[i], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, chunk_elems), lambda i, perm_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(staged.shape, staged.dtype),
+        interpret=interpret,
+    )(jnp.asarray(perm, jnp.int32), staged)

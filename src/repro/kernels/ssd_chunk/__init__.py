@@ -1,0 +1,3 @@
+from .ops import ssd_op
+from .ref import ssd_chunk_ref
+from .ssd_chunk import ssd_chunk

@@ -1,0 +1,34 @@
+"""Oracle for the intra-chunk SSD kernel: per-chunk dual-form outputs and
+end-of-chunk states (the inter-chunk scan composes them in ops.py)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(
+    xbar: jax.Array,    # (nc, Q, P)   one head, chunked
+    a: jax.Array,       # (nc, Q)      log decays
+    B: jax.Array,       # (nc, Q, N)
+    C: jax.Array,       # (nc, Q, N)
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (y_diag (nc,Q,P), states (nc,P,N), out_decay (nc,Q)).
+
+    y_diag:    intra-chunk contribution.
+    states:    sum_j exp(a_{j+1..Q}) * B_j (x) xbar_j — the state each chunk
+               contributes to the carry.
+    out_decay: exp(cumsum(a)) — per-position decay applied to the carried
+               state's contribution (C_i . state * out_decay_i).
+    """
+    nc, Q, P = xbar.shape
+    cs = jnp.cumsum(a, axis=-1)                          # (nc, Q)
+    diff = cs[:, :, None] - cs[:, None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, jnp.exp(diff), 0.0)              # (nc, Q, Q)
+    scores = jnp.einsum("cin,cjn->cij", C, B) * L
+    y_diag = jnp.einsum("cij,cjp->cip", scores, xbar)
+    decay_states = jnp.exp(cs[:, -1:] - cs)              # (nc, Q)
+    states = jnp.einsum("cjp,cj,cjn->cpn", xbar, decay_states, B)
+    return y_diag, states, jnp.exp(cs)

@@ -1,0 +1,12 @@
+"""Launchers: production meshes, dry-run, train/serve entry points.
+
+NOTE: do not import ``dryrun`` from here — it sets
+``xla_force_host_platform_device_count=512`` at import time by design.
+"""
+from .mesh import make_host_mesh, make_production_mesh
+from .roofline import (
+    collective_stats,
+    model_flops_estimate,
+    roofline_terms,
+)
+from .specs import input_specs, make_step

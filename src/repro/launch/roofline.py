@@ -1,0 +1,189 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Terms (per device; the compiled SPMD program is the per-chip program, so
+dividing global quantities by chip count is equivalent):
+
+  compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw              (819 GB/s)
+  collective = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+``cost_analysis`` supplies FLOPs and bytes. Collective bytes are parsed
+from the optimized HLO: for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction we count the bytes the op moves
+through ICI per device:
+  all-gather         -> result bytes minus the local shard (received data)
+  reduce-scatter     -> operand bytes minus the local shard (sent data)
+  all-reduce         -> 2x operand bytes (ring reduce + broadcast phases)
+  all-to-all         -> operand bytes (everything leaves the chip once)
+  collective-permute -> operand bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# TPU v5e per-chip hardware constants (from the assignment brief)
+PEAK_FLOPS_BF16 = 197e12
+HBM_GBPS = 819e9
+ICI_LINK_GBPS = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "tuple": 0, "token": 0, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _parse_shapes(text: str) -> List[int]:
+    return [_shape_bytes(m.group(1), m.group(2))
+            for m in _SHAPE_RE.finditer(text)]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    count_by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        m = re.search(
+            r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVE_KINDS)
+            + r")(?:-start|-done)?\(", ls
+        )
+        if m is None:
+            continue
+        kind = m.group(1)
+        if "-done(" in ls:
+            continue  # counted at -start
+        lhs, _, rhs = ls.partition("=")
+        result_bytes = sum(_parse_shapes(rhs.split("(", 1)[0]))
+        operand_bytes = sum(_parse_shapes(rhs.split("(", 1)[1]))
+        # group size for shard arithmetic
+        gs = 0
+        gm = re.search(r"replica_groups=\{\{([\d,]+)\}", ls)
+        if gm:
+            gs = len(gm.group(1).split(","))
+        gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", ls)
+        if gm2:
+            gs = int(gm2.group(2))
+        frac = (gs - 1) / gs if gs > 1 else 1.0
+        if kind == "all-gather":
+            moved = int(result_bytes * frac)
+        elif kind == "reduce-scatter":
+            moved = int(operand_bytes * frac)
+        elif kind == "all-reduce":
+            moved = int(2 * operand_bytes * frac)
+        else:  # all-to-all, collective-permute
+            moved = operand_bytes
+        bytes_by_kind[kind] += moved
+        count_by_kind[kind] += 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    flops_ratio: float = 0.0        # MODEL_FLOPS / HLO_FLOPs (global)
+    per_device_bytes: Optional[int] = None
+    collective_counts: Optional[Dict[str, int]] = None
+
+    def as_row(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_ratio": self.flops_ratio,
+        }
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll: CollectiveStats,
+    model_flops: float = 0.0,
+    n_chips: int = 1,
+) -> Roofline:
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / HBM_GBPS
+    collective_s = coll.total_bytes / ICI_LINK_GBPS
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    ratio = (
+        model_flops / (flops * n_chips) if flops else 0.0
+    )
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        collective_bytes=coll.total_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        flops_ratio=ratio,
+        collective_counts=dict(coll.count_by_kind),
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D for training (N = active params, D = tokens);
+    2*N*D for inference; decode processes one token per sequence."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_param_count(cfg) -> int:
+    """Active (per-token) parameters: MoE counts only top_k experts."""
+    total = cfg.param_count()
+    if cfg.uses_moe:
+        per_layer_expert = 3 * cfg.d_model * cfg.d_ff
+        n_moe = sum(
+            1 for _, ch in cfg.layer_plan() if ch == "moe"
+        ) * cfg.n_periods
+        inactive = n_moe * (cfg.n_experts - cfg.top_k) * per_layer_expert
+        total -= inactive
+    return total

@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct input specs for every (architecture x input-shape)
+combination — weak-type-correct, shardable, zero allocation — plus the
+step-callable constructors the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import INPUT_SHAPES, InputShape, ModelConfig, get_config
+from ..models import decode_step, init_caches, loss_fn, prefill
+from ..models.init import abstract_params
+from ..training.optimizer import AdamWConfig, adamw_update, init_adamw
+from ..training.train_loop import TrainConfig, make_train_step
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding window applies to dense-family archs at 500k decode."""
+    return cfg.attn_window
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Device-side KV length: ring window if windowed, else full seq."""
+    w = effective_window(cfg, shape)
+    return min(w, shape.seq_len) if w else shape.seq_len
+
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape
+) -> Dict[str, Any]:
+    """Abstract inputs for the step function of this shape's kind."""
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": sds((B, S)),
+            "labels": sds((B, S)),
+        }
+        if cfg.cross_attn_every:
+            batch["frontend"] = sds((B, cfg.n_frontend_tokens, d), cfg.dtype)
+        if cfg.family == "audio":
+            # frame embeddings from the (stubbed) codec frontend
+            batch["inputs_embeds"] = sds((B, S, d), cfg.dtype)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out: Dict[str, Any] = {"tokens": sds((B, S))}
+        if cfg.cross_attn_every:
+            out["frontend"] = sds((B, cfg.n_frontend_tokens, d), cfg.dtype)
+        if cfg.family == "audio":
+            out["inputs_embeds"] = sds((B, S, d), cfg.dtype)
+        return out
+    # decode: ONE new token against a seq_len KV cache
+    W = effective_window(cfg, shape)
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, B, S, W)
+    )
+    out = {
+        "token": sds((B,)),
+        "caches": caches,
+        "cache_len": sds((), jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        out["frontend"] = sds((B, cfg.n_frontend_tokens, d), cfg.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step callables
+# ---------------------------------------------------------------------------
+def make_step(cfg: ModelConfig, shape: InputShape) -> Tuple[Callable, str]:
+    """Returns (fn, kind). Signatures:
+    train:   fn(params, opt_state, batch) -> (params, opt_state, metrics)
+    prefill: fn(params, **specs) -> (logits, caches, cache_len)
+    decode:  fn(params, token, caches, cache_len[, frontend]) ->
+             (logits, caches)
+    """
+    W = effective_window(cfg, shape)
+    if shape.kind == "train":
+        tc = TrainConfig(remat=True, opt=AdamWConfig())
+        return make_train_step(cfg, tc), "train"
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens, frontend=None, inputs_embeds=None):
+            return prefill(
+                params, tokens, cfg, max_len=shape.seq_len, window=W,
+                frontend=frontend, inputs_embeds=inputs_embeds,
+            )
+        return prefill_step, "prefill"
+
+    def serve_step(params, token, caches, cache_len, frontend=None):
+        return decode_step(
+            params, token, caches, cache_len, cfg, window=W,
+            frontend=frontend,
+        )
+    return serve_step, "decode"
+
+
+def abstract_state(cfg: ModelConfig, with_opt: bool = False):
+    params = abstract_params(cfg)
+    if not with_opt:
+        return params
+    opt = jax.eval_shape(lambda: init_adamw(params))
+    return params, opt

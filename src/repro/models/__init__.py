@@ -1,0 +1,26 @@
+"""Model zoo: composable JAX transformer stack (dense GQA, MoE, Mamba2
+SSD, hybrid, VLM cross-attention, audio decoder)."""
+from .attention import (
+    cross_attention,
+    decode_self_attention,
+    gqa,
+    init_kv_cache,
+    self_attention,
+)
+from .init import abstract_params, init_params, param_bytes
+from .layers import (
+    BATCH,
+    MODEL,
+    cross_entropy_loss,
+    embed,
+    mlp_forward,
+    pspec,
+    rms_norm,
+    rope,
+    shard,
+    unembed,
+)
+from .model import decode_step, forward, loss_fn, prefill
+from .moe import moe_ffn
+from .ssm import mamba_block, mamba_block_decode, ssd_chunked, ssd_decode_step
+from .transformer import init_caches, run_blocks

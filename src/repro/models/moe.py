@@ -1,0 +1,82 @@
+"""Expert-parallel Mixture-of-Experts channel mixer.
+
+Scatter-based dispatch (no GShard dense dispatch tensors): tokens are
+scattered into per-expert capacity buffers with positions derived from a
+cumulative count, experts run as a batched einsum over the expert axis
+(sharded over the ``model`` mesh axis = expert parallelism), and outputs
+are gathered back with router-probability weighting. Top-k routing with
+capacity dropping and the standard load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BATCH, MODEL, shard
+
+
+def router(params: Dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Returns (top-k probs, top-k expert indices); probs renormalized."""
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.clip(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    return top_p.astype(x.dtype), top_i, probs
+
+
+def load_balance_loss(probs: jax.Array, top_i: jax.Array, n_experts: int):
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    sel = jax.nn.one_hot(top_i, n_experts, dtype=jnp.float32)  # (B,S,k,E)
+    frac_tokens = jnp.mean(jnp.mean(sel, axis=2), axis=(0, 1))  # (E,), sums to 1
+    mean_prob = jnp.mean(probs, axis=(0, 1))                    # (E,)
+    return n_experts * jnp.sum(frac_tokens * mean_prob)
+
+
+def moe_ffn(
+    params: Dict, x: jax.Array, cfg, *, return_aux: bool = False
+):
+    """x: (B, S, d). Each batch row is a dispatch group with its own
+    capacity C = ceil(S * top_k / E * capacity_factor)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    top_p, top_i, probs = router(params, x, cfg)
+
+    C = max(1, int((S * K / E) * cfg.capacity_factor + 0.9999))
+    C = min(C, S * K)
+
+    # Position of each (token, k) assignment within its expert's buffer:
+    # running count of prior assignments to the same expert in this group.
+    sel = jax.nn.one_hot(top_i, E, dtype=jnp.int32)          # (B, S, K, E)
+    flat = sel.reshape(B, S * K, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat               # prior count
+    pos = jnp.sum(pos_flat.reshape(B, S, K, E) * sel, axis=-1)  # (B, S, K)
+    keep = (pos < C).astype(x.dtype)                         # capacity drop
+    pos_c = jnp.minimum(pos, C - 1)
+
+    # Scatter tokens into (B, E, C, d) expert buffers.
+    bidx = jnp.arange(B)[:, None, None]                      # (B,1,1)
+    contrib = x[:, :, None, :] * keep[..., None]             # (B, S, K, d)
+    buffers = jnp.zeros((B, E, C, d), x.dtype).at[
+        bidx, top_i, pos_c
+    ].add(contrib)
+    buffers = shard(buffers, BATCH, MODEL, None, None)
+
+    # Batched expert FFN (SwiGLU), expert axis sharded over `model`.
+    h_gate = jnp.einsum("becd,edf->becf", buffers, params["w_gate"])
+    h_up = jnp.einsum("becd,edf->becf", buffers, params["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    h = shard(h, BATCH, MODEL, None, None)
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    out_buf = shard(out_buf, BATCH, MODEL, None, None)
+
+    # Gather back to token order with router weighting.
+    gathered = out_buf[bidx, top_i, pos_c]                   # (B, S, K, d)
+    y = jnp.sum(gathered * (top_p * keep)[..., None], axis=2)
+    y = shard(y, BATCH, None, None)
+    if return_aux:
+        return y, load_balance_loss(probs, top_i, E)
+    return y

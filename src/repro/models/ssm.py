@@ -1,0 +1,274 @@
+"""Mamba2 / SSD (state-space duality) token mixer [arXiv:2405.21060].
+
+Chunked SSD: within a chunk the recurrence is computed in its quadratic
+"attention-like" dual form (MXU-friendly); across chunks a linear scan
+carries the (heads, headdim, dstate) state. Decode is the O(1) recurrent
+update. Projections are kept separate (w_z/w_x/w_B/w_C/w_dt rather than one
+fused in_proj) so each output lands on a cleanly shardable axis — a TPU
+adaptation noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BATCH, MODEL, rms_norm, shard
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def segsum(a: jax.Array) -> jax.Array:
+    """(..., l) log-decays -> (..., l, l) cumulative segment sums;
+    entry [i, j] = a[j+1] + ... + a[i] for i >= j, -inf above diagonal."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xbar: jax.Array,    # (b, l, h, p)  — inputs pre-multiplied by dt
+    a: jax.Array,       # (b, l, h)     — per-step log decay (negative)
+    B: jax.Array,       # (b, l, g, n)
+    C: jax.Array,       # (b, l, g, n)
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,   # (b, h, p, n)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (b, l, h, p), final_state: (b, h, p, n)).
+
+    g (B/C groups) must divide h; groups broadcast over h//g heads.
+    """
+    b, l, h, p = xbar.shape
+    g, n = B.shape[2], B.shape[3]
+    l_orig = l
+    if l % chunk:
+        # Pad to a chunk multiple: a=0 (decay 1) and xbar=0 leave the
+        # carried state untouched; padded outputs are sliced off below.
+        pad = chunk - l % chunk
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // chunk
+    r = h // g
+
+    # reshape to chunks
+    xc = xbar.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)      # (b,h,nc,cl)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    a_cs = jnp.cumsum(ac, axis=-1)                              # (b,h,nc,cl)
+
+    # 1) intra-chunk (dual quadratic form)
+    L = jnp.exp(segsum(ac))                                     # (b,h,nc,cl,cl)
+    # heads grouped over B/C groups: h = g * r
+    Lr = L.reshape(b, g, r, nc, chunk, chunk)
+    xr = xc.reshape(b, nc, chunk, g, r, p)
+    scores = jnp.einsum("bcign,bcsgn->bgcis", Cc, Bc)           # (b,g,nc,cl,cl)
+    y_diag = jnp.einsum(
+        "bgcis,bgrcis,bcsgrp->bcigrp", scores, Lr, xr
+    )
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)               # (b,h,nc,cl)
+    dsr = decay_states.reshape(b, g, r, nc, chunk)
+    states = jnp.einsum("bcsgn,bgrcs,bcsgrp->bcgrpn", Bc, dsr, xr)
+    states = states.reshape(b, nc, h, p, n)
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1]).transpose(0, 2, 1)     # (b,nc,h)
+    s0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, h, p, n), xbar.dtype)
+    )
+
+    def step(s, inp):
+        dec, st = inp                                            # (b,h), (b,h,p,n)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s                                          # emit state *before* chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        s0.astype(jnp.float32),
+        (
+            chunk_decay.transpose(1, 0, 2).astype(jnp.float32),
+            states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+        ),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (b,nc,h,p,n)
+
+    # 4) contribution of carried state to each position
+    state_decay = jnp.exp(a_cs)                                  # (b,h,nc,cl)
+    sdr = state_decay.reshape(b, g, r, nc, chunk)
+    psr = prev_states.astype(xbar.dtype).reshape(b, nc, g, r, p, n)
+    y_off = jnp.einsum("bcign,bcgrpn,bgrci->bcigrp", Cc, psr, sdr)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)[:, :l_orig]
+    return y, final_state.astype(xbar.dtype)
+
+
+def ssd_decode_step(
+    state: jax.Array,   # (b, h, p, n)
+    x: jax.Array,       # (b, h, p) — new token input
+    dt: jax.Array,      # (b, h)
+    a: jax.Array,       # (b, h) log decay
+    B: jax.Array,       # (b, g, n)
+    C: jax.Array,       # (b, g, n)
+) -> Tuple[jax.Array, jax.Array]:
+    b, h, p, n = state.shape
+    g = B.shape[1]
+    r = h // g
+    Bh = jnp.repeat(B, r, axis=1)                                # (b,h,n)
+    Ch = jnp.repeat(C, r, axis=1)
+    xbar = x * dt[..., None]
+    state = state * jnp.exp(a)[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xbar, Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (width cfg.conv_width)
+# ---------------------------------------------------------------------------
+def causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """x: (b, l, ch), w: (width, ch) depthwise. Causal (left) padding."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.transpose(0, 2, 1)[:, :, None, :],       # (b, ch, 1, l+w-1)
+        w.T[:, None, None, :],                       # (ch, 1, 1, w)
+        window_strides=(1, 1),
+        padding="VALID",
+        feature_group_count=x.shape[-1],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[:, :, 0, :].transpose(0, 2, 1) + bias
+
+
+def conv_decode_step(
+    conv_state: jax.Array,   # (b, width-1, ch)
+    x_new: jax.Array,        # (b, 1, ch)
+    w: jax.Array,
+    bias: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    window = jnp.concatenate([conv_state, x_new], axis=1)        # (b, width, ch)
+    y = jnp.einsum("bwc,wc->bc", window, w)[:, None, :] + bias
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+def _project(params: Dict, x: jax.Array, cfg):
+    z = jnp.einsum("bld,de->ble", x, params["w_z"])
+    xin = jnp.einsum("bld,de->ble", x, params["w_x"])
+    Bp = jnp.einsum("bld,de->ble", x, params["w_B"])
+    Cp = jnp.einsum("bld,de->ble", x, params["w_C"])
+    dt = jnp.einsum("bld,dh->blh", x, params["w_dt"])
+    return z, xin, Bp, Cp, dt
+
+
+def mamba_block(
+    params: Dict,
+    x: jax.Array,                 # (b, l, d)
+    cfg,
+    *,
+    return_state: bool = False,
+    initial_state: Optional[Dict] = None,
+):
+    """``initial_state``/returned state follow the ``init_ssm_state``
+    schema ({ssm, conv_x, conv_B, conv_C}) so prefill -> decode
+    continuation is exact (SSM state + conv tails)."""
+    b, l, d = x.shape
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    tail = cfg.conv_width - 1
+    z, xin_raw, Bp_raw, Cp_raw, dt = _project(params, x, cfg)
+    xin = causal_conv(xin_raw, params["conv_x_w"], params["conv_x_b"])
+    Bp = causal_conv(Bp_raw, params["conv_B_w"], params["conv_B_b"])
+    Cp = causal_conv(Cp_raw, params["conv_C_w"], params["conv_C_b"])
+    xin = jax.nn.silu(xin)
+    Bp = jax.nn.silu(Bp)
+    Cp = jax.nn.silu(Cp)
+    xin = shard(xin, BATCH, None, MODEL)
+    dt = jax.nn.softplus(dt + params["dt_bias"])                 # (b,l,h)
+    a = -jnp.exp(params["A_log"]) * dt                           # (b,l,h)
+    xh = xin.reshape(b, l, h, p)
+    xbar = xh * dt[..., None]
+    s0 = initial_state["ssm"] if initial_state is not None else None
+    y, final_ssm = ssd_chunked(
+        xbar, a, Bp.reshape(b, l, g, n), Cp.reshape(b, l, g, n),
+        cfg.ssm_chunk, s0,
+    )
+    y = y + params["D"][:, None] * xh                            # skip
+    y = y.reshape(b, l, h * p).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["w_out"]).astype(x.dtype)
+    if return_state:
+        state = {
+            "ssm": final_ssm,
+            # conv tails: last (width-1) raw projections, for exact decode
+            "conv_x": xin_raw[:, l - tail:, :],
+            "conv_B": Bp_raw[:, l - tail:, :],
+            "conv_C": Cp_raw[:, l - tail:, :],
+        }
+        return out, state
+    return out
+
+
+def init_ssm_state(cfg, batch: int) -> Dict:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ch = cfg.ssm_d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    w = cfg.conv_width - 1
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), cfg.dtype),
+        "conv_x": jnp.zeros((batch, w, ch), cfg.dtype),
+        "conv_B": jnp.zeros((batch, w, gn), cfg.dtype),
+        "conv_C": jnp.zeros((batch, w, gn), cfg.dtype),
+    }
+
+
+def mamba_block_decode(
+    params: Dict,
+    x: jax.Array,        # (b, 1, d)
+    state: Dict,         # from init_ssm_state
+    cfg,
+) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xin, Bp, Cp, dt = _project(params, x, cfg)
+    xin, conv_x = conv_decode_step(
+        state["conv_x"], xin, params["conv_x_w"], params["conv_x_b"]
+    )
+    Bp, conv_B = conv_decode_step(
+        state["conv_B"], Bp, params["conv_B_w"], params["conv_B_b"]
+    )
+    Cp, conv_C = conv_decode_step(
+        state["conv_C"], Cp, params["conv_C_w"], params["conv_C_b"]
+    )
+    xin = jax.nn.silu(xin)[:, 0]                                 # (b, di)
+    Bp = jax.nn.silu(Bp)[:, 0]
+    Cp = jax.nn.silu(Cp)[:, 0]
+    dt = jax.nn.softplus(dt[:, 0] + params["dt_bias"])           # (b,h)
+    a = -jnp.exp(params["A_log"]) * dt
+    y, ssm = ssd_decode_step(
+        state["ssm"], xin.reshape(b, h, p), dt, a,
+        Bp.reshape(b, g, n), Cp.reshape(b, g, n),
+    )
+    y = y + params["D"][:, None] * xin.reshape(b, h, p)
+    y = y.reshape(b, 1, h * p).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["w_out"]).astype(x.dtype)
+    return out, {
+        "ssm": ssm.astype(state["ssm"].dtype),
+        "conv_x": conv_x.astype(state["conv_x"].dtype),
+        "conv_B": conv_B.astype(state["conv_B"].dtype),
+        "conv_C": conv_C.astype(state["conv_C"].dtype),
+    }

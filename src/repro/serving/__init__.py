@@ -1,0 +1,18 @@
+"""Serving substrate: KV cache + prefix cache with host offload, weight
+sleep/wake, latency model, functional server, scheduler."""
+from .engine import (
+    FunctionalServer,
+    LatencyModel,
+    TTFTBreakdown,
+    H20_BF16_TFLOPS,
+)
+from .kv_cache import (
+    HostKVPool,
+    KVCacheManager,
+    PrefixCache,
+    kv_bytes_per_token,
+    ssm_state_bytes,
+)
+from .orchestrator import ModelInstance, Orchestrator, ServedRequest
+from .scheduler import Request, Scheduler
+from .weight_manager import TransferReport, WeightManager

@@ -1,0 +1,200 @@
+"""KV-cache management: device budget accounting, host offload pool, and
+page-granular prefix cache (LMCache-style) with MMA-accelerated fetch.
+
+Two cooperating layers:
+  * ``HostKVPool`` / ``PrefixCache`` — host-memory store of evicted or
+    shared KV (and SSM state snapshots for hybrid/ssm families), keyed by
+    page-aligned token-prefix hashes.
+  * ``KVCacheManager`` — accounts device bytes, decides offload/fetch, and
+    routes the actual movement through the MMA engine (simulated timing on
+    the sim backend; real array movement on the functional backend).
+
+SSM/hybrid note (DESIGN.md): recurrent state is a point snapshot, so a
+prefix hit requires an exact page-aligned prefix match (Marconi-style),
+whereas attention KV can be truncated to any hit length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import Direction, MMAEngine
+
+
+def kv_bytes_per_token(cfg, dtype_size: int = 2) -> int:
+    """Bytes of K+V per token across all attention layers."""
+    n_attn = sum(
+        1 for mixer, _ in cfg.layer_plan() if mixer == "attn"
+    ) * cfg.n_periods
+    return 2 * cfg.n_kv_heads * cfg.hd * n_attn * dtype_size
+
+
+def ssm_state_bytes(cfg, batch: int = 1, dtype_size: int = 2) -> int:
+    if not cfg.uses_ssm:
+        return 0
+    n_ssm = sum(
+        1 for mixer, _ in cfg.layer_plan() if mixer == "ssm"
+    ) * cfg.n_periods
+    per_layer = (
+        cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+        + 3 * (cfg.conv_width - 1) * cfg.ssm_d_inner
+    )
+    return n_ssm * per_layer * batch * dtype_size
+
+
+def prefix_key(tokens: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(tokens).tobytes()).hexdigest()
+
+
+@dataclasses.dataclass
+class HostKVEntry:
+    key: str
+    n_tokens: int
+    nbytes: int
+    payload: Any          # np pytree (caches trimmed to n_tokens) or None
+    exact_only: bool      # SSM/hybrid snapshot: only exact-prefix reuse
+
+
+class HostKVPool:
+    """LRU host-DRAM pool of offloaded KV."""
+
+    def __init__(self, capacity_bytes: int = 64 << 30) -> None:
+        self.capacity = capacity_bytes
+        self._entries: "OrderedDict[str, HostKVEntry]" = OrderedDict()
+        self.bytes_used = 0
+
+    def put(self, entry: HostKVEntry) -> None:
+        if entry.key in self._entries:
+            self.bytes_used -= self._entries.pop(entry.key).nbytes
+        while self.bytes_used + entry.nbytes > self.capacity and self._entries:
+            _, old = self._entries.popitem(last=False)
+            self.bytes_used -= old.nbytes
+        self._entries[entry.key] = entry
+        self.bytes_used += entry.nbytes
+
+    def get(self, key: str) -> Optional[HostKVEntry]:
+        e = self._entries.get(key)
+        if e is not None:
+            self._entries.move_to_end(key)
+        return e
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class PrefixCache:
+    """Page-granular longest-prefix matching over the host pool."""
+
+    def __init__(self, pool: HostKVPool, page_size: int = 256) -> None:
+        self.pool = pool
+        self.page_size = page_size
+
+    def store(
+        self,
+        tokens: np.ndarray,
+        nbytes: int,
+        payload: Any = None,
+        exact_only: bool = False,
+    ) -> str:
+        n_pages = len(tokens) // self.page_size
+        n = n_pages * self.page_size
+        if n == 0:
+            return ""
+        key = prefix_key(tokens[:n])
+        self.pool.put(
+            HostKVEntry(key=key, n_tokens=n, nbytes=nbytes,
+                        payload=payload, exact_only=exact_only)
+        )
+        return key
+
+    def match(self, tokens: np.ndarray) -> Tuple[int, Optional[HostKVEntry]]:
+        """Longest page-aligned stored prefix of ``tokens``."""
+        n_pages = len(tokens) // self.page_size
+        for k in range(n_pages, 0, -1):
+            n = k * self.page_size
+            e = self.pool.get(prefix_key(tokens[:n]))
+            if e is not None:
+                if e.exact_only and e.n_tokens != n:
+                    continue
+                return n, e
+        return 0, None
+
+
+class KVCacheManager:
+    """Device-byte accounting + offload/fetch through the MMA engine."""
+
+    def __init__(
+        self,
+        cfg,
+        engine: MMAEngine,
+        device_budget_bytes: int,
+        kv_dtype_size: int = 2,
+        page_size: int = 256,
+        target_device: int = 0,
+    ) -> None:
+        self.cfg = cfg
+        self.engine = engine
+        self.budget = device_budget_bytes
+        self.kv_dtype_size = kv_dtype_size
+        self.bytes_per_token = kv_bytes_per_token(cfg, kv_dtype_size)
+        self.pool = HostKVPool()
+        self.prefix = PrefixCache(self.pool, page_size)
+        self.device_bytes = 0
+        self.target = target_device
+
+    # -- accounting -----------------------------------------------------
+    def can_admit(self, n_tokens: int) -> bool:
+        return (
+            self.device_bytes + n_tokens * self.bytes_per_token <= self.budget
+        )
+
+    def admit(self, n_tokens: int) -> None:
+        self.device_bytes += n_tokens * self.bytes_per_token
+
+    def release(self, n_tokens: int) -> None:
+        self.device_bytes -= n_tokens * self.bytes_per_token
+        assert self.device_bytes >= 0
+
+    # -- movement through MMA -------------------------------------------
+    def offload(
+        self, tokens: np.ndarray, payload: Any = None
+    ) -> Tuple[str, object]:
+        """D2H: evict this sequence's KV to the host pool. Returns
+        (prefix key, transfer task)."""
+        nbytes = len(tokens) * self.bytes_per_token + ssm_state_bytes(
+            self.cfg, 1, self.kv_dtype_size
+        )
+        task = self.engine.memcpy(
+            nbytes, device=self.target, direction=Direction.D2H
+        )
+        key = self.prefix.store(
+            tokens, nbytes, payload=payload,
+            exact_only=self.cfg.uses_ssm,
+        )
+        self.release_if_admitted(len(tokens))
+        return key, task
+
+    def fetch(self, tokens: np.ndarray) -> Tuple[int, object, Any]:
+        """H2D: longest-prefix hit fetched back to the device. Returns
+        (hit_tokens, transfer task or None, payload)."""
+        hit, entry = self.prefix.match(tokens)
+        if hit == 0:
+            return 0, None, None
+        nbytes = hit * self.bytes_per_token
+        task = self.engine.memcpy(
+            nbytes, device=self.target, direction=Direction.H2D
+        )
+        self.admit(hit)
+        return hit, task, entry.payload
+
+    def release_if_admitted(self, n_tokens: int) -> None:
+        take = min(self.device_bytes, n_tokens * self.bytes_per_token)
+        self.device_bytes -= take

@@ -1,0 +1,87 @@
+"""Request scheduler: FCFS admission with KV-budget awareness and
+preemption-by-offload (evict a running request's KV to host through MMA,
+resume it later with a multipath fetch)."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+_req_ids = itertools.count()
+
+
+@dataclasses.dataclass(eq=False)     # identity equality (numpy fields)
+class Request:
+    tokens: np.ndarray                 # prompt token ids
+    max_new_tokens: int = 16
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
+    arrival: float = 0.0
+    # runtime state
+    state: str = "waiting"             # waiting | running | preempted | done
+    generated: List[int] = dataclasses.field(default_factory=list)
+    context: Optional[object] = None   # engine-private (caches, cache_len)
+    ttft: Optional[float] = None
+    hit_tokens: int = 0
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens) + len(self.generated)
+
+    def finished(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class Scheduler:
+    def __init__(self, kv_manager, max_running: int = 4) -> None:
+        self.kv = kv_manager
+        self.max_running = max_running
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.preempted: Deque[Request] = deque()
+        self.done: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _admit(self, req: Request) -> bool:
+        need = req.n_tokens + req.max_new_tokens
+        if len(self.running) >= self.max_running:
+            return False
+        if not self.kv.can_admit(need):
+            return False
+        self.kv.admit(need)
+        req.state = "running"
+        self.running.append(req)
+        return True
+
+    def schedule(self) -> List[Request]:
+        """Admit from preempted first (fairness), then waiting. Returns the
+        newly admitted requests (they need prefill or resume-fetch)."""
+        admitted: List[Request] = []
+        while self.preempted and self._admit(self.preempted[0]):
+            admitted.append(self.preempted.popleft())
+        while self.waiting and self._admit(self.waiting[0]):
+            admitted.append(self.waiting.popleft())
+        return admitted
+
+    def preempt_one(self) -> Optional[Request]:
+        """Evict the youngest running request (offload its KV to host)."""
+        if not self.running:
+            return None
+        req = self.running.pop()           # LIFO preemption
+        self.kv.release_if_admitted(req.n_tokens + req.max_new_tokens)
+        req.state = "preempted"
+        self.preempted.append(req)
+        return req
+
+    def finish(self, req: Request) -> None:
+        self.running.remove(req)
+        self.kv.release_if_admitted(req.n_tokens + req.max_new_tokens)
+        req.state = "done"
+        self.done.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running or self.preempted)

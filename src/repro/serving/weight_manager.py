@@ -1,0 +1,105 @@
+"""Weight manager: vLLM-Sleep-Mode-style model eviction and wake-up
+(paper §5.2.2) through the MMA engine.
+
+``sleep()`` moves all parameter bytes D2H; ``wake()`` moves them back H2D.
+On the sim backend the returned latencies are the paper-comparable
+numbers; on the functional backend the parameter arrays actually round-trip
+through host memory (bit-exact, used by tests and examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core import Direction, MMAEngine
+from ..core.jax_backend import JaxBackend, multipath_device_get, multipath_device_put
+
+
+@dataclasses.dataclass
+class TransferReport:
+    nbytes: int
+    seconds: float
+    bandwidth_gbps: float
+
+
+class WeightManager:
+    """Tracks one model instance's weights across GPU/host residency."""
+
+    def __init__(
+        self,
+        engine: MMAEngine,
+        params: Optional[Any] = None,
+        nbytes: Optional[int] = None,
+        target_device: int = 0,
+    ) -> None:
+        if params is None and nbytes is None:
+            raise ValueError("need params or nbytes")
+        self.engine = engine
+        self.params = params
+        self.nbytes = (
+            nbytes
+            if nbytes is not None
+            else sum(np.asarray(l).nbytes for l in jax.tree.leaves(params))
+        )
+        self.target = target_device
+        self.state = "awake"
+        self._host_copy: Optional[Dict] = None
+        self.functional = isinstance(engine.backend, JaxBackend)
+
+    def _run_sim(self, direction: Direction) -> TransferReport:
+        task = self.engine.memcpy(
+            self.nbytes, device=self.target, direction=direction
+        )
+        world = self.engine.backend.world  # type: ignore[attr-defined]
+        world.run()
+        return TransferReport(
+            nbytes=self.nbytes,
+            seconds=task.elapsed,
+            bandwidth_gbps=task.bandwidth_gbps(),
+        )
+
+    def sleep(self) -> TransferReport:
+        """Evict weights to host memory (fall-asleep, D2H)."""
+        assert self.state == "awake", "already asleep"
+        if self.functional:
+            t0 = time.monotonic()
+            self._host_copy = jax.tree.map(
+                lambda l: multipath_device_get(l, engine=self.engine),
+                self.params,
+            )
+            self.params = None
+            dt = time.monotonic() - t0
+            report = TransferReport(self.nbytes, dt,
+                                    self.nbytes / max(dt, 1e-9) / (1 << 30))
+        else:
+            report = self._run_sim(Direction.D2H)
+        self.state = "asleep"
+        return report
+
+    def wake(self) -> TransferReport:
+        """Reload weights to the GPU (wake-up, H2D multipath fetch)."""
+        assert self.state == "asleep", "not asleep"
+        if self.functional:
+            t0 = time.monotonic()
+            self.params = jax.tree.map(
+                lambda l: multipath_device_put(
+                    np.asarray(l), target=self.target, engine=self.engine
+                ),
+                self._host_copy,
+            )
+            self._host_copy = None
+            dt = time.monotonic() - t0
+            report = TransferReport(self.nbytes, dt,
+                                    self.nbytes / max(dt, 1e-9) / (1 << 30))
+        else:
+            report = self._run_sim(Direction.H2D)
+        self.state = "awake"
+        return report
+
+    def switch_to(self, other: "WeightManager") -> Tuple[TransferReport, TransferReport]:
+        """Model switching = this model sleeps, the other wakes."""
+        return self.sleep(), other.wake()

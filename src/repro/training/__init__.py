@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, loop, data pipeline, checkpointing."""
+from .checkpoint import restore_checkpoint, save_checkpoint
+from .data import DataConfig, PrefetchLoader, SyntheticTokenStream
+from .optimizer import (
+    AdamWConfig,
+    AdamWState,
+    adamw_update,
+    global_norm,
+    init_adamw,
+    lr_schedule,
+)
+from .train_loop import TrainConfig, make_train_step, train

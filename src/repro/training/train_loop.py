@@ -1,0 +1,111 @@
+"""Training loop: jitted train step (grad + AdamW), microbatch gradient
+accumulation, metrics, periodic checkpointing."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import loss_fn
+from .optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1       # gradient accumulation
+    log_every: int = 10
+    checkpoint_every: int = 0   # 0 = off
+    checkpoint_path: str = "/tmp/repro_ckpt.npz"
+    remat: bool = True
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_train_step(
+    model_cfg, train_cfg: TrainConfig
+) -> Callable:
+    """Build the (jit-able) train step. With microbatches > 1 the batch's
+    leading axis is split and gradients are accumulated in a scan."""
+
+    def loss_wrapped(params, batch):
+        return loss_fn(params, batch, model_cfg, remat=train_cfg.remat)
+
+    grad_fn = jax.value_and_grad(loss_wrapped, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict):
+        mb = train_cfg.microbatches
+        if mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / mb, g_acc, g
+                )
+                return (g_acc, l_acc + l / mb), None
+
+            (grads, loss), _ = jax.lax.scan(
+                acc, (zero, jnp.zeros(())), micro
+            )
+            metrics = {}
+        params, opt_state, opt_metrics = adamw_update(
+            train_cfg.opt, params, grads, opt_state
+        )
+        out = {"loss": loss, **opt_metrics}
+        if metrics:
+            out.update({k: v for k, v in metrics.items()})
+        return params, opt_state, out
+
+    return train_step
+
+
+def train(
+    model_cfg,
+    params,
+    data_iter,
+    train_cfg: TrainConfig,
+    jit: bool = True,
+    on_step: Optional[Callable[[int, Dict], None]] = None,
+):
+    """Run the loop; returns (params, opt_state, history)."""
+    opt_state = init_adamw(params)
+    step_fn = make_train_step(model_cfg, train_cfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    history = []
+    t0 = time.monotonic()
+    for step in range(train_cfg.steps):
+        batch = next(data_iter)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % train_cfg.log_every == 0 or step == train_cfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.monotonic() - t0
+            history.append(m)
+            if on_step is not None:
+                on_step(step, m)
+        if (
+            train_cfg.checkpoint_every
+            and step > 0
+            and step % train_cfg.checkpoint_every == 0
+        ):
+            from .checkpoint import save_checkpoint
+
+            save_checkpoint(
+                train_cfg.checkpoint_path, params, opt_state, step=step
+            )
+    return params, opt_state, history

@@ -1,0 +1,160 @@
+"""Validation of the paper's own quantitative claims against the
+calibrated simulator (the paper-faithful baseline of EXPERIMENTS.md).
+
+Every tolerance here corresponds to a number the paper reports for the
+8xH20 testbed (§5). These tests pin the reproduction: if the scheduler or
+the topology calibration regresses, the paper's headline results stop
+reproducing and these fail.
+"""
+import pytest
+
+from repro.core import Direction, MMAConfig, SimWorld, make_sim_engine
+from repro.core.config import GB, MB
+from repro.core.engine import MMAEngine
+from repro.core.task_launcher import SimBackend
+from repro.core.topology import h20_server
+
+
+def mma_bandwidth(
+    nbytes=1 * GB, direction=Direction.H2D, relays=None, cfg=None, topo=None
+):
+    world = SimWorld()
+    cfg = cfg or MMAConfig()
+    topo = topo or h20_server()
+    backend = SimBackend(world, topo, cfg)
+    eng = MMAEngine(topo, backend, cfg)
+    if relays is not None:
+        eng.set_relay_devices(relays)
+    t = eng.memcpy(nbytes, device=0, direction=direction)
+    world.run()
+    return t.bandwidth_gbps()
+
+
+def native_bandwidth(nbytes=1 * GB, direction=Direction.H2D):
+    world = SimWorld()
+    cfg = MMAConfig()
+    topo = h20_server()
+    backend = SimBackend(world, topo, cfg)
+    res = {}
+    backend.native_copy(
+        nbytes, 0, direction, lambda: res.setdefault("t", world.now)
+    )
+    world.run()
+    return nbytes / res["t"] / GB
+
+
+# -- Fig 7: bandwidth vs message size ---------------------------------------
+def test_native_baseline_saturates_near_53():
+    assert native_bandwidth() == pytest.approx(53.6, rel=0.03)
+
+
+def test_peak_h2d_bandwidth_245():
+    peak = max(mma_bandwidth(nbytes=n) for n in (1 * GB, 2 * GB, 4 * GB))
+    assert peak == pytest.approx(245.0, rel=0.06)
+
+
+def test_speedup_over_native_at_least_4x():
+    speedup = mma_bandwidth(nbytes=4 * GB) / native_bandwidth()
+    assert speedup > 4.2  # paper: 4.62x
+
+
+def test_mma_outperforms_native_beyond_crossover():
+    """Paper: MMA begins to outperform the baseline at ~10 MB."""
+    native = native_bandwidth(nbytes=64 * MB)
+    assert mma_bandwidth(nbytes=64 * MB) > native
+    # below the fallback threshold MMA == native path (no regression)
+    small = mma_bandwidth(nbytes=4 * MB)
+    native_small = native_bandwidth(nbytes=4 * MB)
+    assert small == pytest.approx(native_small, rel=0.05)
+
+
+def test_d2h_lower_than_h2d():
+    """Paper §5.1.1: D2H relay serializes NVLink-ingress and PCIe-egress."""
+    h2d = mma_bandwidth(nbytes=2 * GB, direction=Direction.H2D)
+    d2h = mma_bandwidth(nbytes=2 * GB, direction=Direction.D2H)
+    assert d2h < h2d
+    assert d2h > 2.5 * 53.6  # but still a large multiple of native
+
+
+# -- Fig 8: bandwidth vs number of relay paths -------------------------------
+def test_bandwidth_increases_with_relays_then_saturates():
+    bws = [
+        mma_bandwidth(relays=list(range(1, 1 + k)), nbytes=1 * GB)
+        for k in range(8)
+    ]
+    # monotone (within tolerance) up to 5 relays
+    for k in range(5):
+        assert bws[k + 1] > bws[k] * 0.98
+    # saturation: adding the 7th relay adds <5% over 6 relays
+    assert abs(bws[7] - bws[6]) / bws[6] < 0.06
+    # the knee is xGMI-driven: 5->6 relays gains far less than 2->3
+    assert (bws[6] - bws[5]) < 0.62 * (bws[3] - bws[2])
+
+
+def test_numa_local_mode_180():
+    """Paper §6: restricting relay to same-NUMA GPUs gives ~180 GB/s
+    (3.4x) with all traffic in one memory domain."""
+    bw = mma_bandwidth(relays=[1, 2, 3], nbytes=1 * GB)
+    assert bw == pytest.approx(180.0, rel=0.06)
+    assert bw / 53.6 == pytest.approx(3.4, rel=0.08)
+
+
+# -- Fig 14 / §6: TP sweep ----------------------------------------------------
+def test_tp8_no_spare_relays_matches_native():
+    """TP=8: no spare peers; MMA falls back to direct path, ~0.94x native."""
+    bw = mma_bandwidth(relays=[], nbytes=1 * GB)
+    assert bw / native_bandwidth() > 0.92
+
+
+def test_tp4_four_relays_speedup():
+    """TP=4: ~2.9x speedup with 4 spare relay GPUs (paper: 156.6 GB/s)."""
+    bw = mma_bandwidth(relays=[4, 5, 6, 7], nbytes=1 * GB)  # remote spares
+    bw_mixed = mma_bandwidth(relays=[1, 2, 3, 4], nbytes=1 * GB)
+    # at least one TP=4 placement reaches the paper's 2.9x band
+    assert max(bw, bw_mixed) / 53.6 > 2.6
+
+
+# -- Fig 15: chunk size sensitivity ------------------------------------------
+def test_chunk_size_optimum_in_low_mb_range():
+    sizes = [256 * 1024, 1 * MB, 3 * MB, 5 * MB, 16 * MB, 64 * MB]
+    bws = {
+        s: mma_bandwidth(nbytes=512 * MB, cfg=MMAConfig(chunk_bytes=s))
+        for s in sizes
+    }
+    best = max(bws, key=bws.get)
+    assert 1 * MB <= best <= 16 * MB
+    # too-small chunks lose to the optimum by a wide margin
+    assert bws[256 * 1024] < 0.75 * bws[best]
+
+
+def test_queue_depth_two_beats_one():
+    """Paper: depth 1 introduces idle gaps between consecutive transfers."""
+    bw1 = mma_bandwidth(nbytes=512 * MB, cfg=MMAConfig(queue_depth=1))
+    bw2 = mma_bandwidth(nbytes=512 * MB, cfg=MMAConfig(queue_depth=2))
+    assert bw2 > bw1 * 1.05
+
+
+# -- Fig 6: dual-pipeline relay ------------------------------------------------
+def test_dual_pipeline_beats_naive_relay():
+    bw_naive = mma_bandwidth(
+        nbytes=1 * GB, cfg=MMAConfig(relay_streams=1)
+    )
+    bw_dual = mma_bandwidth(
+        nbytes=1 * GB, cfg=MMAConfig(relay_streams=2)
+    )
+    assert bw_dual > bw_naive * 1.05
+
+
+# -- Fig 16: fallback threshold -------------------------------------------------
+def test_fallback_break_even_between_two_and_five_chunks():
+    """Disable fallback and find where raw multipath beats native: the
+    break-even must sit at 2-5 chunks (paper: 11.3-13 MB at 5 MB chunks)."""
+    cfg_nofb = lambda: MMAConfig(fallback_bytes=0)
+    chunk = 5 * MB
+    breakeven = None
+    for n_chunks in range(1, 12):
+        n = n_chunks * chunk
+        if mma_bandwidth(nbytes=n, cfg=cfg_nofb()) > native_bandwidth(nbytes=n):
+            breakeven = n_chunks
+            break
+    assert breakeven is not None and 2 <= breakeven <= 5
