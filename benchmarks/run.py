@@ -23,6 +23,7 @@ MODULES = [
     ("fig15", "fig15_chunk_queue"),
     ("fig16", "fig16_fallback"),
     ("table2", "table2_direct_priority"),
+    ("qos", "qos_contention"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),

@@ -25,6 +25,7 @@ from .transfer_task import (
     MicroTaskQueue,
     TaskManager,
     TaskState,
+    TrafficClass,
     TransferTask,
 )
 
@@ -40,5 +41,5 @@ __all__ = [
     "Backend", "SimBackend",
     "Device", "Topology", "h20_server", "tpu_host",
     "Direction", "MicroTask", "MicroTaskQueue", "TaskManager", "TaskState",
-    "TransferTask",
+    "TrafficClass", "TransferTask",
 ]

@@ -67,6 +67,30 @@ class MMAConfig:
     # Beyond-paper: EWMA-rate-weighted path selection (see EXPERIMENTS §Perf).
     score_based_selection: bool = False
     ewma_alpha: float = 0.3
+    # ---- QoS / traffic-class arbitration --------------------------------
+    # Class-aware chunk scheduling (strict LATENCY priority + weighted-fair
+    # THROUGHPUT/BACKGROUND). Off = pre-QoS arrival-order FIFO baseline.
+    qos_enabled: bool = True
+    # LATENCY is served strictly before lower classes. When False, LATENCY
+    # joins the weighted-fair rotation with its own weight.
+    qos_strict_latency: bool = True
+    # WFQ weights indexed by TrafficClass value (LATENCY, THROUGHPUT,
+    # BACKGROUND). A class accrues nbytes/weight of virtual time per chunk
+    # served, so THROUGHPUT:BACKGROUND = 4:1 gives the wake ~4x the
+    # residual bandwidth of an offload.
+    qos_weights: Sequence[float] = (8.0, 4.0, 1.0)
+    # Direct-path reservation (Table 2 regime): while a LATENCY flow to
+    # dest d is in flight, d's own link carries only LATENCY work — it
+    # will not fill its outstanding queue with relay chunks that a newly
+    # split latency burst would then wait behind.
+    qos_reserve_direct: bool = True
+
+    def class_weight(self, cls) -> float:
+        """WFQ weight for a TrafficClass (or its integer value)."""
+        i = int(cls)
+        if 0 <= i < len(self.qos_weights):
+            return float(self.qos_weights[i])
+        return 1.0
 
     @staticmethod
     def from_env() -> "MMAConfig":
@@ -83,6 +107,27 @@ class MMAConfig:
         cfg.numa_local_only = bool(_env_int("MMA_NUMA_LOCAL", 0))
         cfg.direct_priority = bool(_env_int("MMA_DIRECT_PRIORITY", 1))
         cfg.relay_streams = _env_int("MMA_RELAY_STREAMS", cfg.relay_streams)
+        cfg.qos_enabled = bool(_env_int("MMA_QOS", int(cfg.qos_enabled)))
+        cfg.qos_strict_latency = bool(
+            _env_int("MMA_QOS_STRICT", int(cfg.qos_strict_latency))
+        )
+        weights = os.environ.get("MMA_QOS_WEIGHTS")
+        if weights:
+            parsed = tuple(float(x) for x in weights.split(","))
+            if len(parsed) != len(cfg.qos_weights):
+                raise ValueError(
+                    f"MMA_QOS_WEIGHTS needs {len(cfg.qos_weights)} values "
+                    f"(LATENCY,THROUGHPUT,BACKGROUND), got {weights!r}"
+                )
+            if any(w <= 0 for w in parsed):
+                # a zero/negative weight would starve its class outright
+                raise ValueError(
+                    f"MMA_QOS_WEIGHTS must be positive, got {weights!r}"
+                )
+            cfg.qos_weights = parsed
+        cfg.qos_reserve_direct = bool(
+            _env_int("MMA_QOS_RESERVE_DIRECT", int(cfg.qos_reserve_direct))
+        )
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:

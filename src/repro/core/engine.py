@@ -26,6 +26,7 @@ from .transfer_task import (
     Direction,
     TaskManager,
     TaskState,
+    TrafficClass,
     TransferTask,
 )
 
@@ -43,6 +44,9 @@ class EngineStats:
                 "relay": w.chunks_relay,
                 "bytes": w.bytes_total,
                 "rate_gbps": w.observed_rate_gbps(),
+                "by_class": {
+                    c.name.lower(): b for c, b in w.bytes_by_class.items()
+                },
             }
             for d, w in workers.items()
         }
@@ -94,6 +98,7 @@ class MMAEngine:
         src: object = None,
         dst: object = None,
         on_complete: Optional[Callable[[TransferTask], None]] = None,
+        traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
     ) -> DummyTask:
         """Intercept an asynchronous copy: record a Transfer Task, return
         the Dummy Task to be enqueued on the caller's stream. Dispatch
@@ -102,6 +107,7 @@ class MMAEngine:
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=False, src=src, dst=dst, on_complete=on_complete,
+            traffic_class=traffic_class,
         )
         dummy = DummyTask(task=task, on_activate=self._activate)
         self.sync_engine.register(dummy)
@@ -114,6 +120,7 @@ class MMAEngine:
         direction: Direction = Direction.H2D,
         src: object = None,
         dst: object = None,
+        traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
     ) -> TransferTask:
         """Intercept a synchronous copy: same Transfer-Task machinery, but
         the transfer is activated immediately; the caller is expected to
@@ -121,12 +128,21 @@ class MMAEngine:
         ``task.complete_time``; threaded callers wait on ``on_complete``)."""
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
-            sync=True, src=src, dst=dst,
+            sync=True, src=src, dst=dst, traffic_class=traffic_class,
         )
         self._activate(task)
         return task
 
     # ------------------------------------------------------------------
+    def _complete_now(self, task: TransferTask) -> None:
+        task.state = TaskState.COMPLETE
+        task.complete_time = self.backend.now()
+        self.sync_engine.transfer_complete(task)
+        for cb in self._completion_listeners:
+            cb(task)
+        if task.on_complete is not None:
+            task.on_complete(task)
+
     def _activate(self, task: TransferTask) -> None:
         """Copy point reached: choose multipath vs native fallback and
         start dispatching."""
@@ -135,23 +151,42 @@ class MMAEngine:
         self.stats.transfers += 1
         self.stats.bytes_total += task.nbytes
 
-        if task.nbytes < self.config.fallback_bytes and isinstance(
-            self.backend, SimBackend
+        if task.nbytes == 0:
+            # Zero-byte copies split into zero micro-tasks and would never
+            # reach distributed completion (wedging any active-flow
+            # reservation); complete them inline.
+            self._complete_now(task)
+            return
+
+        # Small transfers bypass multipath (paper §3.2): one native DMA —
+        # except under QoS when (a) the task itself is LATENCY-class, or
+        # (b) its destination's direct link is reserved by an in-flight
+        # LATENCY flow. The native path is plain FIFO on the direct link:
+        # in (a) a small TTFT-critical fetch would queue behind bulk
+        # chunks with no arbitration; in (b) a small bulk copy would
+        # sneak onto the reserved link ahead of the latency flow. Both
+        # pay the per-chunk overhead to keep the class guarantees.
+        # (b) is direction-scoped: PCIe is full-duplex, so a D2H copy does
+        # not contend with an H2D latency flow's wire and may still take
+        # the native path.
+        protected = self.config.qos_enabled and (
+            task.traffic_class is TrafficClass.LATENCY
+            or (
+                self.config.qos_reserve_direct
+                and self.task_manager.has_active_flow(
+                    TrafficClass.LATENCY, task.target, task.direction
+                )
+            )
+        )
+        if (
+            task.nbytes < self.config.fallback_bytes
+            and not protected
+            and isinstance(self.backend, SimBackend)
         ):
-            # Small transfers bypass multipath (paper §3.2): one native DMA.
             self.stats.fallback_transfers += 1
-
-            def done() -> None:
-                task.state = TaskState.COMPLETE
-                task.complete_time = self.backend.now()
-                self.sync_engine.transfer_complete(task)
-                for cb in self._completion_listeners:
-                    cb(task)
-                if task.on_complete is not None:
-                    task.on_complete(task)
-
             self.backend.native_copy(
-                task.nbytes, task.target, task.direction, done,
+                task.nbytes, task.target, task.direction,
+                lambda: self._complete_now(task),
                 tag=f"fallback{task.task_id}",
             )
             return

@@ -26,7 +26,7 @@ from .engine import MMAEngine
 from .path_selector import Route
 from .task_launcher import Backend
 from .topology import Device, Topology
-from .transfer_task import Direction, MicroTask, TransferTask
+from .transfer_task import Direction, MicroTask, TrafficClass, TransferTask
 
 
 @dataclasses.dataclass
@@ -129,6 +129,7 @@ def multipath_device_put(
     arr: np.ndarray,
     target: int = 0,
     engine: Optional[MMAEngine] = None,
+    traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
 ) -> jax.Array:
     """H2D: move a host array to ``devices[target]`` over all paths."""
     eng = engine or make_functional_engine()
@@ -146,7 +147,7 @@ def multipath_device_put(
     )
     task = eng.memcpy(
         nbytes=arr.nbytes, device=target, direction=Direction.H2D,
-        src=payload, dst=assembler,
+        src=payload, dst=assembler, traffic_class=traffic_class,
     )
     assert assembler.complete(), "functional dispatch must complete inline"
     return assembler.result(payload.shape, payload.dtype)
@@ -156,6 +157,7 @@ def multipath_device_get(
     jarr: jax.Array,
     target: int = 0,
     engine: Optional[MMAEngine] = None,
+    traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
 ) -> np.ndarray:
     """D2H: fetch a device array back to host memory over all paths."""
     eng = engine or make_functional_engine()
@@ -166,6 +168,6 @@ def multipath_device_get(
     eng.config.chunk_bytes = max(item, (eng.config.chunk_bytes // item) * item)
     task = eng.memcpy(
         nbytes=out.nbytes, device=target, direction=Direction.D2H,
-        src=jarr.reshape(-1), dst=payload,
+        src=jarr.reshape(-1), dst=payload, traffic_class=traffic_class,
     )
     return out.reshape(shape)

@@ -17,6 +17,11 @@ capacity:
   * **Contention backoff** — a worker whose observed chunk service time
     exceeds ``backoff_factor`` x nominal pulls only when its queue is empty,
     yielding to latency-sensitive background traffic.
+  * **QoS class arbitration** — every pop is class-ordered (strict LATENCY
+    first, weighted-fair below); relay stealing serves higher classes across
+    all links before lower ones, and while a LATENCY flow is in flight its
+    destination's own link is reserved for that class
+    (``qos_reserve_direct``, the Table 2 direct-prioritization regime).
 """
 from __future__ import annotations
 
@@ -25,7 +30,7 @@ from typing import Callable, Dict, List, Optional, TYPE_CHECKING
 
 from .config import MMAConfig
 from .topology import Topology
-from .transfer_task import MicroTask, MicroTaskQueue
+from .transfer_task import MicroTask, MicroTaskQueue, TrafficClass
 
 if TYPE_CHECKING:  # pragma: no cover
     from .task_launcher import Backend
@@ -74,6 +79,9 @@ class LinkWorker:
         self.chunks_direct = 0
         self.chunks_relay = 0
         self.bytes_total = 0
+        self.bytes_by_class: Dict[TrafficClass, int] = {
+            c: 0 for c in TrafficClass
+        }
 
     # -- backpressure: effective pull capacity ---------------------------
     def _capacity(self) -> int:
@@ -97,6 +105,7 @@ class LinkWorker:
             else:
                 self.chunks_relay += 1
             self.bytes_total += mt.nbytes
+            self.bytes_by_class[mt.traffic_class] += mt.nbytes
             t0 = self.backend.now()
             self.backend.launch(
                 mt, route, lambda mt=mt, t0=t0: self._on_chunk_done(mt, t0)
@@ -163,52 +172,82 @@ class PathSelector:
                 return False
         return True
 
+    def _reserved_for_latency(self, dev: int) -> bool:
+        """Direct-path reservation: ``dev``'s own link carries only LATENCY
+        work while a LATENCY flow targeting ``dev`` is in flight.
+
+        Deliberately direction-agnostic: the worker's outstanding queue
+        (and pull loop) is shared across directions, so any pulled chunk
+        — even one on the physically independent reverse PCIe lane —
+        occupies a slot a newly split latency chunk would wait behind.
+        (The engine's fallback bypass IS direction-scoped; see
+        MMAEngine._activate.)"""
+        return (
+            self.config.qos_enabled
+            and self.config.qos_reserve_direct
+            and self.task_manager.has_active_flow(TrafficClass.LATENCY, dev)
+        )
+
     def select(self, worker: LinkWorker, direct_only: bool = False):
         """Pick the next micro-task for ``worker``'s link, or None.
 
         Returns (micro_task, route).
         """
         dev = worker.dev
-        # 1. Direct priority: serve our own destination first.
+        reserved = self._reserved_for_latency(dev)
+        # 1. Direct priority: serve our own destination first. The pop is
+        #    class-arbitrated (LATENCY chunks for our dest go before lower
+        #    classes); a reserved link pulls only LATENCY work.
         if self.config.direct_priority or direct_only:
-            mt = self.queue.pop_for_dest(dev)
+            mt = self.queue.pop_for_dest(
+                dev, TrafficClass.LATENCY if reserved else None
+            )
             if mt is not None:
                 return mt, Route(link_dev=dev, dest=dev)
         if direct_only:
             return None
 
-        # 2. Relay stealing.
-        dest = self._pick_relay_dest(worker)
-        if dest is not None:
-            mt = self.queue.pop_for_dest(dest)
-            if mt is not None:
-                return mt, Route(link_dev=dev, dest=dest)
+        # Class sweep order for stolen (relay) work: higher classes across
+        # all destinations before lower ones. A reserved link steals only
+        # LATENCY relay work; with QoS off, one class-agnostic FIFO pass.
+        if reserved:
+            classes: List[Optional[TrafficClass]] = [TrafficClass.LATENCY]
+        elif self.config.qos_enabled:
+            classes = list(self.queue.class_order())
+        else:
+            classes = [None]
 
-        # 3. Without direct priority, fall back to any pending destination
-        #    (including our own) — ablation mode for Table 2.
-        if not self.config.direct_priority:
-            dest = self.queue.any_dest()
-            if dest is not None and self._may_relay_for(dev, dest):
-                mt = self.queue.pop_for_dest(dest)
+        # 2. Class-ordered sweep. Within one class: relay stealing, then —
+        #    with direct priority ablated (Table 2) — any pending
+        #    destination including our own. Both steps sit inside the
+        #    class loop so a lower-class relay chunk can never be picked
+        #    while a higher-class chunk (e.g. for our own dest) waits.
+        for cls in classes:
+            dest = self._pick_relay_dest(worker, cls)
+            if dest is not None:
+                mt = self.queue.pop_for_dest(dest, cls)
                 if mt is not None:
                     return mt, Route(link_dev=dev, dest=dest)
+            if not self.config.direct_priority:
+                dest = self.queue.any_dest(cls)
+                if dest is not None and self._may_relay_for(dev, dest):
+                    mt = self.queue.pop_for_dest(dest, cls)
+                    if mt is not None:
+                        return mt, Route(link_dev=dev, dest=dest)
         return None
 
-    def _pick_relay_dest(self, worker: LinkWorker) -> Optional[int]:
+    def _pick_relay_dest(
+        self, worker: LinkWorker, cls: Optional[TrafficClass] = None
+    ) -> Optional[int]:
         dev = worker.dev
         if self.config.lrd_stealing:
-            # Longest-remaining-destination among destinations we may serve.
-            best, best_bytes = None, 0
-            for dest in list(self.workers) + [
-                d for d in self.queue._by_dest if d not in self.workers
-            ]:
-                if dest == dev or not self._may_relay_for(dev, dest):
-                    continue
-                b = self.queue.remaining_bytes(dest)
-                if b > best_bytes:
-                    best, best_bytes = dest, b
-            return best
-        dest = self.queue.any_dest()
+            # Longest-remaining-destination among destinations we may serve
+            # (within one traffic class when QoS arbitration is on).
+            return self.queue.longest_remaining_dest(
+                exclude=dev, cls=cls,
+                allow=lambda dest: self._may_relay_for(dev, dest),
+            )
+        dest = self.queue.any_dest(cls)
         if dest is not None and dest != dev and self._may_relay_for(dev, dest):
             return dest
         return None

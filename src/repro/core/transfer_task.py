@@ -6,6 +6,13 @@ its destination device, and tracks distributed completion: the original
 transfer is complete only when every micro-task has landed, at which point
 the Sync Engine is notified (releasing the stream-visible Dummy Task for
 asynchronous copies, or waking the blocked caller for synchronous ones).
+
+QoS: every task carries a ``TrafficClass``. The micro-task queue keeps one
+FIFO per (class, destination) and arbitrates classes at every pop —
+strict priority for LATENCY, weighted fair queueing (virtual-time stride
+scheduling on bytes served) among the rest — so a background model wake
+cannot starve a TTFT-critical prefix-cache fetch sharing the same engine
+(the Fig 9 contention regime with Table 2-style prioritization).
 """
 from __future__ import annotations
 
@@ -13,7 +20,7 @@ import dataclasses
 import enum
 import itertools
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from .config import MMAConfig
 
@@ -21,6 +28,19 @@ from .config import MMAConfig
 class Direction(enum.Enum):
     H2D = "h2d"
     D2H = "d2h"
+
+
+class TrafficClass(enum.IntEnum):
+    """QoS class of a transfer (lower value = higher priority).
+
+    LATENCY     — TTFT-critical: prefix-KV fetch, preemption resume.
+    THROUGHPUT  — bulk but user-visible: weight sleep/wake, checkpoints.
+    BACKGROUND  — opportunistic: KV offload, eviction, prefetch.
+    """
+
+    LATENCY = 0
+    THROUGHPUT = 1
+    BACKGROUND = 2
 
 
 class TaskState(enum.Enum):
@@ -40,6 +60,7 @@ class TransferTask:
     target: int                      # destination (H2D) / source (D2H) device
     direction: Direction
     sync: bool = False               # blocking (cudaMemcpy) vs async
+    traffic_class: TrafficClass = TrafficClass.THROUGHPUT
     task_id: int = dataclasses.field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.RECORDED
     # Host/device payload handles — opaque to the scheduler; the functional
@@ -82,56 +103,182 @@ class MicroTask:
     def direction(self) -> Direction:
         return self.parent.direction
 
+    @property
+    def traffic_class(self) -> TrafficClass:
+        return self.parent.traffic_class
+
 
 class MicroTaskQueue:
-    """Destination-tagged micro-task queue (paper §3.4.1).
+    """Destination- and class-tagged micro-task queue (paper §3.4.1 + QoS).
 
-    Organized per destination so the Path Selector can (a) serve a link's
-    own destination first (direct priority) and (b) steal relay work from
-    the destination with the most remaining data (longest-remaining-
-    destination policy).
+    Organized per (traffic class, destination) so the Path Selector can
+    (a) serve a link's own destination first (direct priority), (b) steal
+    relay work from the destination with the most remaining data (longest-
+    remaining-destination policy), and (c) arbitrate traffic classes at
+    every pop:
+
+      * strict priority — LATENCY is always served before lower classes
+        (``qos_strict_latency``);
+      * weighted fair queueing — remaining classes share by configured
+        weights via virtual-time stride scheduling: each class accrues
+        ``bytes / weight`` of virtual time when served, and the class with
+        the least virtual time goes next;
+      * with QoS disabled the queue degrades to exact arrival-order FIFO
+        (the pre-QoS baseline, used as the benchmark control).
     """
 
-    def __init__(self) -> None:
-        self._by_dest: Dict[int, Deque[MicroTask]] = {}
-        self._remaining_bytes: Dict[int, int] = {}
+    def __init__(self, config: Optional[MMAConfig] = None) -> None:
+        self.config = config or MMAConfig()
+        self._by_class_dest: Dict[
+            TrafficClass, Dict[int, Deque[Tuple[int, MicroTask]]]
+        ] = {c: {} for c in TrafficClass}
+        self._remaining: Dict[Tuple[TrafficClass, int], int] = {}
+        self._vtime: Dict[TrafficClass, float] = {c: 0.0 for c in TrafficClass}
+        self._arrivals = itertools.count()
 
+    # -- class arbitration ----------------------------------------------
+    def _weight(self, cls: TrafficClass) -> float:
+        return max(self.config.class_weight(cls), 1e-9)
+
+    def _active_classes(self, dest: Optional[int]):
+        """Classes with pending work (for ``dest``, or anywhere)."""
+        for cls, by_dest in self._by_class_dest.items():
+            if dest is None:
+                if any(by_dest.values()):
+                    yield cls
+            elif by_dest.get(dest):
+                yield cls
+
+    def _head_arrival(self, cls: TrafficClass, dest: Optional[int]) -> int:
+        by_dest = self._by_class_dest[cls]
+        if dest is not None:
+            return by_dest[dest][0][0]
+        return min(q[0][0] for q in by_dest.values() if q)
+
+    def class_order(self, dest: Optional[int] = None) -> List[TrafficClass]:
+        """Pending classes in arbitration order (highest priority first).
+
+        QoS on: strict LATENCY first (if enabled), then ascending WFQ
+        virtual time. QoS off: ascending head arrival time (global FIFO).
+        """
+        active = list(self._active_classes(dest))
+        if not active:
+            return []
+        if not self.config.qos_enabled:
+            return sorted(active, key=lambda c: self._head_arrival(c, dest))
+        order = sorted(active, key=lambda c: (self._vtime[c],
+                                              self._head_arrival(c, dest)))
+        if (self.config.qos_strict_latency
+                and TrafficClass.LATENCY in active):
+            order = [TrafficClass.LATENCY] + [
+                c for c in order if c is not TrafficClass.LATENCY
+            ]
+        return order
+
+    # -- queue operations -------------------------------------------------
     def push(self, mt: MicroTask) -> None:
-        self._by_dest.setdefault(mt.dest, deque()).append(mt)
-        self._remaining_bytes[mt.dest] = (
-            self._remaining_bytes.get(mt.dest, 0) + mt.nbytes
-        )
+        cls = mt.traffic_class
+        by_dest = self._by_class_dest[cls]
+        if self.is_empty():
+            # Whole backlog drained: the WFQ busy period is over. Reset all
+            # virtual times so credit/debt earned while classes ran solo
+            # does not starve (or favor) anyone when contention returns.
+            self._vtime = {c: 0.0 for c in TrafficClass}
+        elif not any(by_dest.values()):
+            # Class (re)activates into a busy system: advance its virtual
+            # time to the busiest active floor so an idle class cannot
+            # hoard credit and then monopolize the links (standard WFQ
+            # re-activation rule).
+            floor = [self._vtime[c] for c in self._active_classes(None)
+                     if c is not cls]
+            if floor:
+                self._vtime[cls] = max(self._vtime[cls], min(floor))
+        by_dest.setdefault(mt.dest, deque()).append((next(self._arrivals), mt))
+        key = (cls, mt.dest)
+        self._remaining[key] = self._remaining.get(key, 0) + mt.nbytes
 
-    def pop_for_dest(self, dest: int) -> Optional[MicroTask]:
-        q = self._by_dest.get(dest)
+    def pop_for_dest(
+        self, dest: int, cls: Optional[TrafficClass] = None
+    ) -> Optional[MicroTask]:
+        """Pop the next micro-task for ``dest``; ``cls=None`` arbitrates
+        across classes, a given ``cls`` pops only that class."""
+        if cls is None:
+            order = self.class_order(dest)
+            if not order:
+                return None
+            cls = order[0]
+        q = self._by_class_dest[cls].get(dest)
         if not q:
             return None
-        mt = q.popleft()
-        self._remaining_bytes[dest] -= mt.nbytes
+        _, mt = q.popleft()
+        self._remaining[(cls, dest)] -= mt.nbytes
+        self._vtime[cls] += mt.nbytes / self._weight(cls)
         return mt
 
-    def remaining_bytes(self, dest: int) -> int:
-        return self._remaining_bytes.get(dest, 0)
+    def remaining_bytes(
+        self, dest: int, cls: Optional[TrafficClass] = None
+    ) -> int:
+        if cls is not None:
+            return self._remaining.get((cls, dest), 0)
+        return sum(
+            self._remaining.get((c, dest), 0) for c in TrafficClass
+        )
 
-    def longest_remaining_dest(self, exclude: int) -> Optional[int]:
-        """Destination with the most pending bytes, excluding ``exclude``."""
+    def longest_remaining_dest(
+        self,
+        exclude: int,
+        cls: Optional[TrafficClass] = None,
+        allow: Optional[Callable[[int], bool]] = None,
+    ) -> Optional[int]:
+        """Destination with the most pending bytes, excluding ``exclude``
+        (optionally within one traffic class and/or filtered by an
+        ``allow`` predicate, e.g. the selector's relay-eligibility rule)."""
         best, best_bytes = None, 0
-        for dest, q in self._by_dest.items():
-            if dest == exclude or not q:
+        for dest in self.pending_dests(cls):
+            if dest == exclude or (allow is not None and not allow(dest)):
                 continue
-            b = self._remaining_bytes[dest]
+            b = self.remaining_bytes(dest, cls)
             if b > best_bytes:
                 best, best_bytes = dest, b
         return best
 
-    def any_dest(self) -> Optional[int]:
-        for dest, q in self._by_dest.items():
-            if q:
-                return dest
-        return None
+    def pending_dests(self, cls: Optional[TrafficClass] = None) -> List[int]:
+        out = []
+        classes = TrafficClass if cls is None else (cls,)
+        for c in classes:
+            for dest, q in self._by_class_dest[c].items():
+                if q and dest not in out:
+                    out.append(dest)
+        return out
+
+    def _oldest_head_dest(self, classes) -> Optional[int]:
+        best, best_stamp = None, None
+        for c in classes:
+            for dest, q in self._by_class_dest[c].items():
+                if q and (best_stamp is None or q[0][0] < best_stamp):
+                    best, best_stamp = dest, q[0][0]
+        return best
+
+    def any_dest(self, cls: Optional[TrafficClass] = None) -> Optional[int]:
+        """Some destination with pending work. ``cls=None`` follows the
+        arbitration policy: top class first under QoS, globally oldest
+        arrival under FIFO — so the FIFO baseline cannot leak class
+        priority through destination choice."""
+        if cls is None:
+            if not self.config.qos_enabled:
+                return self._oldest_head_dest(TrafficClass)
+            order = self.class_order()
+            if not order:
+                return None
+            cls = order[0]
+        return self._oldest_head_dest((cls,))
 
     def __len__(self) -> int:
-        return sum(len(q) for q in self._by_dest.values())
+        return sum(
+            len(q)
+            for by_dest in self._by_class_dest.values()
+            for q in by_dest.values()
+        )
 
     def is_empty(self) -> bool:
         return len(self) == 0
@@ -143,10 +290,17 @@ class TaskManager:
 
     def __init__(self, config: MMAConfig) -> None:
         self.config = config
-        self.queue = MicroTaskQueue()
+        self.queue = MicroTaskQueue(config)
         self._outstanding: Dict[int, int] = {}   # task_id -> incomplete chunks
         self._tasks: Dict[int, TransferTask] = {}
         self._completion_cbs: List[Callable[[TransferTask], None]] = []
+        # (class, dest, direction) -> number of incomplete TransferTasks;
+        # drives the direct-path reservation (a dest's own link stays
+        # dedicated to a LATENCY flow for the flow's whole lifetime, not
+        # just while its chunks sit unpopped).
+        self._active_flows: Dict[
+            Tuple[TrafficClass, int, Direction], int
+        ] = {}
 
     def add_completion_listener(self, cb: Callable[[TransferTask], None]) -> None:
         self._completion_cbs.append(cb)
@@ -164,9 +318,27 @@ class TaskManager:
             seq += 1
         self._outstanding[task.task_id] = len(micro)
         self._tasks[task.task_id] = task
+        key = (task.traffic_class, task.target, task.direction)
+        self._active_flows[key] = self._active_flows.get(key, 0) + 1
         for mt in micro:
             self.queue.push(mt)
         return micro
+
+    def has_active_flow(
+        self,
+        cls: TrafficClass,
+        dest: int,
+        direction: Optional[Direction] = None,
+    ) -> bool:
+        """Any incomplete TransferTask of ``cls`` targeting ``dest``
+        (optionally restricted to one direction — PCIe is full-duplex,
+        so e.g. the fallback bypass only applies same-direction)?"""
+        if direction is not None:
+            return self._active_flows.get((cls, dest, direction), 0) > 0
+        return any(
+            n > 0 for (c, d, _), n in self._active_flows.items()
+            if c is cls and d == dest
+        )
 
     def micro_task_done(self, mt: MicroTask, now: float) -> None:
         """Called by the Task Launcher when a micro-task's last hop lands."""
@@ -175,6 +347,10 @@ class TaskManager:
         if self._outstanding[tid] == 0:
             task = self._tasks.pop(tid)
             del self._outstanding[tid]
+            key = (task.traffic_class, task.target, task.direction)
+            self._active_flows[key] -= 1
+            if self._active_flows[key] == 0:
+                del self._active_flows[key]
             task.state = TaskState.COMPLETE
             task.complete_time = now
             for cb in self._completion_cbs:

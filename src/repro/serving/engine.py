@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import Direction, MMAEngine, make_sim_engine
+from ..core import Direction, MMAEngine, TrafficClass, make_sim_engine
 from ..core.config import GB, MMAConfig
 from ..models import decode_step, init_params, prefill
 from .kv_cache import KVCacheManager, kv_bytes_per_token
@@ -67,7 +67,22 @@ class LatencyModel:
         self.tp = tp_degree
 
     # -- transfers (fresh simulator per call for timing isolation) -------
-    def transfer_seconds(self, nbytes: int, direction: Direction) -> float:
+    def transfer_seconds(
+        self,
+        nbytes: int,
+        direction: Direction,
+        traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+    ) -> float:
+        """Time one transfer on a fresh, otherwise-idle simulator.
+
+        ``traffic_class`` tags the flow so callers on a *shared* engine
+        (or a future trace-driven contention sim) inherit the right
+        class. With a fresh simulator there is no competing traffic, so
+        the class does not affect arbitration here; the one observable
+        difference is that LATENCY transfers below ``fallback_bytes``
+        are timed as chunked multipath rather than the native fallback
+        (they are exempt from it — see MMAEngine._activate).
+        """
         eng, world, backend = make_sim_engine()
         if not self.use_mma:
             res: Dict = {}
@@ -79,7 +94,10 @@ class LatencyModel:
         # TP group members are unavailable as relays (paper §6)
         if self.tp > 1:
             eng.set_relay_devices(list(range(self.tp, 8)))
-        task = eng.memcpy(nbytes, device=0, direction=direction)
+        task = eng.memcpy(
+            nbytes, device=0, direction=direction,
+            traffic_class=traffic_class,
+        )
         world.run()
         return task.elapsed
 
@@ -106,7 +124,10 @@ class LatencyModel:
         fetch_bytes = context_tokens * kv_bytes_per_token(
             self.cfg, self.kv_dtype_size
         )
-        fetch_s = self.transfer_seconds(fetch_bytes, Direction.H2D)
+        fetch_s = self.transfer_seconds(
+            fetch_bytes, Direction.H2D,
+            traffic_class=TrafficClass.LATENCY,
+        )
         compute_s = (
             self.prefill_seconds(suffix_tokens, kv_context=context_tokens)
             + self.decode_step_seconds()
@@ -178,7 +199,10 @@ class FunctionalServer:
     def _prefill(self, req: Request) -> None:
         t0 = time.monotonic()
         toks = jnp.asarray(req.tokens)[None]
-        hit, task, payload = self.kv.fetch(req.tokens)
+        hit, task, payload = self.kv.fetch(
+            req.tokens,
+            traffic_class=self.scheduler.transfer_class_for(req, "fetch"),
+        )
         self.sim_world.run()
         if hit:
             # The hit KV is fetched through the engine (sim-timed). The
@@ -220,7 +244,12 @@ class FunctionalServer:
                 full = np.concatenate(
                     [req.tokens, np.asarray(req.generated[:-1], np.int32)]
                 )
-                self.kv.offload(full, payload=None)
+                self.kv.offload(
+                    full, payload=None,
+                    traffic_class=self.scheduler.transfer_class_for(
+                        req, "offload"
+                    ),
+                )
                 self.sim_world.run()
                 self.transfer_log.append(("offload", len(full)))
                 self.scheduler.finish(req)

@@ -23,7 +23,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from ..core import Direction, MMAEngine
+from ..core import Direction, MMAEngine, TrafficClass
 
 
 def kv_bytes_per_token(cfg, dtype_size: int = 2) -> int:
@@ -129,7 +129,15 @@ class PrefixCache:
 
 
 class KVCacheManager:
-    """Device-byte accounting + offload/fetch through the MMA engine."""
+    """Device-byte accounting + offload/fetch through the MMA engine.
+
+    QoS: prefix-cache fetches are TTFT-critical (``LATENCY`` class);
+    offloads drain opportunistically (``BACKGROUND``), so a fetch is never
+    starved by eviction traffic sharing the engine.
+    """
+
+    FETCH_CLASS = TrafficClass.LATENCY
+    OFFLOAD_CLASS = TrafficClass.BACKGROUND
 
     def __init__(
         self,
@@ -165,15 +173,21 @@ class KVCacheManager:
 
     # -- movement through MMA -------------------------------------------
     def offload(
-        self, tokens: np.ndarray, payload: Any = None
+        self,
+        tokens: np.ndarray,
+        payload: Any = None,
+        traffic_class: Optional[TrafficClass] = None,
     ) -> Tuple[str, object]:
         """D2H: evict this sequence's KV to the host pool. Returns
         (prefix key, transfer task)."""
         nbytes = len(tokens) * self.bytes_per_token + ssm_state_bytes(
             self.cfg, 1, self.kv_dtype_size
         )
+        if traffic_class is None:
+            traffic_class = self.OFFLOAD_CLASS
         task = self.engine.memcpy(
-            nbytes, device=self.target, direction=Direction.D2H
+            nbytes, device=self.target, direction=Direction.D2H,
+            traffic_class=traffic_class,
         )
         key = self.prefix.store(
             tokens, nbytes, payload=payload,
@@ -182,15 +196,22 @@ class KVCacheManager:
         self.release_if_admitted(len(tokens))
         return key, task
 
-    def fetch(self, tokens: np.ndarray) -> Tuple[int, object, Any]:
+    def fetch(
+        self,
+        tokens: np.ndarray,
+        traffic_class: Optional[TrafficClass] = None,
+    ) -> Tuple[int, object, Any]:
         """H2D: longest-prefix hit fetched back to the device. Returns
         (hit_tokens, transfer task or None, payload)."""
         hit, entry = self.prefix.match(tokens)
         if hit == 0:
             return 0, None, None
         nbytes = hit * self.bytes_per_token
+        if traffic_class is None:
+            traffic_class = self.FETCH_CLASS
         task = self.engine.memcpy(
-            nbytes, device=self.target, direction=Direction.H2D
+            nbytes, device=self.target, direction=Direction.H2D,
+            traffic_class=traffic_class,
         )
         self.admit(hit)
         return hit, task, entry.payload

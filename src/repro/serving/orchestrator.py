@@ -20,7 +20,7 @@ from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 from ..configs.base import ModelConfig
-from ..core import Direction, MMAConfig, SimWorld, make_sim_engine
+from ..core import Direction, MMAConfig, SimWorld, TrafficClass, make_sim_engine
 from ..core.engine import MMAEngine
 from ..core.task_launcher import SimBackend
 from ..core.topology import h20_server
@@ -86,11 +86,16 @@ class Orchestrator:
         self.events: List[Tuple[float, str, str]] = []
 
     # ------------------------------------------------------------------
-    def _transfer_s(self, nbytes: int, direction: Direction) -> float:
+    def _transfer_s(
+        self,
+        nbytes: int,
+        direction: Direction,
+        traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+    ) -> float:
         # any latency model can time raw transfers; they share the link sim
         lm = next(iter(self.latency.values()))
         lm.use_mma = self.use_mma
-        return lm.transfer_seconds(nbytes, direction)
+        return lm.transfer_seconds(nbytes, direction, traffic_class)
 
     def _evict_until_fits(self, need: int) -> float:
         """LRU sleep until ``need`` bytes fit. Returns sleep seconds."""
@@ -103,7 +108,11 @@ class Orchestrator:
             )
             if lru is None:
                 raise MemoryError("budget too small for any model")
-            t = self._transfer_s(lru.nbytes, Direction.D2H)
+            # Sleep-to-evict is weight traffic: THROUGHPUT class (a tag
+            # only — each event is timed on an idle per-event simulator).
+            t = self._transfer_s(
+                lru.nbytes, Direction.D2H, TrafficClass.THROUGHPUT
+            )
             total += t
             lru.resident = False
             self.resident_bytes -= lru.nbytes
@@ -115,7 +124,9 @@ class Orchestrator:
         if inst.resident:
             return 0.0
         t = self._evict_until_fits(inst.nbytes)
-        t += self._transfer_s(inst.nbytes, Direction.H2D)
+        t += self._transfer_s(
+            inst.nbytes, Direction.H2D, TrafficClass.THROUGHPUT
+        )
         inst.resident = True
         self.resident_bytes += inst.nbytes
         self.events.append((self.clock, "wake", name))

@@ -1,6 +1,12 @@
 """Request scheduler: FCFS admission with KV-budget awareness and
 preemption-by-offload (evict a running request's KV to host through MMA,
-resume it later with a multipath fetch)."""
+resume it later with a multipath fetch).
+
+QoS: a preemption offload is BACKGROUND traffic (the victim is already
+stalled; draining it must not contend with live requests), while the
+resume fetch is LATENCY-class — the request's clock is running again and
+the fetch sits on its TTFT-to-next-token path.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,6 +15,9 @@ from collections import deque
 from typing import Deque, Dict, List, Optional
 
 import numpy as np
+
+from ..core import TrafficClass
+from .kv_cache import KVCacheManager
 
 _req_ids = itertools.count()
 
@@ -25,6 +34,7 @@ class Request:
     context: Optional[object] = None   # engine-private (caches, cache_len)
     ttft: Optional[float] = None
     hit_tokens: int = 0
+    resumed: bool = False              # re-admitted after preemption
 
     @property
     def n_tokens(self) -> int:
@@ -35,6 +45,14 @@ class Request:
 
 
 class Scheduler:
+    # Traffic classes for the transfers this scheduler causes; the serving
+    # engine passes them to KVCacheManager.offload/fetch. Anchored to the
+    # KV manager's constants so direct KV users and the scheduled path
+    # cannot drift apart; RESUME_CLASS is the scheduler's own knob.
+    OFFLOAD_CLASS = KVCacheManager.OFFLOAD_CLASS
+    PREFILL_FETCH_CLASS = KVCacheManager.FETCH_CLASS
+    RESUME_CLASS = TrafficClass.LATENCY
+
     def __init__(self, kv_manager, max_running: int = 4) -> None:
         self.kv = kv_manager
         self.max_running = max_running
@@ -62,10 +80,24 @@ class Scheduler:
         newly admitted requests (they need prefill or resume-fetch)."""
         admitted: List[Request] = []
         while self.preempted and self._admit(self.preempted[0]):
-            admitted.append(self.preempted.popleft())
+            req = self.preempted.popleft()
+            req.resumed = True
+            admitted.append(req)
         while self.waiting and self._admit(self.waiting[0]):
             admitted.append(self.waiting.popleft())
         return admitted
+
+    def transfer_class_for(self, req: Request, kind: str) -> TrafficClass:
+        """Class for a transfer on behalf of ``req``: offloads drain in
+        the background; a resume fetch (request clock already running)
+        and an admission prefix fetch (TTFT path) are both
+        latency-critical, kept as separate knobs so a policy can demote
+        one without the other."""
+        if kind not in ("offload", "fetch"):
+            raise ValueError(f"unknown transfer kind {kind!r}")
+        if kind == "offload":
+            return self.OFFLOAD_CLASS
+        return self.RESUME_CLASS if req.resumed else self.PREFILL_FETCH_CLASS
 
     def preempt_one(self) -> Optional[Request]:
         """Evict the youngest running request (offload its KV to host)."""

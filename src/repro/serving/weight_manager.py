@@ -15,7 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from ..core import Direction, MMAEngine
+from ..core import Direction, MMAEngine, TrafficClass
 from ..core.jax_backend import JaxBackend, multipath_device_get, multipath_device_put
 
 
@@ -27,7 +27,14 @@ class TransferReport:
 
 
 class WeightManager:
-    """Tracks one model instance's weights across GPU/host residency."""
+    """Tracks one model instance's weights across GPU/host residency.
+
+    QoS: sleep/wake moves are bulk-but-user-visible (``THROUGHPUT``
+    class) — they yield to LATENCY prefix fetches but outweigh
+    BACKGROUND eviction traffic.
+    """
+
+    TRANSFER_CLASS = TrafficClass.THROUGHPUT
 
     def __init__(
         self,
@@ -52,7 +59,8 @@ class WeightManager:
 
     def _run_sim(self, direction: Direction) -> TransferReport:
         task = self.engine.memcpy(
-            self.nbytes, device=self.target, direction=direction
+            self.nbytes, device=self.target, direction=direction,
+            traffic_class=self.TRANSFER_CLASS,
         )
         world = self.engine.backend.world  # type: ignore[attr-defined]
         world.run()
@@ -68,7 +76,10 @@ class WeightManager:
         if self.functional:
             t0 = time.monotonic()
             self._host_copy = jax.tree.map(
-                lambda l: multipath_device_get(l, engine=self.engine),
+                lambda l: multipath_device_get(
+                    l, engine=self.engine,
+                    traffic_class=self.TRANSFER_CLASS,
+                ),
                 self.params,
             )
             self.params = None
@@ -87,7 +98,8 @@ class WeightManager:
             t0 = time.monotonic()
             self.params = jax.tree.map(
                 lambda l: multipath_device_put(
-                    np.asarray(l), target=self.target, engine=self.engine
+                    np.asarray(l), target=self.target, engine=self.engine,
+                    traffic_class=self.TRANSFER_CLASS,
                 ),
                 self._host_copy,
             )

@@ -18,6 +18,15 @@ from repro.training import AdamWConfig, TrainConfig, make_train_step, init_adamw
 
 ALL_ARCHS = sorted(ARCHS)
 
+# Archs whose reduced train step still exceeds ~30 s on CI hardware; the
+# fast tier skips them (the slow tier and the forward/serve smokes keep
+# covering the family).
+SLOW_TRAIN_ARCHS = {"jamba-1.5-large-398b"}
+TRAIN_ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in SLOW_TRAIN_ARCHS else a
+    for a in ALL_ARCHS
+]
+
 
 def _batch(cfg, B=2, S=32, seed=0):
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)
@@ -66,7 +75,7 @@ def test_forward_shapes_and_finite(name):
     assert bool(jnp.isfinite(aux))
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+@pytest.mark.parametrize("name", TRAIN_ARCH_PARAMS)
 def test_one_train_step(name):
     cfg = dataclasses.replace(get_config(name).reduced(), dtype=jnp.float32)
     params = init_params(jax.random.PRNGKey(0), cfg)

@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow       # full tier; CI fast job skips these
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -9,6 +9,9 @@ reproducing and these fail.
 import pytest
 
 from repro.core import Direction, MMAConfig, SimWorld, make_sim_engine
+
+# Not slow-marked: the whole suite runs in ~1 s against the virtual-time
+# simulator, and paper-claim regressions should gate merges (fast tier).
 from repro.core.config import GB, MB
 from repro.core.engine import MMAEngine
 from repro.core.task_launcher import SimBackend

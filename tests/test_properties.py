@@ -2,6 +2,11 @@
 scheduler delivery guarantees, simulator capacity conservation, prefix-
 cache matching, ring-buffer positions."""
 import numpy as np
+import pytest
+
+# hypothesis is a dev extra (pip install -e ".[dev]"); degrade to a skip
+# rather than a suite-wide collection error when it is absent.
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

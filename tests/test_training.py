@@ -25,6 +25,8 @@ from repro.training import (
     train,
 )
 
+pytestmark = pytest.mark.slow       # full tier; CI fast job skips these
+
 
 def small_cfg():
     return dataclasses.replace(
