@@ -1,0 +1,104 @@
+"""CI bench-regression gate: compare a PR's benchmark JSON (written by
+``benchmarks.run --json``) against the checked-in baseline.
+
+  PYTHONPATH=src python -m benchmarks.bench_gate BENCH_pr.json \
+      BENCH_baseline.json [--tolerance 0.15]
+
+Semantics (deliberately asymmetric):
+  * hard failure (exit 1) — the PR run crashed: missing/unreadable PR
+    file, or any ``*.FAILED`` row (benchmarks.run records one per
+    benchmark module that raised);
+  * soft warning (exit 0) — a comparable metric drifted beyond the
+    tolerance, or a baseline metric disappeared. Printed as GitHub
+    ``::warning::`` annotations so the job stays green but the drift is
+    visible on the PR. Timing noise on shared CI runners makes a hard
+    timing gate flakier than it is useful; crashes are the only thing a
+    PR must not ship.
+
+To refresh the baseline after an intentional perf change, run the bench
+job's command locally and commit the result (see README "CI bench gate").
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Optional
+
+
+def load(path: str) -> Optional[Dict]:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"cannot read {path}: {e}")
+        return None
+    return data if isinstance(data, dict) else None
+
+
+def numeric(entry) -> Optional[float]:
+    if isinstance(entry, dict):
+        v = entry.get("value")
+        return float(v) if isinstance(v, (int, float)) else None
+    return float(entry) if isinstance(entry, (int, float)) else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("pr_json")
+    ap.add_argument("baseline_json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="relative drift that triggers a warning")
+    args = ap.parse_args(argv)
+
+    pr = load(args.pr_json)
+    if pr is None:
+        print("::error::bench gate: PR benchmark output missing/unreadable "
+              "— the bench run crashed")
+        return 1
+    failed = sorted(k for k in pr if k.endswith(".FAILED"))
+    if failed:
+        for k in failed:
+            print(f"::error::bench gate: benchmark crashed: {k} "
+                  f"({pr[k].get('derived', '')})")
+        return 1
+
+    base = load(args.baseline_json)
+    if base is None:
+        # a missing baseline is a repo-state problem, not a PR regression
+        print(f"::warning::bench gate: no baseline at {args.baseline_json}; "
+              "skipping comparison (commit one to enable the gate)")
+        return 0
+
+    warned = 0
+    compared = 0
+    for key in sorted(base):
+        if key.endswith(".FAILED"):
+            continue
+        b = numeric(base[key])
+        if b is None:
+            continue
+        if key not in pr:
+            print(f"::warning::bench gate: metric disappeared: {key}")
+            warned += 1
+            continue
+        p = numeric(pr[key])
+        if p is None:
+            print(f"::warning::bench gate: metric no longer numeric: {key}")
+            warned += 1
+            continue
+        compared += 1
+        denom = max(abs(b), 1e-12)
+        drift = (p - b) / denom
+        if abs(drift) > args.tolerance:
+            print(f"::warning::bench gate: {key} drifted {drift:+.1%} "
+                  f"(baseline {b:g} -> PR {p:g}, tol ±{args.tolerance:.0%})")
+            warned += 1
+    print(f"bench gate: compared {compared} metrics, "
+          f"{warned} warning(s), tolerance ±{args.tolerance:.0%} "
+          "(warnings are non-blocking; crashes fail the job)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,13 +52,31 @@ class CSV:
 
     def __init__(self) -> None:
         self.rows: List[str] = []
+        self._records: List[tuple] = []      # (name, us, derived)
 
     def add(self, name: str, us_per_call: float, derived: str = "") -> None:
         self.rows.append(f"{name},{us_per_call:.3f},{derived}")
+        self._records.append((name, us_per_call, derived))
 
     def emit(self) -> None:
         for r in self.rows:
             print(r)
+
+    def to_dict(self) -> Dict[str, Dict]:
+        """{name: {value, derived}} for the CI bench gate. ``value`` is
+        the numeric payload: us_per_call when nonzero, else the derived
+        string when it parses as a float (several benchmarks stash their
+        headline number there), else None (not comparable)."""
+        out: Dict[str, Dict] = {}
+        for name, us, derived in self._records:
+            value = us if us else None
+            if value is None and derived:
+                try:
+                    value = float(derived)
+                except ValueError:
+                    value = None
+            out[name] = {"value": value, "derived": derived}
+        return out
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

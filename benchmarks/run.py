@@ -1,11 +1,14 @@
 """Benchmark harness: one module per paper table/figure, plus the roofline
-report. Prints ``name,us_per_call,derived`` CSV at the end.
+report. Prints ``name,us_per_call,derived`` CSV at the end; ``--json``
+additionally writes the rows as JSON for the CI bench-regression gate
+(see benchmarks/bench_gate.py and the README "CI bench gate" section).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig7,fig12]
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,fig12] [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,6 +27,7 @@ MODULES = [
     ("fig16", "fig16_fallback"),
     ("table2", "table2_direct_priority"),
     ("qos", "qos_contention"),
+    ("slo", "slo_trace"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),
@@ -35,6 +39,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated figure keys (e.g. fig7,fig12)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (CI bench gate input)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -57,6 +63,10 @@ def main() -> None:
     print(f"# CSV (name,us_per_call,derived) — total "
           f"{time.monotonic() - t0:.0f}s")
     csv.emit()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(csv.to_dict(), f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,15 @@ workloads").
 Synthetic trace: Poisson arrivals over a 4-model zoo (Qwen 0.6B/4B/7B/32B)
 with Zipf-ish model popularity and multi-turn sessions whose follow-up
 turns hit the prefix cache (16k-64k contexts). Served on one H20 under a
-40 GB weight budget (forces sleep/wake churn). Reported: TTFT p50/p95 and
-total makespan, native vs MMA.
+40 GB weight budget (forces sleep/wake churn). Requests belong to SLO
+tenants (interactive tenants carry TTFT deadlines; batch is best-effort).
+Reported: TTFT p50/p95, per-tenant deadline hit rate, and total makespan,
+native vs MMA.
+
+Note: the orchestrator times each transfer on a fresh idle simulator, so
+the per-tenant hit rates here measure queueing + wake + fetch latency
+against the deadlines (native vs MMA); engine-level EDF/escalation
+effects under *shared-engine* contention are measured by slo_trace.py.
 """
 import numpy as np
 
@@ -21,20 +28,32 @@ BUDGET = 80 << 30      # H20 96 GB HBM minus KV/activations headroom
 N_REQUESTS = 60
 RATE_HZ = 0.5           # mean arrival rate
 SEED = 7
+# tenant mix: (probability, TTFT budget seconds or None = best-effort)
+TENANT_SLOS = {
+    "interactive": (0.5, 8.0),
+    "standard": (0.3, 20.0),
+    "batch": (0.2, None),
+}
 
 
 def make_trace() -> list:
     rng = np.random.default_rng(SEED)
     t = 0.0
     reqs = []
+    tenants = list(TENANT_SLOS)
+    probs = [TENANT_SLOS[k][0] for k in tenants]
     for _ in range(N_REQUESTS):
         t += rng.exponential(1.0 / RATE_HZ)
         model = MODELS[rng.choice(len(MODELS), p=POPULARITY)]
         follow_up = rng.random() < 0.55       # multi-turn: prefix hit
         ctx = int(rng.choice([16_384, 32_768, 65_536])) if follow_up else 0
+        tenant = tenants[rng.choice(len(tenants), p=probs)]
+        budget = TENANT_SLOS[tenant][1]
         reqs.append(ServedRequest(
             model=model, arrival=t, context_tokens=ctx,
             new_tokens=int(rng.integers(32, 256)),
+            tenant=tenant,
+            deadline=None if budget is None else t + budget,
         ))
     return reqs
 
@@ -56,6 +75,14 @@ def run(csv: CSV) -> None:
               f"makespan {orch.clock:7.1f}s  wake-ups {wakes}")
         csv.add(f"trace.{tag}.ttft_p95_s",
                 float(np.percentile(ttfts, 95)) * 1e6, f"wakes={wakes}")
+        for tenant, rep in Orchestrator.slo_report(served).items():
+            hr = rep["hit_rate"]
+            print(f"    {tenant:12s} n={rep['n']:2d} "
+                  f"ttft p95 {rep['ttft_p95_s']:6.3f}s  "
+                  + (f"deadline hits {rep['hits']}/{rep['deadlined']}"
+                     if hr is not None else "best-effort"))
+            if hr is not None:
+                csv.add(f"trace.{tag}.{tenant}.hit_rate", 0.0, f"{hr:.4f}")
     p95 = results["native"][0], results["MMA"][0]
     print(f"p95 TTFT speedup {np.percentile(p95[0], 95) / np.percentile(p95[1], 95):.2f}x, "
           f"p50 {np.percentile(p95[0], 50) / np.percentile(p95[1], 50):.2f}x "

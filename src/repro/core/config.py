@@ -84,6 +84,42 @@ class MMAConfig:
     # will not fill its outstanding queue with relay chunks that a newly
     # split latency burst would then wait behind.
     qos_reserve_direct: bool = True
+    # ---- Deadline / SLO scheduling --------------------------------------
+    # Earliest-deadline-first ordering of same-class pops: micro-tasks of
+    # deadlined transfers are served in absolute-deadline order (deadline-
+    # less transfers keep arrival order, after all deadlined ones).
+    qos_deadline_edf: bool = True
+    # Slack-based escalation: a THROUGHPUT/BACKGROUND flow whose deadline
+    # is at risk (time left < qos_deadline_slack x projected finish) is
+    # promoted to the LATENCY class mid-flight.
+    qos_deadline_escalate: bool = True
+    # BACKGROUND pause/resume: while any deadlined LATENCY flow is in
+    # jeopardy, BACKGROUND pulls stop so the in-flight bulk traffic yields
+    # its links; they resume as soon as the pressure clears.
+    qos_background_pause: bool = True
+    # Escalation/pressure margin: a flow is "at risk" when
+    # deadline - now < qos_deadline_slack * (bytes_left / est rate).
+    qos_deadline_slack: float = 1.5
+    # Assumed per-flow service rate (GB/s) for deadline projections. PCIe
+    # exposes no congestion signal, so the projection uses a conservative
+    # fixed rate rather than the optimistic aggregate multipath rate.
+    qos_deadline_est_gbps: float = 25.0
+    # Admission control: fraction of the aggregate link bandwidth assumed
+    # available when deciding whether a prefix fetch can meet its deadline.
+    # 1.0 = the certified "provably unmeetable" test (the aggregate rate
+    # is a true upper bound, so the estimate is a lower bound on finish
+    # time); lower values defer/reject more aggressively.
+    qos_admission_util: float = 1.0
+
+    def class_only(self) -> "MMAConfig":
+        """Copy with the deadline machinery disabled (PR-1 class-only
+        arbitration) — the SLO benchmarks' control arm."""
+        return dataclasses.replace(
+            self,
+            qos_deadline_edf=False,
+            qos_deadline_escalate=False,
+            qos_background_pause=False,
+        )
 
     def class_weight(self, cls) -> float:
         """WFQ weight for a TrafficClass (or its integer value)."""
@@ -128,6 +164,30 @@ class MMAConfig:
         cfg.qos_reserve_direct = bool(
             _env_int("MMA_QOS_RESERVE_DIRECT", int(cfg.qos_reserve_direct))
         )
+        cfg.qos_deadline_edf = bool(
+            _env_int("MMA_QOS_EDF", int(cfg.qos_deadline_edf))
+        )
+        cfg.qos_deadline_escalate = bool(
+            _env_int("MMA_QOS_ESCALATE", int(cfg.qos_deadline_escalate))
+        )
+        cfg.qos_background_pause = bool(
+            _env_int("MMA_QOS_BG_PAUSE", int(cfg.qos_background_pause))
+        )
+        cfg.qos_deadline_slack = _env_float(
+            "MMA_QOS_DEADLINE_SLACK", cfg.qos_deadline_slack
+        )
+        if cfg.qos_deadline_slack <= 0:
+            raise ValueError("MMA_QOS_DEADLINE_SLACK must be positive")
+        cfg.qos_deadline_est_gbps = _env_float(
+            "MMA_QOS_DEADLINE_EST_GBPS", cfg.qos_deadline_est_gbps
+        )
+        if cfg.qos_deadline_est_gbps <= 0:
+            raise ValueError("MMA_QOS_DEADLINE_EST_GBPS must be positive")
+        cfg.qos_admission_util = _env_float(
+            "MMA_QOS_ADMISSION_UTIL", cfg.qos_admission_util
+        )
+        if not 0 < cfg.qos_admission_util <= 1:
+            raise ValueError("MMA_QOS_ADMISSION_UTIL must be in (0, 1]")
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:

@@ -99,15 +99,17 @@ class MMAEngine:
         dst: object = None,
         on_complete: Optional[Callable[[TransferTask], None]] = None,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+        deadline: Optional[float] = None,
     ) -> DummyTask:
         """Intercept an asynchronous copy: record a Transfer Task, return
         the Dummy Task to be enqueued on the caller's stream. Dispatch
         begins only when the stream reaches the Dummy Task (C1: deferred
-        path binding)."""
+        path binding). ``deadline`` is an absolute backend-clock SLO
+        deadline (EDF ordering, escalation)."""
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=False, src=src, dst=dst, on_complete=on_complete,
-            traffic_class=traffic_class,
+            traffic_class=traffic_class, deadline=deadline,
         )
         dummy = DummyTask(task=task, on_activate=self._activate)
         self.sync_engine.register(dummy)
@@ -121,6 +123,7 @@ class MMAEngine:
         src: object = None,
         dst: object = None,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+        deadline: Optional[float] = None,
     ) -> TransferTask:
         """Intercept a synchronous copy: same Transfer-Task machinery, but
         the transfer is activated immediately; the caller is expected to
@@ -129,6 +132,7 @@ class MMAEngine:
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=True, src=src, dst=dst, traffic_class=traffic_class,
+            deadline=deadline,
         )
         self._activate(task)
         return task
@@ -169,8 +173,11 @@ class MMAEngine:
         # (b) is direction-scoped: PCIe is full-duplex, so a D2H copy does
         # not contend with an H2D latency flow's wire and may still take
         # the native path.
+        # A deadlined task of any class also skips the fallback: the native
+        # path can neither EDF-order it nor escalate it when slack runs out.
         protected = self.config.qos_enabled and (
             task.traffic_class is TrafficClass.LATENCY
+            or (task.deadline is not None and self.config.qos_deadline_edf)
             or (
                 self.config.qos_reserve_direct
                 and self.task_manager.has_active_flow(
@@ -193,6 +200,58 @@ class MMAEngine:
 
         self.task_manager.split(task)
         self.selector.kick_all()
+
+    # ------------------------------------------------------------------
+    # SLO admission support
+    # ------------------------------------------------------------------
+    def backlog_bytes(
+        self, max_class: Optional[TrafficClass] = None
+    ) -> int:
+        """Queued (unpulled) bytes across all destinations. With
+        ``max_class``, only classes at or above that priority — the
+        traffic a new transfer of that class would actually wait behind
+        under strict-priority arbitration."""
+        q = self.task_manager.queue
+        if max_class is None:
+            return q.total_remaining()
+        return sum(
+            q.total_remaining(c) for c in TrafficClass
+            if c.value <= max_class.value
+        )
+
+    def estimate_service_seconds(
+        self,
+        nbytes: int,
+        traffic_class: TrafficClass = TrafficClass.LATENCY,
+        deadline: Optional[float] = None,
+    ) -> float:
+        """Admission-control estimate: time to land ``nbytes`` of
+        ``traffic_class`` given the backlog it would wait behind,
+        assuming ``qos_admission_util`` of the aggregate host-link
+        bandwidth. With a ``deadline`` and EDF on, only same-class bytes
+        EDF would serve first count (plus all higher classes); without
+        one, the whole same-or-higher-class backlog. At util=1.0 the
+        result is a certified lower bound on the finish time — exceeding
+        the deadline means the fetch *provably* cannot meet it."""
+        agg = (
+            self.topology.n_devices
+            * self.topology.pcie_gbps * (1 << 30)
+            * self.config.qos_admission_util
+        )
+        q = self.task_manager.queue
+        if (
+            deadline is not None
+            and self.config.qos_enabled
+            and self.config.qos_deadline_edf
+        ):
+            backlog = q.remaining_before_deadline(traffic_class, deadline)
+            backlog += sum(
+                q.total_remaining(c) for c in TrafficClass
+                if c.value < traffic_class.value
+            )
+        else:
+            backlog = self.backlog_bytes(max_class=traffic_class)
+        return (backlog + nbytes) / max(agg, 1.0)
 
     # ------------------------------------------------------------------
     def set_relay_devices(self, relays: Optional[Sequence[int]]) -> None:

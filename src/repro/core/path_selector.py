@@ -22,6 +22,11 @@ capacity:
     all links before lower ones, and while a LATENCY flow is in flight its
     destination's own link is reserved for that class
     (``qos_reserve_direct``, the Table 2 direct-prioritization regime).
+  * **Deadline refresh** — every dispatch opportunity first re-evaluates
+    deadline state: lower-class flows whose slack ran out are escalated to
+    LATENCY (``qos_deadline_escalate``), and BACKGROUND pulls pause while
+    any LATENCY deadline is in jeopardy (``qos_background_pause``), resuming
+    when the pressure clears.
 """
 from __future__ import annotations
 
@@ -155,10 +160,27 @@ class PathSelector:
         self.task_manager = task_manager
         self.queue: MicroTaskQueue = task_manager.queue
         self.workers: Dict[int, LinkWorker] = {}
+        self.backend: Optional["Backend"] = None   # shared by all workers
         self._kicking = False
 
     def register_worker(self, worker: LinkWorker) -> None:
         self.workers[worker.dev] = worker
+        self.backend = worker.backend
+
+    def refresh_deadlines(self) -> None:
+        """Re-evaluate deadline state before dispatching: escalate at-risk
+        lower-class flows, and pause/resume BACKGROUND under pressure."""
+        if not self.config.qos_enabled or self.backend is None:
+            return
+        now = self.backend.now()
+        self.task_manager.escalate_at_risk(now)
+        if (
+            self.config.qos_background_pause
+            and self.task_manager.deadline_pressure(now)
+        ):
+            self.queue.paused = {TrafficClass.BACKGROUND}
+        else:
+            self.queue.paused = set()
 
     # ------------------------------------------------------------------
     def _may_relay_for(self, relay_dev: int, dest: int) -> bool:
@@ -278,6 +300,7 @@ class PathSelector:
             return
         self._kicking = True
         try:
+            self.refresh_deadlines()
             # Two-phase: direct pulls first so a synchronously-completing
             # backend cannot let one relay worker drain the queue before
             # the destination's own link gets its direct-priority chance.

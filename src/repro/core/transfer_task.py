@@ -8,21 +8,27 @@ the Sync Engine is notified (releasing the stream-visible Dummy Task for
 asynchronous copies, or waking the blocked caller for synchronous ones).
 
 QoS: every task carries a ``TrafficClass``. The micro-task queue keeps one
-FIFO per (class, destination) and arbitrates classes at every pop —
-strict priority for LATENCY, weighted fair queueing (virtual-time stride
-scheduling on bytes served) among the rest — so a background model wake
-cannot starve a TTFT-critical prefix-cache fetch sharing the same engine
-(the Fig 9 contention regime with Table 2-style prioritization).
+priority queue per (class, destination) and arbitrates classes at every
+pop — strict priority for LATENCY, weighted fair queueing (virtual-time
+stride scheduling on bytes served) among the rest — so a background model
+wake cannot starve a TTFT-critical prefix-cache fetch sharing the same
+engine (the Fig 9 contention regime with Table 2-style prioritization).
+
+Deadlines (SLO serving): a task may carry an absolute ``deadline``.
+Same-class pops are then earliest-deadline-first (deadline-less tasks keep
+arrival order behind all deadlined ones), and the TaskManager can promote
+("escalate") a lower-class flow to LATENCY when its slack runs out —
+see ``escalate_at_risk`` and ``MMAConfig.qos_deadline_*``.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import heapq
 import itertools
-from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from .config import MMAConfig
+from .config import GB, MMAConfig
 
 
 class Direction(enum.Enum):
@@ -61,6 +67,13 @@ class TransferTask:
     direction: Direction
     sync: bool = False               # blocking (cudaMemcpy) vs async
     traffic_class: TrafficClass = TrafficClass.THROUGHPUT
+    # Absolute completion deadline in the backend's clock domain (sim time
+    # on SimBackend, time.monotonic on the functional backend). None =
+    # best-effort; the deadline machinery ignores the task entirely.
+    deadline: Optional[float] = None
+    # Set by TaskManager.promote when slack-based escalation reclasses the
+    # flow mid-flight; ``traffic_class`` keeps the caller-declared class.
+    effective_class: Optional[TrafficClass] = None
     task_id: int = dataclasses.field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.RECORDED
     # Host/device payload handles — opaque to the scheduler; the functional
@@ -71,6 +84,22 @@ class TransferTask:
     # Filled by the engine:
     submit_time: float = 0.0
     complete_time: float = 0.0
+
+    @property
+    def qos_class(self) -> TrafficClass:
+        """Class the arbiter uses: the escalated class when promoted,
+        else the declared one. (Explicit None check — LATENCY is 0.)"""
+        if self.effective_class is not None:
+            return self.effective_class
+        return self.traffic_class
+
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        """Whether the completed task beat its deadline (None if it has
+        no deadline or has not completed)."""
+        if self.deadline is None or self.state is not TaskState.COMPLETE:
+            return None
+        return self.complete_time <= self.deadline
 
     @property
     def elapsed(self) -> float:
@@ -105,7 +134,11 @@ class MicroTask:
 
     @property
     def traffic_class(self) -> TrafficClass:
-        return self.parent.traffic_class
+        return self.parent.qos_class
+
+    @property
+    def deadline(self) -> Optional[float]:
+        return self.parent.deadline
 
 
 class MicroTaskQueue:
@@ -123,18 +156,41 @@ class MicroTaskQueue:
         weights via virtual-time stride scheduling: each class accrues
         ``bytes / weight`` of virtual time when served, and the class with
         the least virtual time goes next;
+      * earliest-deadline-first — within one (class, destination) queue,
+        deadlined micro-tasks pop in absolute-deadline order ahead of
+        deadline-less ones, which keep arrival order
+        (``qos_deadline_edf``);
+      * paused classes — the Path Selector can pause a class (BACKGROUND
+        under deadline pressure); a paused class is skipped by class
+        arbitration until resumed, its backlog intact;
       * with QoS disabled the queue degrades to exact arrival-order FIFO
         (the pre-QoS baseline, used as the benchmark control).
+
+    Each (class, dest) queue is a heap of ``(deadline_key, arrival, mt)``:
+    with EDF off (or QoS off) every key is +inf, so the heap degenerates
+    to exact arrival-order FIFO and all pre-deadline behavior is
+    unchanged.
     """
 
     def __init__(self, config: Optional[MMAConfig] = None) -> None:
         self.config = config or MMAConfig()
         self._by_class_dest: Dict[
-            TrafficClass, Dict[int, Deque[Tuple[int, MicroTask]]]
+            TrafficClass, Dict[int, List[Tuple[float, int, MicroTask]]]
         ] = {c: {} for c in TrafficClass}
         self._remaining: Dict[Tuple[TrafficClass, int], int] = {}
         self._vtime: Dict[TrafficClass, float] = {c: 0.0 for c in TrafficClass}
         self._arrivals = itertools.count()
+        # Classes currently paused by the selector (deadline pressure).
+        self.paused: Set[TrafficClass] = set()
+
+    def _deadline_key(self, mt: MicroTask) -> float:
+        if (
+            self.config.qos_enabled
+            and self.config.qos_deadline_edf
+            and mt.deadline is not None
+        ):
+            return mt.deadline
+        return float("inf")
 
     # -- class arbitration ----------------------------------------------
     def _weight(self, cls: TrafficClass) -> float:
@@ -152,16 +208,19 @@ class MicroTaskQueue:
     def _head_arrival(self, cls: TrafficClass, dest: Optional[int]) -> int:
         by_dest = self._by_class_dest[cls]
         if dest is not None:
-            return by_dest[dest][0][0]
-        return min(q[0][0] for q in by_dest.values() if q)
+            return by_dest[dest][0][1]
+        return min(q[0][1] for q in by_dest.values() if q)
 
     def class_order(self, dest: Optional[int] = None) -> List[TrafficClass]:
         """Pending classes in arbitration order (highest priority first).
 
         QoS on: strict LATENCY first (if enabled), then ascending WFQ
-        virtual time. QoS off: ascending head arrival time (global FIFO).
+        virtual time; paused classes are skipped. QoS off: ascending head
+        arrival time (global FIFO).
         """
         active = list(self._active_classes(dest))
+        if self.config.qos_enabled and self.paused:
+            active = [c for c in active if c not in self.paused]
         if not active:
             return []
         if not self.config.qos_enabled:
@@ -193,7 +252,10 @@ class MicroTaskQueue:
                      if c is not cls]
             if floor:
                 self._vtime[cls] = max(self._vtime[cls], min(floor))
-        by_dest.setdefault(mt.dest, deque()).append((next(self._arrivals), mt))
+        heapq.heappush(
+            by_dest.setdefault(mt.dest, []),
+            (self._deadline_key(mt), next(self._arrivals), mt),
+        )
         key = (cls, mt.dest)
         self._remaining[key] = self._remaining.get(key, 0) + mt.nbytes
 
@@ -210,10 +272,39 @@ class MicroTaskQueue:
         q = self._by_class_dest[cls].get(dest)
         if not q:
             return None
-        _, mt = q.popleft()
+        _, _, mt = heapq.heappop(q)
         self._remaining[(cls, dest)] -= mt.nbytes
         self._vtime[cls] += mt.nbytes / self._weight(cls)
         return mt
+
+    def reclass_task(
+        self, task_id: int, old_cls: TrafficClass, new_cls: TrafficClass
+    ) -> int:
+        """Move every queued micro-task of ``task_id`` from ``old_cls`` to
+        ``new_cls`` (slack-based escalation), preserving each entry's
+        deadline key and arrival stamp. Returns the bytes moved.
+        In-flight chunks (already pulled by a link) are unaffected."""
+        moved_total = 0
+        src_map = self._by_class_dest[old_cls]
+        dst_map = self._by_class_dest[new_cls]
+        for dest, q in src_map.items():
+            moved = [e for e in q if e[2].parent.task_id == task_id]
+            if not moved:
+                continue
+            kept = [e for e in q if e[2].parent.task_id != task_id]
+            heapq.heapify(kept)
+            src_map[dest] = kept
+            dq = dst_map.setdefault(dest, [])
+            nbytes = 0
+            for e in moved:
+                heapq.heappush(dq, e)
+                nbytes += e[2].nbytes
+            self._remaining[(old_cls, dest)] -= nbytes
+            self._remaining[(new_cls, dest)] = (
+                self._remaining.get((new_cls, dest), 0) + nbytes
+            )
+            moved_total += nbytes
+        return moved_total
 
     def remaining_bytes(
         self, dest: int, cls: Optional[TrafficClass] = None
@@ -223,6 +314,29 @@ class MicroTaskQueue:
         return sum(
             self._remaining.get((c, dest), 0) for c in TrafficClass
         )
+
+    def total_remaining(self, cls: Optional[TrafficClass] = None) -> int:
+        """Backlog bytes across all destinations (optionally one class)."""
+        if cls is None:
+            return sum(self._remaining.values())
+        return sum(
+            v for (c, _), v in self._remaining.items() if c is cls
+        )
+
+    def remaining_before_deadline(
+        self, cls: TrafficClass, deadline: float
+    ) -> int:
+        """Queued bytes of ``cls`` that EDF would serve before a new
+        micro-task deadlined at ``deadline`` (deadline-less entries sort
+        after every deadlined one and are excluded). The admission
+        controller's measure of the queue a deadlined fetch actually
+        waits behind."""
+        total = 0
+        for q in self._by_class_dest[cls].values():
+            for dkey, _, mt in q:
+                if dkey <= deadline:
+                    total += mt.nbytes
+        return total
 
     def longest_remaining_dest(
         self,
@@ -255,8 +369,8 @@ class MicroTaskQueue:
         best, best_stamp = None, None
         for c in classes:
             for dest, q in self._by_class_dest[c].items():
-                if q and (best_stamp is None or q[0][0] < best_stamp):
-                    best, best_stamp = dest, q[0][0]
+                if q and (best_stamp is None or q[0][1] < best_stamp):
+                    best, best_stamp = dest, q[0][1]
         return best
 
     def any_dest(self, cls: Optional[TrafficClass] = None) -> Optional[int]:
@@ -292,15 +406,18 @@ class TaskManager:
         self.config = config
         self.queue = MicroTaskQueue(config)
         self._outstanding: Dict[int, int] = {}   # task_id -> incomplete chunks
+        self._bytes_left: Dict[int, int] = {}    # task_id -> unlanded bytes
         self._tasks: Dict[int, TransferTask] = {}
         self._completion_cbs: List[Callable[[TransferTask], None]] = []
         # (class, dest, direction) -> number of incomplete TransferTasks;
         # drives the direct-path reservation (a dest's own link stays
         # dedicated to a LATENCY flow for the flow's whole lifetime, not
-        # just while its chunks sit unpopped).
+        # just while its chunks sit unpopped). Keyed by the *effective*
+        # (possibly escalated) class.
         self._active_flows: Dict[
             Tuple[TrafficClass, int, Direction], int
         ] = {}
+        self.escalations = 0                     # flows promoted so far
 
     def add_completion_listener(self, cb: Callable[[TransferTask], None]) -> None:
         self._completion_cbs.append(cb)
@@ -317,8 +434,9 @@ class TaskManager:
             off += n
             seq += 1
         self._outstanding[task.task_id] = len(micro)
+        self._bytes_left[task.task_id] = task.nbytes
         self._tasks[task.task_id] = task
-        key = (task.traffic_class, task.target, task.direction)
+        key = (task.qos_class, task.target, task.direction)
         self._active_flows[key] = self._active_flows.get(key, 0) + 1
         for mt in micro:
             self.queue.push(mt)
@@ -344,10 +462,12 @@ class TaskManager:
         """Called by the Task Launcher when a micro-task's last hop lands."""
         tid = mt.parent.task_id
         self._outstanding[tid] -= 1
+        self._bytes_left[tid] -= mt.nbytes
         if self._outstanding[tid] == 0:
             task = self._tasks.pop(tid)
             del self._outstanding[tid]
-            key = (task.traffic_class, task.target, task.direction)
+            del self._bytes_left[tid]
+            key = (task.qos_class, task.target, task.direction)
             self._active_flows[key] -= 1
             if self._active_flows[key] == 0:
                 del self._active_flows[key]
@@ -360,3 +480,80 @@ class TaskManager:
 
     def pending_transfers(self) -> int:
         return len(self._tasks)
+
+    # -- deadline machinery (SLO serving) --------------------------------
+    def bytes_left(self, task_id: int) -> int:
+        return self._bytes_left.get(task_id, 0)
+
+    def _projected_finish_s(self, task: TransferTask) -> float:
+        """Pessimistic time to drain the flow's unlanded bytes at the
+        configured per-flow estimate rate."""
+        rate = self.config.qos_deadline_est_gbps * GB
+        return self.bytes_left(task.task_id) / rate
+
+    def at_risk(self, task: TransferTask, now: float) -> bool:
+        """Deadline jeopardy: remaining slack below the safety margin.
+        An already-expired deadline is *lost*, not at risk — escalation
+        and BACKGROUND pause only help deadlines that are still winnable,
+        so a hopeless flow must not keep strict priority or starve
+        eviction for its whole remaining duration."""
+        if task.deadline is None or now > task.deadline:
+            return False
+        return (
+            task.deadline - now
+            < self.config.qos_deadline_slack * self._projected_finish_s(task)
+        )
+
+    def promote(self, task: TransferTask, new_cls: TrafficClass) -> int:
+        """Reclass an in-flight task (escalation). Moves its queued
+        micro-tasks, its active-flow reservation entry, and marks the
+        task; returns queued bytes moved."""
+        old_cls = task.qos_class
+        if old_cls is new_cls:
+            return 0
+        old_key = (old_cls, task.target, task.direction)
+        self._active_flows[old_key] -= 1
+        if self._active_flows[old_key] == 0:
+            del self._active_flows[old_key]
+        new_key = (new_cls, task.target, task.direction)
+        self._active_flows[new_key] = self._active_flows.get(new_key, 0) + 1
+        task.effective_class = new_cls
+        if new_cls is TrafficClass.LATENCY:
+            self.escalations += 1
+        return self.queue.reclass_task(task.task_id, old_cls, new_cls)
+
+    def escalate_at_risk(self, now: float) -> List[TransferTask]:
+        """Promote every active lower-class flow whose deadline is at risk
+        to LATENCY (``qos_deadline_escalate``), and demote an escalated
+        flow back to its declared class once its deadline is lost —
+        strict priority for a guaranteed miss only hurts the deadlines
+        that are still winnable. Returns the promoted tasks."""
+        if not (
+            self.config.qos_enabled and self.config.qos_deadline_escalate
+        ):
+            return []
+        promoted = []
+        for task in list(self._tasks.values()):
+            if (
+                task.effective_class is TrafficClass.LATENCY
+                and task.traffic_class is not TrafficClass.LATENCY
+                and task.deadline is not None
+                and now > task.deadline
+            ):
+                self.promote(task, task.traffic_class)
+            elif (
+                task.qos_class is not TrafficClass.LATENCY
+                and self.at_risk(task, now)
+            ):
+                self.promote(task, TrafficClass.LATENCY)
+                promoted.append(task)
+        return promoted
+
+    def deadline_pressure(self, now: float) -> bool:
+        """True while any active LATENCY-class flow's deadline is in
+        jeopardy — the trigger for pausing BACKGROUND pulls."""
+        return any(
+            task.qos_class is TrafficClass.LATENCY
+            and self.at_risk(task, now)
+            for task in self._tasks.values()
+        )

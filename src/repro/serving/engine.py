@@ -72,6 +72,7 @@ class LatencyModel:
         nbytes: int,
         direction: Direction,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+        deadline_s: Optional[float] = None,
     ) -> float:
         """Time one transfer on a fresh, otherwise-idle simulator.
 
@@ -82,6 +83,9 @@ class LatencyModel:
         difference is that LATENCY transfers below ``fallback_bytes``
         are timed as chunked multipath rather than the native fallback
         (they are exempt from it — see MMAEngine._activate).
+        ``deadline_s`` is a relative SLO budget: the fresh simulator
+        starts at t=0, so it doubles as the absolute engine deadline
+        (deadlined sub-fallback transfers also skip the native path).
         """
         eng, world, backend = make_sim_engine()
         if not self.use_mma:
@@ -96,7 +100,7 @@ class LatencyModel:
             eng.set_relay_devices(list(range(self.tp, 8)))
         task = eng.memcpy(
             nbytes, device=0, direction=direction,
-            traffic_class=traffic_class,
+            traffic_class=traffic_class, deadline=deadline_s,
         )
         world.run()
         return task.elapsed
@@ -159,7 +163,16 @@ class LatencyModel:
 class FunctionalServer:
     """Continuous serving of a reduced model on CPU: FCFS scheduling,
     prefill, per-request decode, KV offload on preemption, prefix-cache
-    reuse with real payload round-trips."""
+    reuse with real payload round-trips.
+
+    Admission-control caveat: this loop drains its sim engine
+    synchronously after every transfer (``sim_world.run()``), so the
+    scheduler never observes transfer backlog here — with
+    ``admission_control=True`` the feasibility hold is vacuous and only
+    already-expired deadlines get rejected. Contention-driven admission
+    (hold while the backlog drains, reject the provably unmeetable) is
+    exercised on a *shared* engine by benchmarks/slo_trace.py and the
+    scheduler unit tests."""
 
     def __init__(
         self,
@@ -170,6 +183,8 @@ class FunctionalServer:
         page_size: int = 16,
         seed: int = 0,
         max_len: int = 512,
+        admission_control: bool = False,
+        now_fn: Optional[Any] = None,
     ) -> None:
         self.cfg = cfg
         self.params = (
@@ -185,23 +200,49 @@ class FunctionalServer:
         )
         self.kv = KVCacheManager(cfg, self.sim_engine, budget,
                                  page_size=page_size)
-        self.scheduler = Scheduler(self.kv, max_running=max_running)
+        # Request deadlines live on the wall clock by default (the CPU
+        # prefill/decode really runs); tests may inject a fake clock.
+        self._now = now_fn or time.monotonic
+        self.scheduler = Scheduler(
+            self.kv, max_running=max_running,
+            admission_control=admission_control, now_fn=self._now,
+        )
         self.max_len = max_len
         self.transfer_log: List[Tuple[str, int]] = []
 
     # ------------------------------------------------------------------
-    def submit(self, tokens: np.ndarray, max_new_tokens: int = 8) -> Request:
-        req = Request(tokens=np.asarray(tokens, np.int32),
-                      max_new_tokens=max_new_tokens)
+    def submit(
+        self,
+        tokens: np.ndarray,
+        max_new_tokens: int = 8,
+        deadline_s: Optional[float] = None,
+        tenant: str = "default",
+    ) -> Request:
+        """Queue a request. ``deadline_s`` is a relative TTFT budget,
+        converted to an absolute deadline on the server's clock."""
+        req = Request(
+            tokens=np.asarray(tokens, np.int32),
+            max_new_tokens=max_new_tokens,
+            deadline=None if deadline_s is None else self._now() + deadline_s,
+            tenant=tenant,
+        )
         self.scheduler.submit(req)
         return req
 
     def _prefill(self, req: Request) -> None:
         t0 = time.monotonic()
         toks = jnp.asarray(req.tokens)[None]
+        # Request deadlines live on the scheduler's (wall) clock; the KV
+        # engine's deadline machinery compares against *sim* time, so
+        # translate the remaining budget into the sim clock domain.
+        sim_deadline = None
+        if req.deadline is not None:
+            remaining = max(req.deadline - self._now(), 0.0)
+            sim_deadline = self.sim_world.now + remaining
         hit, task, payload = self.kv.fetch(
             req.tokens,
             traffic_class=self.scheduler.transfer_class_for(req, "fetch"),
+            deadline=sim_deadline,
         )
         self.sim_world.run()
         if hit:
@@ -216,6 +257,7 @@ class FunctionalServer:
         req.context = {"caches": caches, "cache_len": clen}
         req.generated.append(int(jnp.argmax(logits[0])))
         req.ttft = time.monotonic() - t0
+        req.first_token_at = self._now()
 
     def _decode_one(self, req: Request) -> None:
         ctx = req.context

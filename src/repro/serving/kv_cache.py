@@ -177,6 +177,7 @@ class KVCacheManager:
         tokens: np.ndarray,
         payload: Any = None,
         traffic_class: Optional[TrafficClass] = None,
+        deadline: Optional[float] = None,
     ) -> Tuple[str, object]:
         """D2H: evict this sequence's KV to the host pool. Returns
         (prefix key, transfer task)."""
@@ -187,7 +188,7 @@ class KVCacheManager:
             traffic_class = self.OFFLOAD_CLASS
         task = self.engine.memcpy(
             nbytes, device=self.target, direction=Direction.D2H,
-            traffic_class=traffic_class,
+            traffic_class=traffic_class, deadline=deadline,
         )
         key = self.prefix.store(
             tokens, nbytes, payload=payload,
@@ -200,9 +201,11 @@ class KVCacheManager:
         self,
         tokens: np.ndarray,
         traffic_class: Optional[TrafficClass] = None,
+        deadline: Optional[float] = None,
     ) -> Tuple[int, object, Any]:
         """H2D: longest-prefix hit fetched back to the device. Returns
-        (hit_tokens, transfer task or None, payload)."""
+        (hit_tokens, transfer task or None, payload). ``deadline`` tags
+        the fetch for EDF ordering in the engine."""
         hit, entry = self.prefix.match(tokens)
         if hit == 0:
             return 0, None, None
@@ -211,10 +214,26 @@ class KVCacheManager:
             traffic_class = self.FETCH_CLASS
         task = self.engine.memcpy(
             nbytes, device=self.target, direction=Direction.H2D,
-            traffic_class=traffic_class,
+            traffic_class=traffic_class, deadline=deadline,
         )
         self.admit(hit)
         return hit, task, entry.payload
+
+    def estimate_fetch_seconds(
+        self, tokens: np.ndarray, deadline: Optional[float] = None
+    ) -> float:
+        """Admission-control estimate of this request's prefix-cache fetch
+        time given the engine's current LATENCY backlog (0 on a miss —
+        nothing to fetch). Does not move any data. With ``deadline``,
+        only the backlog EDF would serve first counts."""
+        hit, _ = self.prefix.match(tokens)
+        if hit == 0:
+            return 0.0
+        nbytes = hit * self.bytes_per_token
+        est = getattr(self.engine, "estimate_service_seconds", None)
+        if est is None:                      # engine without QoS support
+            return 0.0
+        return est(nbytes, TrafficClass.LATENCY, deadline=deadline)
 
     def release_if_admitted(self, n_tokens: int) -> None:
         take = min(self.device_bytes, n_tokens * self.bytes_per_token)

@@ -41,6 +41,10 @@ class ServedRequest:
     arrival: float
     context_tokens: int = 0       # prefix-cache hit size
     new_tokens: int = 128
+    # SLO: per-tenant tag + absolute first-token deadline (same clock as
+    # ``arrival``). None = best-effort.
+    tenant: str = "default"
+    deadline: Optional[float] = None
     # filled by the orchestrator
     start: float = 0.0
     wake_s: float = 0.0
@@ -49,9 +53,20 @@ class ServedRequest:
     finish: float = 0.0
 
     @property
+    def first_token_time(self) -> float:
+        """Absolute time the first token lands (queueing + wake + fetch +
+        prefill)."""
+        return self.start + self.wake_s + self.fetch_s + self.compute_s
+
+    @property
     def ttft(self) -> float:
-        return self.start + self.wake_s + self.fetch_s + self.compute_s \
-            - self.arrival
+        return self.first_token_time - self.arrival
+
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        if self.deadline is None:
+            return None
+        return self.first_token_time <= self.deadline
 
 
 class Orchestrator:
@@ -91,11 +106,14 @@ class Orchestrator:
         nbytes: int,
         direction: Direction,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+        deadline_s: Optional[float] = None,
     ) -> float:
         # any latency model can time raw transfers; they share the link sim
         lm = next(iter(self.latency.values()))
         lm.use_mma = self.use_mma
-        return lm.transfer_seconds(nbytes, direction, traffic_class)
+        return lm.transfer_seconds(
+            nbytes, direction, traffic_class, deadline_s=deadline_s
+        )
 
     def _evict_until_fits(self, need: int) -> float:
         """LRU sleep until ``need`` bytes fit. Returns sleep seconds."""
@@ -119,13 +137,19 @@ class Orchestrator:
             self.events.append((self.clock, "sleep", lru.cfg.name))
         return total
 
-    def _ensure_resident(self, name: str) -> float:
+    def _ensure_resident(
+        self, name: str, deadline_s: Optional[float] = None
+    ) -> float:
+        """Wake ``name`` if cold. A cold wake a request is waiting on
+        carries the request's remaining deadline budget (relative
+        seconds) so the engine can EDF-order/escalate it."""
         inst = self.instances[name]
         if inst.resident:
             return 0.0
         t = self._evict_until_fits(inst.nbytes)
         t += self._transfer_s(
-            inst.nbytes, Direction.H2D, TrafficClass.THROUGHPUT
+            inst.nbytes, Direction.H2D, TrafficClass.THROUGHPUT,
+            deadline_s=deadline_s,
         )
         inst.resident = True
         self.resident_bytes += inst.nbytes
@@ -138,7 +162,11 @@ class Orchestrator:
         for req in sorted(requests, key=lambda r: r.arrival):
             self.clock = max(self.clock, req.arrival)
             req.start = self.clock
-            req.wake_s = self._ensure_resident(req.model)
+            budget = (
+                None if req.deadline is None
+                else max(req.deadline - self.clock, 0.0)
+            )
+            req.wake_s = self._ensure_resident(req.model, deadline_s=budget)
             self.clock += req.wake_s
             lm = self.latency[req.model]
             if req.context_tokens:
@@ -152,3 +180,28 @@ class Orchestrator:
             req.finish = self.clock
             self.instances[req.model].last_used = self.clock
         return requests
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def slo_report(requests: List[ServedRequest]) -> Dict[str, Dict]:
+        """Per-tenant SLO summary over served requests: TTFT percentiles
+        and deadline hit rate (hit rate only over deadlined requests)."""
+        import numpy as np
+
+        report: Dict[str, Dict] = {}
+        by_tenant: Dict[str, List[ServedRequest]] = {}
+        for r in requests:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        for tenant, reqs in sorted(by_tenant.items()):
+            ttfts = np.array([r.ttft for r in reqs])
+            deadlined = [r for r in reqs if r.deadline is not None]
+            hits = sum(1 for r in deadlined if r.met_deadline)
+            report[tenant] = {
+                "n": len(reqs),
+                "ttft_p50_s": float(np.percentile(ttfts, 50)),
+                "ttft_p95_s": float(np.percentile(ttfts, 95)),
+                "deadlined": len(deadlined),
+                "hits": hits,
+                "hit_rate": hits / len(deadlined) if deadlined else None,
+            }
+        return report

@@ -6,13 +6,23 @@ QoS: a preemption offload is BACKGROUND traffic (the victim is already
 stalled; draining it must not contend with live requests), while the
 resume fetch is LATENCY-class — the request's clock is running again and
 the fetch sits on its TTFT-to-next-token path.
+
+SLO admission control (``admission_control=True``): a request may carry an
+absolute TTFT ``deadline``. At schedule time the scheduler asks the KV
+manager how long the request's prefix-cache fetch would take given the
+engine's *current* LATENCY-class backlog; a request whose deadline is
+provably unmeetable stays queued (its fetch would only add contention for
+requests that can still hit theirs), and one whose deadline has already
+passed is rejected outright — it lands in ``self.rejected`` with state
+``"rejected"`` so the serving layer can surface the SLO violation instead
+of burning bandwidth on a guaranteed miss.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -28,13 +38,31 @@ class Request:
     max_new_tokens: int = 16
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_ids))
     arrival: float = 0.0
+    # SLO: absolute first-token deadline (scheduler clock domain) + tenant
+    # tag for per-tenant SLO reporting. None = best-effort.
+    deadline: Optional[float] = None
+    tenant: str = "default"
     # runtime state
-    state: str = "waiting"             # waiting | running | preempted | done
+    state: str = "waiting"    # waiting | running | preempted | done | rejected
     generated: List[int] = dataclasses.field(default_factory=list)
     context: Optional[object] = None   # engine-private (caches, cache_len)
     ttft: Optional[float] = None
+    first_token_at: Optional[float] = None   # absolute, scheduler clock
     hit_tokens: int = 0
     resumed: bool = False              # re-admitted after preemption
+
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        """First token beat the deadline? None until it is known (no
+        deadline, or not yet emitted — a rejected request counts as a
+        miss). A property, matching ``ServedRequest.met_deadline``."""
+        if self.deadline is None:
+            return None
+        if self.state == "rejected":
+            return False
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at <= self.deadline
 
     @property
     def n_tokens(self) -> int:
@@ -53,16 +81,51 @@ class Scheduler:
     PREFILL_FETCH_CLASS = KVCacheManager.FETCH_CLASS
     RESUME_CLASS = TrafficClass.LATENCY
 
-    def __init__(self, kv_manager, max_running: int = 4) -> None:
+    def __init__(
+        self,
+        kv_manager,
+        max_running: int = 4,
+        admission_control: bool = False,
+        now_fn: Optional[Callable[[], float]] = None,
+    ) -> None:
         self.kv = kv_manager
         self.max_running = max_running
+        self.admission_control = admission_control
+        self.now_fn = now_fn or (lambda: 0.0)
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.preempted: Deque[Request] = deque()
         self.done: List[Request] = []
+        self.rejected: List[Request] = []
 
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
+
+    def _reject(self, req: Request) -> None:
+        req.state = "rejected"
+        self.rejected.append(req)
+
+    def _engine_deadline(self, req: Request, now: float) -> Optional[float]:
+        """Translate the request's deadline (scheduler clock) into the KV
+        engine's clock domain — the domain of the queued EDF deadline
+        keys. When both run on the same clock this is the identity."""
+        if req.deadline is None:
+            return None
+        backend = getattr(getattr(self.kv, "engine", None), "backend", None)
+        if backend is None:
+            return req.deadline
+        return backend.now() + (req.deadline - now)
+
+    def deadline_feasible(self, req: Request, now: float) -> bool:
+        """Can the request's prefix-cache fetch still land before its
+        deadline, given the engine's current LATENCY backlog? Requests
+        without deadlines are always feasible."""
+        if req.deadline is None:
+            return True
+        est = self.kv.estimate_fetch_seconds(
+            req.tokens, deadline=self._engine_deadline(req, now)
+        )
+        return now + est <= req.deadline
 
     def _admit(self, req: Request) -> bool:
         need = req.n_tokens + req.max_new_tokens
@@ -75,17 +138,46 @@ class Scheduler:
         self.running.append(req)
         return True
 
-    def schedule(self) -> List[Request]:
+    def schedule(self, now: Optional[float] = None) -> List[Request]:
         """Admit from preempted first (fairness), then waiting. Returns the
-        newly admitted requests (they need prefill or resume-fetch)."""
+        newly admitted requests (they need prefill or resume-fetch).
+
+        With admission control on: expired-deadline requests are rejected,
+        and a head-of-line request whose deadline is currently unmeetable
+        holds the (FCFS) queue until the backlog drains or it expires."""
+        now = self.now_fn() if now is None else now
         admitted: List[Request] = []
         while self.preempted and self._admit(self.preempted[0]):
             req = self.preempted.popleft()
             req.resumed = True
             admitted.append(req)
-        while self.waiting and self._admit(self.waiting[0]):
+        while self.waiting:
+            req = self.waiting[0]
+            if self.admission_control and req.deadline is not None:
+                if now > req.deadline:
+                    self.waiting.popleft()
+                    self._reject(req)
+                    continue
+                if not self.deadline_feasible(req, now):
+                    if self._engine_busy():
+                        break       # backlog may drain; hold the queue
+                    # idle engine: the estimate can only improve with a
+                    # later `now`, which moves the target the same
+                    # amount — provably never feasible, reject rather
+                    # than livelock the serving loop
+                    self.waiting.popleft()
+                    self._reject(req)
+                    continue
+            if not self._admit(req):
+                break
             admitted.append(self.waiting.popleft())
         return admitted
+
+    def _engine_busy(self) -> bool:
+        """Is there in-flight transfer backlog that could still drain and
+        make a held request feasible?"""
+        tm = getattr(getattr(self.kv, "engine", None), "task_manager", None)
+        return tm is not None and tm.pending_transfers() > 0
 
     def transfer_class_for(self, req: Request, kind: str) -> TrafficClass:
         """Class for a transfer on behalf of ``req``: offloads drain in

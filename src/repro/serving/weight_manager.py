@@ -36,6 +36,11 @@ class WeightManager:
 
     TRANSFER_CLASS = TrafficClass.THROUGHPUT
 
+    # A deadline passed to sleep()/wake() keeps the THROUGHPUT class but
+    # lets the engine EDF-order the chunks and escalate the flow to
+    # LATENCY if its slack runs out (a wake whose model a request is
+    # already waiting on is TTFT-critical in disguise).
+
     def __init__(
         self,
         engine: MMAEngine,
@@ -57,10 +62,12 @@ class WeightManager:
         self._host_copy: Optional[Dict] = None
         self.functional = isinstance(engine.backend, JaxBackend)
 
-    def _run_sim(self, direction: Direction) -> TransferReport:
+    def _run_sim(
+        self, direction: Direction, deadline: Optional[float] = None
+    ) -> TransferReport:
         task = self.engine.memcpy(
             self.nbytes, device=self.target, direction=direction,
-            traffic_class=self.TRANSFER_CLASS,
+            traffic_class=self.TRANSFER_CLASS, deadline=deadline,
         )
         world = self.engine.backend.world  # type: ignore[attr-defined]
         world.run()
@@ -70,7 +77,7 @@ class WeightManager:
             bandwidth_gbps=task.bandwidth_gbps(),
         )
 
-    def sleep(self) -> TransferReport:
+    def sleep(self, deadline: Optional[float] = None) -> TransferReport:
         """Evict weights to host memory (fall-asleep, D2H)."""
         assert self.state == "awake", "already asleep"
         if self.functional:
@@ -87,11 +94,11 @@ class WeightManager:
             report = TransferReport(self.nbytes, dt,
                                     self.nbytes / max(dt, 1e-9) / (1 << 30))
         else:
-            report = self._run_sim(Direction.D2H)
+            report = self._run_sim(Direction.D2H, deadline=deadline)
         self.state = "asleep"
         return report
 
-    def wake(self) -> TransferReport:
+    def wake(self, deadline: Optional[float] = None) -> TransferReport:
         """Reload weights to the GPU (wake-up, H2D multipath fetch)."""
         assert self.state == "asleep", "not asleep"
         if self.functional:
@@ -108,10 +115,16 @@ class WeightManager:
             report = TransferReport(self.nbytes, dt,
                                     self.nbytes / max(dt, 1e-9) / (1 << 30))
         else:
-            report = self._run_sim(Direction.H2D)
+            report = self._run_sim(Direction.H2D, deadline=deadline)
         self.state = "awake"
         return report
 
-    def switch_to(self, other: "WeightManager") -> Tuple[TransferReport, TransferReport]:
-        """Model switching = this model sleeps, the other wakes."""
-        return self.sleep(), other.wake()
+    def switch_to(
+        self,
+        other: "WeightManager",
+        wake_deadline: Optional[float] = None,
+    ) -> Tuple[TransferReport, TransferReport]:
+        """Model switching = this model sleeps, the other wakes. The
+        wake — the side a request is usually waiting on — may carry an
+        SLO deadline."""
+        return self.sleep(), other.wake(deadline=wake_deadline)

@@ -171,3 +171,129 @@ def test_prefix_match_is_page_aligned_prefix(page, n_tokens, extra, data):
         bad[0] = (bad[0] + 1) % 1000
         hit_bad, _ = pc.match(bad)
         assert hit_bad == 0
+
+
+# ---------------------------------------------------------------------------
+# WFQ / EDF arbitration invariants (SLO layer)
+# ---------------------------------------------------------------------------
+from repro.core import TrafficClass  # noqa: E402
+
+
+@given(
+    weights=st.tuples(
+        st.integers(1, 8), st.integers(1, 8), st.integers(1, 8)
+    ),
+    order=st.permutations(
+        [TrafficClass.LATENCY] * 40
+        + [TrafficClass.THROUGHPUT] * 40
+        + [TrafficClass.BACKGROUND] * 40
+    ),
+)
+@settings(max_examples=40, deadline=None)
+def test_wfq_no_class_starved_beyond_bound(weights, order):
+    """With strict priority off, any continuously-backlogged class must
+    receive at least its weight share of served bytes minus a bounded
+    stride-scheduling lag — under adversarial arrival orders."""
+    chunk = 1 * MB
+    cfg = MMAConfig(
+        qos_weights=tuple(float(w) for w in weights),
+        qos_strict_latency=False,
+    )
+    q = MicroTaskQueue(cfg)
+    for i, cls in enumerate(order):
+        t = TransferTask(nbytes=chunk, target=0, direction=Direction.H2D,
+                         traffic_class=cls)
+        q.push(MicroTask(parent=t, offset=0, nbytes=chunk, seq=i))
+    # serve only 40 chunks: every class stays backlogged throughout
+    # (max share 8/(8+1+1) = 0.8 -> at most 32 pops of one class)
+    served = {c: 0 for c in TrafficClass}
+    total = 0
+    for _ in range(40):
+        mt = q.pop_for_dest(0)
+        served[mt.traffic_class] += mt.nbytes
+        total += mt.nbytes
+    wsum = float(sum(weights))
+    for cls in TrafficClass:
+        w = float(weights[int(cls)])
+        share = w / wsum
+        # stride-scheduling lag bound: one max-chunk of virtual time,
+        # i.e. up to w/min_w chunks of real bytes, plus one chunk slack
+        bound = (w / min(weights) + 1) * chunk
+        assert served[cls] >= share * total - bound, (
+            f"{cls.name} starved: served {served[cls] / MB} MB of "
+            f"{total / MB} MB (share {share:.2f}, weights {weights})"
+        )
+
+
+@given(
+    flows=st.lists(
+        st.tuples(
+            st.integers(0, 7),                        # destination
+            st.integers(16 * MB, 64 * MB),            # size (> fallback)
+            st.sampled_from(list(TrafficClass)),      # class
+            st.one_of(st.none(),                      # optional deadline
+                      st.floats(0.001, 0.5)),
+        ),
+        min_size=1, max_size=6,
+    ),
+)
+@settings(max_examples=25, deadline=None)
+def test_total_bytes_conserved_per_class_through_engine(flows):
+    """Per-class byte conservation end to end: everything submitted in a
+    class is delivered in that class, independent of deadlines — no
+    bytes are lost, duplicated, or silently re-classed. (Sizes sit above
+    the native-fallback threshold so every flow takes the arbitrated
+    multipath queue; escalation is off to keep classes fixed.)"""
+    cfg = MMAConfig(qos_deadline_escalate=False)
+    eng, world, _ = make_sim_engine(config=cfg)
+    pushed = {c: 0 for c in TrafficClass}
+    for dest, nb, cls, dl in flows:
+        eng.memcpy(nb, device=dest, direction=Direction.H2D,
+                   traffic_class=cls, deadline=dl)
+        pushed[cls] += nb
+    world.run()
+    served = {
+        c: sum(w.bytes_by_class[c] for w in eng.workers.values())
+        for c in TrafficClass
+    }
+    assert served == pushed
+
+
+@given(
+    ops=st.lists(
+        st.one_of(
+            st.tuples(st.just("push"),
+                      st.one_of(st.none(), st.floats(0.0, 10.0))),
+            st.tuples(st.just("pop"), st.none()),
+        ),
+        min_size=1, max_size=60,
+    ),
+)
+@settings(max_examples=100, deadline=None)
+def test_edf_never_inverts_same_class_deadlines(ops):
+    """Under arbitrary interleaved push/pop sequences, a popped LATENCY
+    micro-task's deadline is never later than any deadline still queued
+    for the same (class, destination) — EDF never inverts two same-class
+    deadlines that are simultaneously pending."""
+    q = MicroTaskQueue(MMAConfig())
+    pending = []
+    for op, dl in ops:
+        if op == "push":
+            t = TransferTask(nbytes=1 * MB, target=0,
+                             direction=Direction.H2D,
+                             traffic_class=TrafficClass.LATENCY,
+                             deadline=dl)
+            q.push(MicroTask(parent=t, offset=0, nbytes=1 * MB, seq=0))
+            pending.append(dl)
+        else:
+            mt = q.pop_for_dest(0)
+            if mt is None:
+                assert not pending
+                continue
+            deadlined = [d for d in pending if d is not None]
+            if mt.deadline is None:
+                # deadline-less only pops once no deadlined entry remains
+                assert not deadlined
+            else:
+                assert mt.deadline <= min(deadlined)
+            pending.remove(mt.deadline)

@@ -1,0 +1,451 @@
+"""Deadline-driven SLO serving: EDF micro-task ordering, slack-based
+escalation, BACKGROUND pause under deadline pressure, admission-control
+estimates, and the deadline plumbing through the serving layer."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Direction,
+    MMAConfig,
+    MicroTaskQueue,
+    SimWorld,
+    TaskManager,
+    TrafficClass,
+    TransferTask,
+    make_sim_engine,
+)
+from repro.core.config import GB, MB
+from repro.core.transfer_task import MicroTask
+
+
+def _mt(dest=0, nbytes=1 * MB, cls=TrafficClass.LATENCY, deadline=None,
+        seq=0):
+    t = TransferTask(
+        nbytes=nbytes, target=dest, direction=Direction.H2D,
+        traffic_class=cls, deadline=deadline,
+    )
+    return MicroTask(parent=t, offset=0, nbytes=nbytes, seq=seq)
+
+
+# ---------------------------------------------------------------------------
+# EDF ordering in the micro-task queue
+# ---------------------------------------------------------------------------
+def test_edf_pops_earliest_deadline_first():
+    q = MicroTaskQueue(MMAConfig())
+    q.push(_mt(deadline=3.0))
+    q.push(_mt(deadline=1.0))
+    q.push(_mt(deadline=2.0))
+    got = [q.pop_for_dest(0).deadline for _ in range(3)]
+    assert got == [1.0, 2.0, 3.0]
+
+
+def test_edf_deadlineless_tasks_sort_after_deadlined_in_arrival_order():
+    q = MicroTaskQueue(MMAConfig())
+    a = _mt(deadline=None)
+    b = _mt(deadline=5.0)
+    c = _mt(deadline=None)
+    for m in (a, b, c):
+        q.push(m)
+    assert q.pop_for_dest(0) is b
+    assert q.pop_for_dest(0) is a          # then arrival order
+    assert q.pop_for_dest(0) is c
+
+
+def test_edf_disabled_keeps_arrival_order():
+    q = MicroTaskQueue(MMAConfig(qos_deadline_edf=False))
+    first = _mt(deadline=9.0)
+    second = _mt(deadline=1.0)
+    q.push(first)
+    q.push(second)
+    assert q.pop_for_dest(0) is first
+
+
+def test_fifo_mode_ignores_deadlines_entirely():
+    q = MicroTaskQueue(MMAConfig(qos_enabled=False))
+    first = _mt(deadline=9.0, cls=TrafficClass.THROUGHPUT)
+    second = _mt(deadline=1.0, cls=TrafficClass.LATENCY)
+    q.push(first)
+    q.push(second)
+    assert q.pop_for_dest(0) is first
+
+
+def test_remaining_before_deadline_counts_only_earlier_entries():
+    q = MicroTaskQueue(MMAConfig())
+    q.push(_mt(nbytes=4 * MB, deadline=1.0))
+    q.push(_mt(nbytes=2 * MB, deadline=3.0))
+    q.push(_mt(nbytes=8 * MB, deadline=None))   # sorts after any deadline
+    assert q.remaining_before_deadline(TrafficClass.LATENCY, 2.0) == 4 * MB
+    assert q.remaining_before_deadline(TrafficClass.LATENCY, 3.0) == 6 * MB
+
+
+# ---------------------------------------------------------------------------
+# Escalation + reclassing
+# ---------------------------------------------------------------------------
+def test_promote_moves_queued_chunks_and_flow_reservation():
+    tm = TaskManager(MMAConfig(chunk_bytes=1 * MB))
+    task = TransferTask(
+        nbytes=4 * MB, target=2, direction=Direction.H2D,
+        traffic_class=TrafficClass.THROUGHPUT, deadline=1.0,
+    )
+    tm.split(task)
+    assert tm.has_active_flow(TrafficClass.THROUGHPUT, 2)
+    moved = tm.promote(task, TrafficClass.LATENCY)
+    assert moved == 4 * MB
+    assert task.qos_class is TrafficClass.LATENCY
+    assert task.traffic_class is TrafficClass.THROUGHPUT  # declared class
+    assert tm.has_active_flow(TrafficClass.LATENCY, 2)
+    assert not tm.has_active_flow(TrafficClass.THROUGHPUT, 2)
+    # the chunks now pop from the LATENCY queue
+    assert tm.queue.pop_for_dest(2, TrafficClass.LATENCY) is not None
+    assert tm.queue.total_remaining(TrafficClass.THROUGHPUT) == 0
+
+
+def test_escalate_at_risk_promotes_only_jeopardized_flows():
+    cfg = MMAConfig(chunk_bytes=1 * MB, qos_deadline_est_gbps=1.0,
+                    qos_deadline_slack=1.0)
+    tm = TaskManager(cfg)
+    tight = TransferTask(
+        nbytes=2 * GB, target=0, direction=Direction.H2D,
+        traffic_class=TrafficClass.THROUGHPUT, deadline=0.5,
+    )   # needs 2s at 1 GB/s, 0.5s left -> at risk
+    loose = TransferTask(
+        nbytes=1 * MB, target=1, direction=Direction.H2D,
+        traffic_class=TrafficClass.THROUGHPUT, deadline=100.0,
+    )
+    for t in (tight, loose):
+        tm.split(t)
+    promoted = tm.escalate_at_risk(now=0.0)
+    assert promoted == [tight]
+    assert tight.qos_class is TrafficClass.LATENCY
+    assert loose.qos_class is TrafficClass.THROUGHPUT
+    assert tm.escalations == 1
+
+
+def test_escalation_disabled_leaves_class_alone():
+    cfg = MMAConfig(qos_deadline_escalate=False, chunk_bytes=1 * MB)
+    tm = TaskManager(cfg)
+    t = TransferTask(
+        nbytes=2 * GB, target=0, direction=Direction.H2D,
+        traffic_class=TrafficClass.THROUGHPUT, deadline=0.0,
+    )
+    tm.split(t)
+    assert tm.escalate_at_risk(now=0.0) == []
+    assert t.qos_class is TrafficClass.THROUGHPUT
+
+
+def test_expired_deadline_is_lost_not_at_risk():
+    """Once a deadline has passed, the flow stops driving pressure and an
+    escalated flow is demoted back to its declared class — a guaranteed
+    miss must not starve BACKGROUND or outrank winnable deadlines."""
+    cfg = MMAConfig(chunk_bytes=1 * MB, qos_deadline_est_gbps=1.0,
+                    qos_deadline_slack=1.0)
+    tm = TaskManager(cfg)
+    task = TransferTask(
+        nbytes=2 * GB, target=0, direction=Direction.H2D,
+        traffic_class=TrafficClass.THROUGHPUT, deadline=0.5,
+    )
+    tm.split(task)
+    assert tm.escalate_at_risk(now=0.0) == [task]      # winnable: promote
+    assert task.qos_class is TrafficClass.LATENCY
+    assert tm.deadline_pressure(now=0.0)
+    tm.escalate_at_risk(now=1.0)                       # expired: demote
+    assert task.qos_class is TrafficClass.THROUGHPUT
+    assert not tm.deadline_pressure(now=1.0)
+    assert not tm.at_risk(task, now=1.0)
+    assert tm.escalations == 1                         # demotion not counted
+    assert tm.queue.total_remaining(TrafficClass.LATENCY) == 0
+
+
+def test_engine_escalates_at_risk_wake_and_meets_deadline():
+    eng, world, _ = make_sim_engine()
+    wake = eng.memcpy(
+        2 * GB, device=1, direction=Direction.H2D,
+        traffic_class=TrafficClass.THROUGHPUT, deadline=0.05,
+    )
+    world.run()
+    assert eng.task_manager.escalations >= 1
+    assert wake.qos_class is TrafficClass.LATENCY
+    assert wake.met_deadline is True
+
+
+# ---------------------------------------------------------------------------
+# BACKGROUND pause under deadline pressure
+# ---------------------------------------------------------------------------
+def test_background_paused_while_latency_deadline_in_jeopardy():
+    cfg = MMAConfig(qos_deadline_est_gbps=1.0)   # everything looks at risk
+    eng, world, _ = make_sim_engine(config=cfg)
+    eng.memcpy(512 * MB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, deadline=0.010)
+    eng.memcpy(256 * MB, device=1, direction=Direction.H2D,
+               traffic_class=TrafficClass.BACKGROUND)
+    # while the latency flow is active, BACKGROUND must not be served
+    while eng.task_manager.pending_transfers() > 1 or (
+        eng.task_manager.has_active_flow(TrafficClass.LATENCY, 0)
+    ):
+        bg = sum(
+            w.bytes_by_class[TrafficClass.BACKGROUND]
+            for w in eng.workers.values()
+        )
+        assert bg == 0
+        if world.idle():
+            break
+        world.run(until=world.now + 1e-3)
+    world.run()
+    # afterwards the pause lifts and the backlog drains in full
+    bg = sum(
+        w.bytes_by_class[TrafficClass.BACKGROUND]
+        for w in eng.workers.values()
+    )
+    assert bg == 256 * MB
+
+
+def test_background_not_paused_when_knob_off():
+    cfg = MMAConfig(qos_deadline_est_gbps=1.0, qos_background_pause=False)
+    eng, world, _ = make_sim_engine(config=cfg)
+    eng.memcpy(512 * MB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, deadline=0.010)
+    eng.memcpy(256 * MB, device=1, direction=Direction.H2D,
+               traffic_class=TrafficClass.BACKGROUND)
+    world.run(until=0.002)
+    bg = sum(
+        w.bytes_by_class[TrafficClass.BACKGROUND]
+        for w in eng.workers.values()
+    )
+    assert bg > 0
+    world.run()
+
+
+# ---------------------------------------------------------------------------
+# EDF end-to-end: tight deadline beats earlier loose arrival
+# ---------------------------------------------------------------------------
+def _two_fetch_times(edf: bool):
+    cfg = MMAConfig() if edf else MMAConfig().class_only()
+    eng, world, _ = make_sim_engine(config=cfg)
+    loose = eng.memcpy(1 * GB, device=0, direction=Direction.H2D,
+                       traffic_class=TrafficClass.LATENCY,
+                       deadline=1.0 if edf else None)
+    holder = {}
+
+    def tight_arrives():
+        holder["tight"] = eng.memcpy(
+            64 * MB, device=0, direction=Direction.H2D,
+            traffic_class=TrafficClass.LATENCY,
+            deadline=(world.now + 0.004) if edf else None,
+        )
+
+    world.at(0.001, tight_arrives)
+    world.run()
+    return holder["tight"].elapsed, loose.elapsed
+
+
+def test_edf_protects_tight_deadline_from_earlier_loose_fetch():
+    tight_edf, _ = _two_fetch_times(edf=True)
+    tight_fifo, _ = _two_fetch_times(edf=False)
+    assert tight_edf < 0.5 * tight_fifo
+
+
+def test_same_bytes_move_with_and_without_deadline_machinery():
+    def total(edf):
+        cfg = MMAConfig() if edf else MMAConfig().class_only()
+        eng, world, _ = make_sim_engine(config=cfg)
+        eng.memcpy(256 * MB, device=0, direction=Direction.H2D,
+                   traffic_class=TrafficClass.LATENCY, deadline=0.01)
+        eng.memcpy(1 * GB, device=1, direction=Direction.H2D,
+                   traffic_class=TrafficClass.THROUGHPUT, deadline=0.5)
+        eng.memcpy(128 * MB, device=2, direction=Direction.D2H,
+                   traffic_class=TrafficClass.BACKGROUND)
+        world.run()
+        return sum(w.bytes_total for w in eng.workers.values())
+
+    assert total(True) == total(False)
+
+
+# ---------------------------------------------------------------------------
+# Admission estimates
+# ---------------------------------------------------------------------------
+def test_estimate_service_seconds_monotone_in_backlog():
+    eng, world, _ = make_sim_engine()
+    e0 = eng.estimate_service_seconds(64 * MB)
+    eng.memcpy(4 * GB, device=1, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY)
+    e1 = eng.estimate_service_seconds(64 * MB)
+    assert e1 > e0 > 0
+    world.run()
+
+
+def test_estimate_with_deadline_ignores_later_deadline_backlog():
+    eng, world, _ = make_sim_engine()
+    eng.memcpy(4 * GB, device=1, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, deadline=10.0)
+    blind = eng.estimate_service_seconds(64 * MB)
+    edf_aware = eng.estimate_service_seconds(64 * MB, deadline=1.0)
+    assert edf_aware < blind
+    world.run()
+
+
+# ---------------------------------------------------------------------------
+# Serving layer: scheduler admission, kv estimates, deadline plumbing
+# ---------------------------------------------------------------------------
+def _kv_and_engine():
+    from repro.configs import get_config
+    from repro.serving.kv_cache import KVCacheManager
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    eng, world, _ = make_sim_engine()
+    kv = KVCacheManager(cfg, eng, device_budget_bytes=1 << 30, page_size=16)
+    return kv, eng, world
+
+
+def test_scheduler_rejects_expired_deadline():
+    from repro.serving.scheduler import Request, Scheduler
+
+    kv, _, _ = _kv_and_engine()
+    sched = Scheduler(kv, max_running=2, admission_control=True)
+    late = Request(tokens=np.arange(32, dtype=np.int32), deadline=-1.0)
+    ok = Request(tokens=np.arange(32, dtype=np.int32), deadline=100.0)
+    sched.submit(late)
+    sched.submit(ok)
+    admitted = sched.schedule(now=0.0)
+    assert admitted == [ok]
+    assert late.state == "rejected" and sched.rejected == [late]
+    assert late.met_deadline is False
+
+
+def test_scheduler_queues_infeasible_deadline_until_it_expires():
+    from repro.serving.scheduler import Request, Scheduler
+
+    kv, eng, world = _kv_and_engine()
+    toks = np.arange(64, dtype=np.int32)
+    kv.offload(toks)
+    world.run()
+    # jam the engine with a huge earlier-deadline LATENCY backlog so the
+    # fetch is provably unmeetable
+    eng.memcpy(200 * GB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, deadline=0.0)
+    sched = Scheduler(kv, max_running=2, admission_control=True)
+    req = Request(tokens=toks, deadline=0.010)
+    sched.submit(req)
+    assert sched.schedule(now=0.0) == []          # held, not rejected
+    assert req.state == "waiting"
+    assert sched.schedule(now=1.0) == []          # expired now
+    assert req.state == "rejected"
+
+
+def test_scheduler_rejects_never_feasible_request_on_idle_engine():
+    """With no in-flight backlog the feasibility estimate cannot improve,
+    so an unmeetable deadline is rejected immediately instead of holding
+    the queue forever (livelock regression)."""
+    from repro.serving.scheduler import Request, Scheduler
+
+    kv, eng, world = _kv_and_engine()
+    toks = np.arange(64, dtype=np.int32)
+    kv.offload(toks)
+    world.run()
+    assert eng.task_manager.pending_transfers() == 0
+    est = kv.estimate_fetch_seconds(toks)
+    assert est > 0
+    sched = Scheduler(kv, max_running=2, admission_control=True)
+    doomed = Request(tokens=toks, deadline=est / 2)   # unexpired, unmeetable
+    ok = Request(tokens=np.arange(16, dtype=np.int32), deadline=100.0)
+    sched.submit(doomed)
+    sched.submit(ok)
+    assert sched.schedule(now=0.0) == [ok]
+    assert doomed.state == "rejected"
+
+
+def test_scheduler_without_admission_control_ignores_deadlines():
+    from repro.serving.scheduler import Request, Scheduler
+
+    kv, _, _ = _kv_and_engine()
+    sched = Scheduler(kv, max_running=2)
+    late = Request(tokens=np.arange(32, dtype=np.int32), deadline=-1.0)
+    sched.submit(late)
+    assert sched.schedule(now=0.0) == [late]
+
+
+def test_kv_estimate_fetch_seconds_zero_on_miss_positive_on_hit():
+    kv, _, world = _kv_and_engine()
+    toks = np.arange(64, dtype=np.int32)
+    assert kv.estimate_fetch_seconds(toks) == 0.0
+    kv.offload(toks)
+    world.run()
+    assert kv.estimate_fetch_seconds(toks) > 0.0
+
+
+def test_kv_fetch_carries_deadline_to_engine_task():
+    kv, _, world = _kv_and_engine()
+    toks = np.arange(64, dtype=np.int32)
+    kv.offload(toks)
+    world.run()
+    hit, task, _ = kv.fetch(toks, deadline=0.25)
+    world.run()
+    assert hit > 0 and task.deadline == 0.25
+    assert task.traffic_class is TrafficClass.LATENCY
+
+
+def test_weight_manager_wake_deadline_passthrough():
+    from repro.serving.weight_manager import WeightManager
+
+    eng, world, _ = make_sim_engine()
+    seen = []
+    eng.add_completion_listener(lambda t: seen.append(t))
+    wm = WeightManager(eng, nbytes=1 * GB)
+    wm.sleep()
+    wm.wake(deadline=5.0)
+    assert seen[0].deadline is None
+    assert seen[1].deadline == 5.0
+    assert seen[1].traffic_class is TrafficClass.THROUGHPUT
+
+
+def test_orchestrator_slo_report_per_tenant():
+    from repro.serving.orchestrator import Orchestrator, ServedRequest
+
+    reqs = [
+        ServedRequest(model="m", arrival=0.0, tenant="gold", deadline=10.0,
+                      start=0.0, compute_s=1.0),
+        ServedRequest(model="m", arrival=0.0, tenant="gold", deadline=0.5,
+                      start=0.0, compute_s=1.0),
+        ServedRequest(model="m", arrival=0.0, tenant="batch",
+                      start=0.0, compute_s=1.0),
+    ]
+    rep = Orchestrator.slo_report(reqs)
+    assert rep["gold"]["deadlined"] == 2 and rep["gold"]["hits"] == 1
+    assert rep["gold"]["hit_rate"] == 0.5
+    assert rep["batch"]["hit_rate"] is None
+    assert reqs[0].met_deadline is True and reqs[1].met_deadline is False
+
+
+def test_config_env_mirrors_deadline_knobs(monkeypatch):
+    monkeypatch.setenv("MMA_QOS_EDF", "0")
+    monkeypatch.setenv("MMA_QOS_ESCALATE", "0")
+    monkeypatch.setenv("MMA_QOS_BG_PAUSE", "0")
+    monkeypatch.setenv("MMA_QOS_DEADLINE_SLACK", "2.5")
+    monkeypatch.setenv("MMA_QOS_DEADLINE_EST_GBPS", "10")
+    monkeypatch.setenv("MMA_QOS_ADMISSION_UTIL", "0.5")
+    cfg = MMAConfig.from_env()
+    assert cfg.qos_deadline_edf is False
+    assert cfg.qos_deadline_escalate is False
+    assert cfg.qos_background_pause is False
+    assert cfg.qos_deadline_slack == 2.5
+    assert cfg.qos_deadline_est_gbps == 10.0
+    assert cfg.qos_admission_util == 0.5
+
+
+def test_config_env_rejects_bad_deadline_values(monkeypatch):
+    monkeypatch.setenv("MMA_QOS_DEADLINE_SLACK", "0")
+    with pytest.raises(ValueError):
+        MMAConfig.from_env()
+    monkeypatch.delenv("MMA_QOS_DEADLINE_SLACK")
+    monkeypatch.setenv("MMA_QOS_ADMISSION_UTIL", "1.5")
+    with pytest.raises(ValueError):
+        MMAConfig.from_env()
+
+
+def test_class_only_copy_disables_deadline_machinery():
+    cfg = MMAConfig().class_only()
+    assert cfg.qos_enabled                     # PR-1 arbitration intact
+    assert not cfg.qos_deadline_edf
+    assert not cfg.qos_deadline_escalate
+    assert not cfg.qos_background_pause
+    # original untouched
+    assert MMAConfig().qos_deadline_edf
