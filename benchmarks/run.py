@@ -28,6 +28,7 @@ MODULES = [
     ("table2", "table2_direct_priority"),
     ("qos", "qos_contention"),
     ("slo", "slo_trace"),
+    ("kvstore", "kvstore_trace"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),

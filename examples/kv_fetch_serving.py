@@ -42,7 +42,9 @@ def functional_serving() -> None:
               f"generated {req.generated}, prefix hit {req.hit_tokens} "
               f"tokens, TTFT {req.ttft * 1e3:.0f} ms (CPU wall)")
     print(f"transfer log (kind, tokens): {srv.transfer_log}")
-    print(f"host pool entries: {len(srv.kv.pool)}")
+    tiers = srv.kv.tier_report()
+    print(f"host store: {tiers['pages']} pages, tier bytes "
+          f"{tiers['tier_bytes']}")
 
 
 if __name__ == "__main__":

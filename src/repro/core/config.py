@@ -110,6 +110,36 @@ class MMAConfig:
     # is a true upper bound, so the estimate is a lower bound on finish
     # time); lower values defer/reject more aggressively.
     qos_admission_util: float = 1.0
+    # ---- Tiered content-addressed KV store ------------------------------
+    # Radix prefix index + tiered residency (pinned-host slab pool vs
+    # pageable host DRAM) behind KVCacheManager. Off = the flat
+    # whole-prefix-hash HostKVPool, kept as the benchmark control arm.
+    kvstore_radix: bool = True
+    # Page granularity of the radix index, in tokens.
+    kvstore_page_tokens: int = 256
+    # Pinned-host slab pool: explicit capacity + slab size (models the
+    # paper's pre-registered pinned relay buffers — DMA-able without a
+    # staging copy).
+    kvstore_pinned_bytes: int = 16 * GB
+    kvstore_slab_bytes: int = 16 * MB
+    # Pageable host tier capacity (cold KV; must be staged into pinned
+    # buffers before DMA).
+    kvstore_pageable_bytes: int = 48 * GB
+    # Staging bandwidth for pageable->pinned promotion (single-threaded
+    # memcpy + page faults; well below the multipath DMA aggregate).
+    kvstore_pageable_gbps: float = 6.0
+    # Promote pageable pages to the pinned tier on a hit (hot set rises).
+    kvstore_promote_on_hit: bool = True
+    # Demotion/writeback batching: GPU->host writebacks coalesce up to
+    # this many pages into one BACKGROUND transfer.
+    kvstore_writeback_batch_pages: int = 64
+    # Per-tenant soft quota as a fraction of host (pinned+pageable)
+    # capacity: under eviction pressure, tenants over quota lose pages
+    # first.
+    kvstore_tenant_quota_frac: float = 0.5
+    # Assumed prefill recompute rate (tokens/s) for cost-aware eviction:
+    # a page is worth keeping in proportion to recompute_cost - fetch_cost.
+    kvstore_recompute_tok_per_s: float = 4000.0
 
     def class_only(self) -> "MMAConfig":
         """Copy with the deadline machinery disabled (PR-1 class-only
@@ -188,6 +218,55 @@ class MMAConfig:
         )
         if not 0 < cfg.qos_admission_util <= 1:
             raise ValueError("MMA_QOS_ADMISSION_UTIL must be in (0, 1]")
+        cfg.kvstore_radix = bool(
+            _env_int("MMA_KVSTORE_RADIX", int(cfg.kvstore_radix))
+        )
+        cfg.kvstore_page_tokens = _env_int(
+            "MMA_KVSTORE_PAGE_TOKENS", cfg.kvstore_page_tokens
+        )
+        if cfg.kvstore_page_tokens <= 0:
+            raise ValueError("MMA_KVSTORE_PAGE_TOKENS must be positive")
+        cfg.kvstore_pinned_bytes = int(
+            _env_float("MMA_KVSTORE_PINNED_GB", cfg.kvstore_pinned_bytes / GB)
+            * GB
+        )
+        if cfg.kvstore_pinned_bytes < 0:
+            raise ValueError("MMA_KVSTORE_PINNED_GB must be >= 0")
+        cfg.kvstore_pageable_bytes = int(
+            _env_float(
+                "MMA_KVSTORE_PAGEABLE_GB", cfg.kvstore_pageable_bytes / GB
+            ) * GB
+        )
+        if cfg.kvstore_pageable_bytes < 0:
+            raise ValueError("MMA_KVSTORE_PAGEABLE_GB must be >= 0")
+        cfg.kvstore_slab_bytes = int(
+            _env_float("MMA_KVSTORE_SLAB_MB", cfg.kvstore_slab_bytes / MB) * MB
+        )
+        if cfg.kvstore_slab_bytes <= 0:
+            raise ValueError("MMA_KVSTORE_SLAB_MB must be positive")
+        cfg.kvstore_pageable_gbps = _env_float(
+            "MMA_KVSTORE_PAGEABLE_GBPS", cfg.kvstore_pageable_gbps
+        )
+        if cfg.kvstore_pageable_gbps <= 0:
+            raise ValueError("MMA_KVSTORE_PAGEABLE_GBPS must be positive")
+        cfg.kvstore_promote_on_hit = bool(
+            _env_int("MMA_KVSTORE_PROMOTE", int(cfg.kvstore_promote_on_hit))
+        )
+        cfg.kvstore_writeback_batch_pages = _env_int(
+            "MMA_KVSTORE_WB_BATCH", cfg.kvstore_writeback_batch_pages
+        )
+        if cfg.kvstore_writeback_batch_pages <= 0:
+            raise ValueError("MMA_KVSTORE_WB_BATCH must be positive")
+        cfg.kvstore_tenant_quota_frac = _env_float(
+            "MMA_KVSTORE_TENANT_QUOTA", cfg.kvstore_tenant_quota_frac
+        )
+        if not 0 < cfg.kvstore_tenant_quota_frac <= 1:
+            raise ValueError("MMA_KVSTORE_TENANT_QUOTA must be in (0, 1]")
+        cfg.kvstore_recompute_tok_per_s = _env_float(
+            "MMA_KVSTORE_RECOMPUTE_TPS", cfg.kvstore_recompute_tok_per_s
+        )
+        if cfg.kvstore_recompute_tok_per_s <= 0:
+            raise ValueError("MMA_KVSTORE_RECOMPUTE_TPS must be positive")
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:

@@ -1,0 +1,481 @@
+"""Tiered content-addressed KV store over the MMA engine.
+
+``TierManager`` owns residency: which pages sit on GPU HBM (freshly
+produced, writeback in flight), in the pinned-host slab pool, or in
+pageable DRAM — and routes every movement through ``MMAEngine`` so the
+QoS machinery governs cache traffic end to end:
+
+  * **promotion / fetch** (host -> GPU) is LATENCY-class and carries the
+    request's deadline — EDF ordering, slack escalation and direct-path
+    reservation all apply to cache hits;
+  * **demotion / writeback** (GPU -> host) is BACKGROUND, batched up to
+    ``kvstore_writeback_batch_pages`` pages per transfer, so eviction
+    traffic drains opportunistically and can be paused under deadline
+    pressure;
+  * pageable pages must first be **staged** into pinned slabs at
+    ``kvstore_pageable_gbps`` (single-threaded copy + page faults) before
+    the multipath DMA can touch them — the pinned/pageable bandwidth gap
+    the scheduler's admission estimates account for.
+
+``TieredKVStore`` is the facade: radix prefix index + tier manager +
+cost-aware eviction (fetch-cost vs recompute-cost scoring with per-tenant
+quotas). Pages referenced by an in-flight transfer are pinned and can
+never be evicted.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import Direction, TrafficClass
+from ..core.config import MMAConfig
+from .radix import Page, RadixPrefixIndex
+from .tiers import GB, PinnedSlabPool, Tier, TierCounters
+
+
+def _when_done(task, cb: Callable[[], None]) -> None:
+    """Run ``cb`` when ``task`` completes (now, if it already has —
+    zero-byte transfers complete inline during ``memcpy``)."""
+    state = getattr(task, "state", None)
+    if state is not None and getattr(state, "name", "") == "COMPLETE":
+        cb()
+        return
+    prev = task.on_complete
+    def chained(t) -> None:
+        if prev is not None:
+            prev(t)
+        cb()
+    task.on_complete = chained
+
+
+class TierManager:
+    """Per-tier byte accounting + MMA-routed promotion/demotion."""
+
+    def __init__(
+        self,
+        engine,
+        config: Optional[MMAConfig] = None,
+        target_device: int = 0,
+        pinned_bytes: Optional[int] = None,
+        pageable_bytes: Optional[int] = None,
+    ) -> None:
+        self.engine = engine
+        self.config = config or getattr(engine, "config", None) or MMAConfig()
+        self.target = target_device
+        self.pinned = PinnedSlabPool(
+            self.config.kvstore_pinned_bytes
+            if pinned_bytes is None else pinned_bytes,
+            self.config.kvstore_slab_bytes,
+        )
+        self.pageable_capacity = (
+            self.config.kvstore_pageable_bytes
+            if pageable_bytes is None else pageable_bytes
+        )
+        self.tier_bytes: Dict[Tier, int] = {t: 0 for t in Tier}
+        self.counters = TierCounters()
+
+    # -- accounting -----------------------------------------------------
+    @property
+    def host_capacity(self) -> int:
+        return self.pinned.capacity_bytes + self.pageable_capacity
+
+    @property
+    def host_bytes(self) -> int:
+        return self.tier_bytes[Tier.PINNED] + self.tier_bytes[Tier.PAGEABLE]
+
+    def register(self, page: Page) -> None:
+        """Account a freshly-inserted page in its (GPU) tier."""
+        self.tier_bytes[page.tier] += page.nbytes
+
+    def deregister(self, page: Page) -> None:
+        if page.tier is Tier.PINNED:
+            self.pinned.free(page.nbytes)
+        self.tier_bytes[page.tier] -= page.nbytes
+        assert self.tier_bytes[page.tier] >= 0, "tier bytes went negative"
+
+    def _set_tier(self, page: Page, tier: Tier) -> None:
+        if page.tier is tier:
+            return
+        if page.tier is Tier.PINNED:
+            self.pinned.free(page.nbytes)
+        self.tier_bytes[page.tier] -= page.nbytes
+        if tier is Tier.PINNED:
+            self.pinned.alloc(page.nbytes)
+        page.tier = tier
+        self.tier_bytes[tier] += page.nbytes
+
+    # -- placement ------------------------------------------------------
+    def _spill_for(self, nbytes: int, protect: set) -> None:
+        """Demote cold, unpinned PINNED pages to PAGEABLE until ``nbytes``
+        of slab space is free (host-internal copy: accounted, not timed)."""
+        victims = sorted(
+            (
+                p for p in self._pinned_pages()
+                if p.refs == 0 and id(p) not in protect
+            ),
+            key=lambda p: p.last_used,
+        )
+        for v in victims:
+            if self.pinned.can_alloc(nbytes):
+                return
+            self._set_tier(v, Tier.PAGEABLE)
+            self.counters.spills += 1
+            self.counters.spilled_bytes += v.nbytes
+
+    def _pinned_pages(self) -> List[Page]:
+        # provided by the owning store (needs the index); patched in
+        # TieredKVStore.__init__ to avoid a back-reference cycle here.
+        return []
+
+    def land(self, page: Page, protect: set) -> None:
+        """Writeback completion: place a GPU-tier page in host memory —
+        pinned if a slab is free (spilling colder pages if needed), else
+        pageable."""
+        if page.tier is not Tier.GPU:
+            return
+        if not self.pinned.can_alloc(page.nbytes):
+            self._spill_for(page.nbytes, protect)
+        self._set_tier(
+            page,
+            Tier.PINNED if self.pinned.can_alloc(page.nbytes)
+            else Tier.PAGEABLE,
+        )
+
+    # -- movement through MMA -------------------------------------------
+    def writeback(
+        self,
+        pages: List[Page],
+        extra_bytes: int = 0,
+        traffic_class: TrafficClass = TrafficClass.BACKGROUND,
+        deadline: Optional[float] = None,
+        pin: Optional[Callable[[List[Page]], None]] = None,
+        unpin: Optional[Callable[[List[Page]], None]] = None,
+    ) -> List[object]:
+        """GPU -> host demotion, batched: up to
+        ``kvstore_writeback_batch_pages`` pages coalesce into one
+        BACKGROUND transfer. Pages stay pinned (never evictable) until
+        their batch lands; landing prefers the pinned tier."""
+        batch_pages = self.config.kvstore_writeback_batch_pages
+        tasks: List[object] = []
+        batches = [
+            pages[i:i + batch_pages]
+            for i in range(0, len(pages), batch_pages)
+        ] or [[]]
+        for i, batch in enumerate(batches):
+            nbytes = sum(p.nbytes for p in batch)
+            if i == len(batches) - 1:
+                nbytes += extra_bytes     # e.g. an SSM state snapshot
+            if pin is not None:
+                pin(batch)
+            task = self.engine.memcpy(
+                nbytes, device=self.target, direction=Direction.D2H,
+                traffic_class=traffic_class, deadline=deadline,
+            )
+            self.counters.writebacks += 1
+            self.counters.writeback_bytes += nbytes
+
+            def landed(batch=batch) -> None:
+                protect = {id(p) for p in batch}
+                for p in batch:
+                    self.land(p, protect)
+                if unpin is not None:
+                    unpin(batch)
+
+            _when_done(task, landed)
+            tasks.append(task)
+        return tasks
+
+    def fetch(
+        self,
+        pages: List[Page],
+        traffic_class: TrafficClass = TrafficClass.LATENCY,
+        deadline: Optional[float] = None,
+        pin: Optional[Callable[[List[Page]], None]] = None,
+        unpin: Optional[Callable[[List[Page]], None]] = None,
+    ) -> Tuple[object, float]:
+        """Host -> GPU promotion of a prefix hit. Pageable pages are
+        staged into pinned slabs first (returned ``staged_s``, charged at
+        ``kvstore_pageable_gbps``); the DMA itself is one LATENCY-class
+        multipath transfer carrying the request's deadline. Returns
+        ``(transfer task, staging seconds)``."""
+        by_tier: Dict[Tier, int] = {t: 0 for t in Tier}
+        for p in pages:
+            by_tier[p.tier] += p.nbytes
+            self.counters.hits[p.tier] += 1
+            self.counters.hit_bytes[p.tier] += p.nbytes
+            p.hits += 1
+
+        staged = by_tier[Tier.PAGEABLE]
+        staged_s = staged / (self.config.kvstore_pageable_gbps * GB)
+        if staged:
+            self.counters.staged_bytes += staged
+            if self.config.kvstore_promote_on_hit:
+                protect = {id(p) for p in pages}
+                for p in pages:
+                    if p.tier is not Tier.PAGEABLE:
+                        continue
+                    if not self.pinned.can_alloc(p.nbytes):
+                        self._spill_for(p.nbytes, protect)
+                    if self.pinned.can_alloc(p.nbytes):
+                        self._set_tier(p, Tier.PINNED)
+                        self.counters.promotions += 1
+                        self.counters.promoted_bytes += p.nbytes
+
+        # GPU-tier pages (writeback still in flight) are already on the
+        # device — they cost no wire time at all.
+        dma_bytes = by_tier[Tier.PINNED] + by_tier[Tier.PAGEABLE]
+        if pin is not None:
+            pin(pages)
+        # staging precedes the DMA, so it consumes the caller's slack:
+        # the wire transfer must land earlier by exactly staged_s for the
+        # TTFT deadline to hold (EDF/escalation see the true urgency)
+        task = self.engine.memcpy(
+            dma_bytes, device=self.target, direction=Direction.H2D,
+            traffic_class=traffic_class,
+            deadline=None if deadline is None else deadline - staged_s,
+        )
+        # callers that only see the task (KVCacheManager.fetch keeps its
+        # 3-tuple API) can still account the staging seconds
+        task.staged_s = staged_s
+        if unpin is not None:
+            _when_done(task, lambda: unpin(pages))
+        return task, staged_s
+
+
+class TieredKVStore:
+    """Radix prefix index + tier manager + cost-aware eviction."""
+
+    def __init__(
+        self,
+        engine,
+        bytes_per_token: int,
+        page_size: int = 256,
+        config: Optional[MMAConfig] = None,
+        target_device: int = 0,
+        pinned_bytes: Optional[int] = None,
+        pageable_bytes: Optional[int] = None,
+    ) -> None:
+        self.engine = engine
+        self.config = config or getattr(engine, "config", None) or MMAConfig()
+        self.bytes_per_token = bytes_per_token
+        self.page_size = page_size
+        self.page_nbytes = page_size * bytes_per_token
+        self.index = RadixPrefixIndex(page_size)
+        self.tiers = TierManager(
+            engine, self.config, target_device,
+            pinned_bytes=pinned_bytes, pageable_bytes=pageable_bytes,
+        )
+        self.tiers._pinned_pages = lambda: [
+            p for p in self.index.pages() if p.tier is Tier.PINNED
+        ]
+
+    # -- store / lookup -------------------------------------------------
+    def insert(
+        self,
+        tokens: np.ndarray,
+        tenant: str = "default",
+        payload: Any = None,
+        exact_only: bool = False,
+        extra_bytes: int = 0,
+        traffic_class: TrafficClass = TrafficClass.BACKGROUND,
+        deadline: Optional[float] = None,
+    ) -> Tuple[str, List[object]]:
+        """Store every complete page of ``tokens``; only pages not already
+        host-resident move (dedup is the radix win — a re-offloaded shared
+        prefix costs zero wire bytes). Returns ``(prefix key, writeback
+        tasks)`` — at least one task is always issued so callers can
+        observe its class, even when nothing new needs to move."""
+        path, fresh = self.index.insert(
+            tokens, self.page_nbytes, tenant=tenant
+        )
+        if not path:
+            # sub-page sequence: nothing page-aligned to store, but keep
+            # the old contract of returning an observable transfer task
+            task = self.engine.memcpy(
+                extra_bytes, device=self.tiers.target,
+                direction=Direction.D2H,
+                traffic_class=traffic_class, deadline=deadline,
+            )
+            return "", [task]
+        for p in fresh:
+            self.tiers.register(p)
+        # the path is in use for this insert: capacity pressure must not
+        # free the very pages the returned key references
+        self.index.pin(path)
+        try:
+            self._evict_for(sum(p.nbytes for p in fresh), tenant)
+        finally:
+            self.index.unpin(path)
+        last = path[-1]
+        last.terminal = True
+        if payload is not None:
+            last.payload = payload
+        if exact_only:
+            for p in path:
+                p.exact_only = True
+        tasks = self.tiers.writeback(
+            fresh, extra_bytes=extra_bytes,
+            traffic_class=traffic_class, deadline=deadline,
+            pin=self.index.pin, unpin=self.index.unpin,
+        )
+        return last.key, tasks
+
+    def match(
+        self, tokens: np.ndarray, exact_only: bool = False
+    ) -> Tuple[int, List[Page]]:
+        """Longest stored page-aligned prefix. ``exact_only`` (SSM/hybrid
+        snapshot semantics, Marconi-style): a recurrent state is a point
+        snapshot, not a truncatable cache — the hit is trimmed back to
+        the deepest stored *terminal* on the matched path (where a
+        sequence actually ended and its snapshot was taken)."""
+        pages = self.match_pages(tokens)
+        if exact_only:
+            pages = list(pages)
+            while pages and not (
+                pages[-1].terminal and pages[-1].exact_only
+            ):
+                pages.pop()
+        if not pages:
+            self.tiers.counters.misses += 1
+            return 0, []
+        self.index.touch(pages)
+        return len(pages) * self.page_size, pages
+
+    def match_pages(self, tokens: np.ndarray) -> List[Page]:
+        return self.index.match(tokens)
+
+    def fetch(
+        self,
+        tokens: np.ndarray,
+        tenant: str = "default",
+        exact_only: bool = False,
+        traffic_class: TrafficClass = TrafficClass.LATENCY,
+        deadline: Optional[float] = None,
+    ) -> Tuple[int, Optional[object], Any, float]:
+        """Fetch the longest prefix hit back to the device. Returns
+        ``(hit_tokens, task, payload, staged_s)``; the payload rides only
+        on a full terminal hit (exact round trip)."""
+        hit, pages = self.match(tokens, exact_only=exact_only)
+        if hit == 0:
+            return 0, None, None, 0.0
+        for p in pages:
+            p.tenants.add(tenant)
+        task, staged_s = self.tiers.fetch(
+            pages, traffic_class=traffic_class, deadline=deadline,
+            pin=self.index.pin, unpin=self.index.unpin,
+        )
+        last = pages[-1]
+        payload = last.payload if last.terminal else None
+        return hit, task, payload, staged_s
+
+    # -- admission estimates --------------------------------------------
+    def estimate_fetch_floor_seconds(self, tokens: np.ndarray) -> float:
+        """Backlog-independent lower bound on fetch time: the pageable
+        staging cost. Unlike queueing backlog this never drains — if the
+        floor alone blows a deadline, the fetch is provably unmeetable.
+        Pure estimate: touches no LRU state or counters."""
+        pages = self.match_pages(tokens)
+        staged = sum(p.nbytes for p in pages if p.tier is Tier.PAGEABLE)
+        return staged / (self.config.kvstore_pageable_gbps * GB)
+
+    def estimate_fetch_seconds(
+        self, tokens: np.ndarray, deadline: Optional[float] = None
+    ) -> float:
+        """Tier-aware admission estimate: pinned bytes go at the engine's
+        backlogged multipath rate; pageable bytes pay the staging floor on
+        top. Does not move data or bump hit counters."""
+        pages = self.match_pages(tokens)
+        if not pages:
+            return 0.0
+        staged = sum(p.nbytes for p in pages if p.tier is Tier.PAGEABLE)
+        dma = sum(p.nbytes for p in pages if p.tier is not Tier.GPU)
+        est = getattr(self.engine, "estimate_service_seconds", None)
+        dma_s = (
+            est(dma, TrafficClass.LATENCY, deadline=deadline)
+            if est is not None else 0.0
+        )
+        return staged / (self.config.kvstore_pageable_gbps * GB) + dma_s
+
+    # -- cost-aware eviction --------------------------------------------
+    def _keep_benefit(self, page: Page) -> float:
+        """Seconds saved per byte by keeping this page: recompute cost of
+        its tokens minus the cost of fetching it from its current tier.
+        Cold pageable pages with cheap recompute score lowest."""
+        recompute_s = page.n_tokens / self.config.kvstore_recompute_tok_per_s
+        if page.tier is Tier.PAGEABLE:
+            fetch_s = page.nbytes / (self.config.kvstore_pageable_gbps * GB)
+        else:
+            fetch_s = page.nbytes / (self.config.qos_deadline_est_gbps * GB)
+        return (recompute_s - fetch_s) / max(page.nbytes, 1)
+
+    def tenant_bytes(self, tenant: str) -> int:
+        """Bytes attributable solely to ``tenant`` (shared pages are a
+        commons — quota pressure targets exclusive footprint)."""
+        return self._tenant_bytes_map().get(tenant, 0)
+
+    def _tenant_bytes_map(self) -> Dict[str, int]:
+        """Exclusive host bytes per tenant, one O(pages) pass."""
+        out: Dict[str, int] = {}
+        for p in self.index.pages():
+            if len(p.tenants) == 1 and p.tier is not Tier.GPU:
+                (t,) = p.tenants
+                out[t] = out.get(t, 0) + p.nbytes
+        return out
+
+    def _evict_for(self, need: int, tenant: str) -> int:
+        """Free host capacity for ``need`` incoming bytes. Victims are
+        unreferenced leaves, over-quota tenants first, then lowest
+        keep-benefit (fetch-cost vs recompute-cost). Never touches
+        pinned-refs pages — asserted again in ``RadixPrefixIndex.remove``."""
+        freed = 0
+        quota = (
+            self.config.kvstore_tenant_quota_frac * self.tiers.host_capacity
+        )
+        # host_bytes already drops as victims go; ``need`` stays constant
+        # (the incoming bytes still have to land in full)
+        while self.tiers.host_bytes + need > self.tiers.host_capacity:
+            candidates = self.index.evictable()
+            candidates = [p for p in candidates if p.tier is not Tier.GPU]
+            if not candidates:
+                break
+            # one O(pages) accounting pass per eviction, not one per
+            # (candidate x tenant)
+            by_tenant = self._tenant_bytes_map()
+            over_quota = [
+                p for p in candidates
+                if p.tenants and all(
+                    by_tenant.get(t, 0) > quota for t in p.tenants
+                ) and tenant not in p.tenants
+            ]
+            pool = over_quota or candidates
+            victim = min(pool, key=lambda p: (self._keep_benefit(p),
+                                              p.last_used))
+            self.tiers.deregister(victim)
+            self.index.remove(victim)
+            self.tiers.counters.evictions += 1
+            self.tiers.counters.evicted_bytes += victim.nbytes
+            freed += victim.nbytes
+        return freed
+
+    # -- stats ----------------------------------------------------------
+    def stats(self) -> Dict:
+        c = self.tiers.counters
+        return {
+            "pages": self.index.n_pages,
+            "bytes_total": self.index.total_bytes,
+            "tier_bytes": {
+                t.name.lower(): b for t, b in self.tiers.tier_bytes.items()
+            },
+            "pinned_pool": {
+                "capacity_bytes": self.tiers.pinned.capacity_bytes,
+                "allocated_bytes": self.tiers.pinned.allocated_bytes,
+                "slab_bytes": self.tiers.pinned.slab_bytes,
+                "slabs_used": self.tiers.pinned.slabs_used,
+                "slabs_free": self.tiers.pinned.slabs_free,
+                "high_water_slabs": self.tiers.pinned.high_water_slabs,
+                "allocs": self.tiers.pinned.allocs,
+                "frees": self.tiers.pinned.frees,
+            },
+            **c.as_dict(),
+        }

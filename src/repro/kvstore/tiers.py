@@ -1,0 +1,125 @@
+"""Residency tiers and the pinned-host slab pool.
+
+Three tiers (paper §3/§5.2.1): KV pages live on GPU HBM while a request
+runs, in a **pinned-host slab pool** (pre-registered DMA-able memory — the
+paper's relay/staging buffers, explicitly capacity-bounded), or in
+pageable host DRAM. Only pinned memory is directly reachable by the
+multipath DMA engines; a pageable page must first be *staged* into a
+pinned slab at ``kvstore_pageable_gbps`` — the tier difference the
+scheduler's admission estimates must account for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict
+
+GB = 1 << 30
+
+
+class Tier(enum.IntEnum):
+    """Where a KV page currently resides."""
+
+    GPU = 0          # on-device (freshly produced, writeback in flight)
+    PINNED = 1       # pinned-host slab pool: direct multipath DMA
+    PAGEABLE = 2     # pageable host DRAM: must stage through pinned
+
+
+class PinnedSlabPool:
+    """Fixed-capacity pool of pinned host memory.
+
+    Pinned memory is registered with the DMA engine at slab granularity
+    (``slab_bytes`` per ``cudaHostRegister``-style call); many KV pages
+    pack into one slab, so *allocation* is byte-accounted while capacity
+    and reporting stay slab-denominated. The pool never over-commits what
+    the paper's relay buffers physically provide: ``alloc`` raises once
+    the slab-backed capacity is exhausted and callers must spill first.
+    """
+
+    def __init__(self, capacity_bytes: int, slab_bytes: int) -> None:
+        if slab_bytes <= 0:
+            raise ValueError("slab_bytes must be positive")
+        self.slab_bytes = slab_bytes
+        self.slabs_total = max(capacity_bytes // slab_bytes, 0)
+        self.allocated_bytes = 0
+        self.allocs = 0
+        self.frees = 0
+        self.high_water_bytes = 0
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.slabs_total * self.slab_bytes
+
+    @property
+    def slabs_used(self) -> int:
+        return -(-self.allocated_bytes // self.slab_bytes)
+
+    @property
+    def slabs_free(self) -> int:
+        return self.slabs_total - self.slabs_used
+
+    @property
+    def high_water_slabs(self) -> int:
+        return -(-self.high_water_bytes // self.slab_bytes)
+
+    def can_alloc(self, nbytes: int) -> bool:
+        return self.allocated_bytes + nbytes <= self.capacity_bytes
+
+    def alloc(self, nbytes: int) -> int:
+        """Claim ``nbytes`` of pinned memory; returns the slab count now
+        in use. Raises ``MemoryError`` when the pool cannot hold it."""
+        if not self.can_alloc(nbytes):
+            raise MemoryError(
+                f"pinned pool exhausted: need {nbytes} B, "
+                f"{self.capacity_bytes - self.allocated_bytes} B free"
+            )
+        self.allocated_bytes += nbytes
+        self.allocs += 1
+        self.high_water_bytes = max(self.high_water_bytes,
+                                    self.allocated_bytes)
+        return self.slabs_used
+
+    def free(self, nbytes: int) -> None:
+        self.allocated_bytes -= nbytes
+        self.frees += 1
+        assert self.allocated_bytes >= 0, "pinned double-free"
+
+
+@dataclasses.dataclass
+class TierCounters:
+    """Per-tier hit/byte accounting surfaced through the orchestrator."""
+
+    hits: Dict[Tier, int] = dataclasses.field(
+        default_factory=lambda: {t: 0 for t in Tier}
+    )
+    hit_bytes: Dict[Tier, int] = dataclasses.field(
+        default_factory=lambda: {t: 0 for t in Tier}
+    )
+    misses: int = 0
+    promotions: int = 0          # pageable -> pinned
+    promoted_bytes: int = 0
+    spills: int = 0              # pinned -> pageable (capacity pressure)
+    spilled_bytes: int = 0
+    writebacks: int = 0          # GPU -> host transfers issued
+    writeback_bytes: int = 0
+    staged_bytes: int = 0        # pageable bytes staged before DMA
+    evictions: int = 0
+    evicted_bytes: int = 0
+
+    def as_dict(self) -> Dict:
+        return {
+            "hits": {t.name.lower(): n for t, n in self.hits.items()},
+            "hit_bytes": {
+                t.name.lower(): n for t, n in self.hit_bytes.items()
+            },
+            "misses": self.misses,
+            "promotions": self.promotions,
+            "promoted_bytes": self.promoted_bytes,
+            "spills": self.spills,
+            "spilled_bytes": self.spilled_bytes,
+            "writebacks": self.writebacks,
+            "writeback_bytes": self.writeback_bytes,
+            "staged_bytes": self.staged_bytes,
+            "evictions": self.evictions,
+            "evicted_bytes": self.evicted_bytes,
+        }

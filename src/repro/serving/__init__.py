@@ -1,5 +1,6 @@
-"""Serving substrate: KV cache + prefix cache with host offload, weight
-sleep/wake, latency model, functional server, scheduler."""
+"""Serving substrate: tiered KV cache + radix prefix store with host
+offload, weight sleep/wake, latency model, functional server, scheduler."""
+from ..kvstore import TieredKVStore
 from .engine import (
     FunctionalServer,
     LatencyModel,

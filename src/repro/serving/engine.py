@@ -243,6 +243,7 @@ class FunctionalServer:
             req.tokens,
             traffic_class=self.scheduler.transfer_class_for(req, "fetch"),
             deadline=sim_deadline,
+            tenant=req.tenant,
         )
         self.sim_world.run()
         if hit:
@@ -291,6 +292,7 @@ class FunctionalServer:
                     traffic_class=self.scheduler.transfer_class_for(
                         req, "offload"
                     ),
+                    tenant=req.tenant,
                 )
                 self.sim_world.run()
                 self.transfer_log.append(("offload", len(full)))

@@ -1,10 +1,14 @@
-"""KV-cache management: device budget accounting, host offload pool, and
-page-granular prefix cache (LMCache-style) with MMA-accelerated fetch.
+"""KV-cache management: device budget accounting, tiered host store, and
+page-granular prefix cache with MMA-accelerated fetch.
 
 Two cooperating layers:
-  * ``HostKVPool`` / ``PrefixCache`` — host-memory store of evicted or
-    shared KV (and SSM state snapshots for hybrid/ssm families), keyed by
-    page-aligned token-prefix hashes.
+  * ``TieredKVStore`` (``repro.kvstore``) — the default host-side store:
+    radix prefix index (partial-prefix sharing across tenants), pinned-
+    host slab pool vs pageable DRAM residency, QoS-routed promotion /
+    writeback, cost-aware eviction. The flat ``HostKVPool`` /
+    ``PrefixCache`` (whole-prefix hashing, single LRU tier) is kept as
+    the control arm for ``benchmarks/kvstore_trace.py`` and for callers
+    that opt out via ``MMAConfig.kvstore_radix=False``.
   * ``KVCacheManager`` — accounts device bytes, decides offload/fetch, and
     routes the actual movement through the MMA engine (simulated timing on
     the sim backend; real array movement on the functional backend).
@@ -16,14 +20,14 @@ whereas attention KV can be truncated to any hit length.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
-import jax
 import numpy as np
 
 from ..core import Direction, MMAEngine, TrafficClass
+from ..core.config import GB, MMAConfig
+from ..kvstore import TieredKVStore, chain_keys, legacy_prefix_key
 
 
 def kv_bytes_per_token(cfg, dtype_size: int = 2) -> int:
@@ -48,7 +52,10 @@ def ssm_state_bytes(cfg, batch: int = 1, dtype_size: int = 2) -> int:
 
 
 def prefix_key(tokens: np.ndarray) -> str:
-    return hashlib.sha1(np.ascontiguousarray(tokens).tobytes()).hexdigest()
+    """Deprecated whole-prefix SHA-1 key. The store now uses incremental
+    per-page chain keys (``repro.kvstore.chain_keys``); this shim keeps
+    keys saved under the old scheme resolvable for one release."""
+    return legacy_prefix_key(tokens)
 
 
 @dataclasses.dataclass
@@ -61,37 +68,55 @@ class HostKVEntry:
 
 
 class HostKVPool:
-    """LRU host-DRAM pool of offloaded KV."""
+    """LRU host-DRAM pool of offloaded KV (flat control arm)."""
 
     def __init__(self, capacity_bytes: int = 64 << 30) -> None:
         self.capacity = capacity_bytes
         self._entries: "OrderedDict[str, HostKVEntry]" = OrderedDict()
+        self._aliases: Dict[str, str] = {}    # legacy key -> chain key
+        self._alias_of: Dict[str, str] = {}   # chain key -> legacy key
         self.bytes_used = 0
 
-    def put(self, entry: HostKVEntry) -> None:
+    def _drop(self, entry: HostKVEntry) -> None:
+        self.bytes_used -= entry.nbytes
+        # aliases die with their entry, or the dict grows forever
+        self._aliases.pop(self._alias_of.pop(entry.key, None), None)
+
+    def put(self, entry: HostKVEntry, aliases: Tuple[str, ...] = ()) -> None:
         if entry.key in self._entries:
-            self.bytes_used -= self._entries.pop(entry.key).nbytes
+            self._drop(self._entries.pop(entry.key))
         while self.bytes_used + entry.nbytes > self.capacity and self._entries:
             _, old = self._entries.popitem(last=False)
-            self.bytes_used -= old.nbytes
+            self._drop(old)
         self._entries[entry.key] = entry
         self.bytes_used += entry.nbytes
+        for a in aliases:
+            self._aliases[a] = entry.key
+            self._alias_of[entry.key] = a
 
     def get(self, key: str) -> Optional[HostKVEntry]:
         e = self._entries.get(key)
+        if e is None and key in self._aliases:
+            e = self._entries.get(self._aliases[key])
         if e is not None:
-            self._entries.move_to_end(key)
+            self._entries.move_to_end(e.key)
         return e
 
     def __contains__(self, key: str) -> bool:
-        return key in self._entries
+        return self.get(key) is not None
 
     def __len__(self) -> int:
         return len(self._entries)
 
 
 class PrefixCache:
-    """Page-granular longest-prefix matching over the host pool."""
+    """Page-granular longest-prefix matching over the host pool.
+
+    Keys are incremental chain keys — one O(L) pass covers every page
+    boundary, replacing the old whole-prefix re-hash per boundary
+    (O(L^2) match). Entries are additionally registered under their
+    legacy SHA-1 key so keys issued before the switch stay readable.
+    """
 
     def __init__(self, pool: HostKVPool, page_size: int = 256) -> None:
         self.pool = pool
@@ -104,24 +129,25 @@ class PrefixCache:
         payload: Any = None,
         exact_only: bool = False,
     ) -> str:
-        n_pages = len(tokens) // self.page_size
-        n = n_pages * self.page_size
-        if n == 0:
+        keys = chain_keys(tokens, self.page_size)
+        if not keys:
             return ""
-        key = prefix_key(tokens[:n])
+        n = len(keys) * self.page_size
+        key = keys[-1]
         self.pool.put(
             HostKVEntry(key=key, n_tokens=n, nbytes=nbytes,
-                        payload=payload, exact_only=exact_only)
+                        payload=payload, exact_only=exact_only),
+            aliases=(legacy_prefix_key(tokens[:n]),),
         )
         return key
 
     def match(self, tokens: np.ndarray) -> Tuple[int, Optional[HostKVEntry]]:
         """Longest page-aligned stored prefix of ``tokens``."""
-        n_pages = len(tokens) // self.page_size
-        for k in range(n_pages, 0, -1):
-            n = k * self.page_size
-            e = self.pool.get(prefix_key(tokens[:n]))
+        keys = chain_keys(tokens, self.page_size)
+        for k in range(len(keys), 0, -1):
+            e = self.pool.get(keys[k - 1])
             if e is not None:
+                n = k * self.page_size
                 if e.exact_only and e.n_tokens != n:
                     continue
                 return n, e
@@ -130,6 +156,10 @@ class PrefixCache:
 
 class KVCacheManager:
     """Device-byte accounting + offload/fetch through the MMA engine.
+
+    The host side is the tiered radix store by default
+    (``use_radix=None`` follows ``MMAConfig.kvstore_radix``); pass
+    ``use_radix=False`` for the flat whole-prefix pool (control arm).
 
     QoS: prefix-cache fetches are TTFT-critical (``LATENCY`` class);
     offloads drain opportunistically (``BACKGROUND``), so a fetch is never
@@ -147,14 +177,34 @@ class KVCacheManager:
         kv_dtype_size: int = 2,
         page_size: int = 256,
         target_device: int = 0,
+        use_radix: Optional[bool] = None,
+        pinned_bytes: Optional[int] = None,
+        pageable_bytes: Optional[int] = None,
     ) -> None:
         self.cfg = cfg
         self.engine = engine
         self.budget = device_budget_bytes
         self.kv_dtype_size = kv_dtype_size
         self.bytes_per_token = kv_bytes_per_token(cfg, kv_dtype_size)
-        self.pool = HostKVPool()
-        self.prefix = PrefixCache(self.pool, page_size)
+        self.mma_config = getattr(engine, "config", None) or MMAConfig()
+        if use_radix is None:
+            use_radix = self.mma_config.kvstore_radix
+        self.store: Optional[TieredKVStore] = None
+        self.pool: Optional[HostKVPool] = None
+        self.prefix: Optional[PrefixCache] = None
+        if use_radix:
+            self.store = TieredKVStore(
+                engine,
+                bytes_per_token=self.bytes_per_token,
+                page_size=page_size,
+                config=self.mma_config,
+                target_device=target_device,
+                pinned_bytes=pinned_bytes,
+                pageable_bytes=pageable_bytes,
+            )
+        else:
+            self.pool = HostKVPool()
+            self.prefix = PrefixCache(self.pool, page_size)
         self.device_bytes = 0
         self.target = target_device
 
@@ -178,22 +228,32 @@ class KVCacheManager:
         payload: Any = None,
         traffic_class: Optional[TrafficClass] = None,
         deadline: Optional[float] = None,
+        tenant: str = "default",
     ) -> Tuple[str, object]:
-        """D2H: evict this sequence's KV to the host pool. Returns
-        (prefix key, transfer task)."""
-        nbytes = len(tokens) * self.bytes_per_token + ssm_state_bytes(
-            self.cfg, 1, self.kv_dtype_size
-        )
+        """D2H: evict this sequence's KV to the host store. Returns
+        (prefix key, transfer task). On the radix store only pages not
+        already host-resident move — re-offloading a shared prefix costs
+        zero wire bytes."""
         if traffic_class is None:
             traffic_class = self.OFFLOAD_CLASS
-        task = self.engine.memcpy(
-            nbytes, device=self.target, direction=Direction.D2H,
-            traffic_class=traffic_class, deadline=deadline,
-        )
-        key = self.prefix.store(
-            tokens, nbytes, payload=payload,
-            exact_only=self.cfg.uses_ssm,
-        )
+        ssm_bytes = ssm_state_bytes(self.cfg, 1, self.kv_dtype_size)
+        if self.store is not None:
+            key, tasks = self.store.insert(
+                tokens, tenant=tenant, payload=payload,
+                exact_only=self.cfg.uses_ssm, extra_bytes=ssm_bytes,
+                traffic_class=traffic_class, deadline=deadline,
+            )
+            task = tasks[-1]
+        else:
+            nbytes = len(tokens) * self.bytes_per_token + ssm_bytes
+            task = self.engine.memcpy(
+                nbytes, device=self.target, direction=Direction.D2H,
+                traffic_class=traffic_class, deadline=deadline,
+            )
+            key = self.prefix.store(
+                tokens, nbytes, payload=payload,
+                exact_only=self.cfg.uses_ssm,
+            )
         self.release_if_admitted(len(tokens))
         return key, task
 
@@ -202,20 +262,35 @@ class KVCacheManager:
         tokens: np.ndarray,
         traffic_class: Optional[TrafficClass] = None,
         deadline: Optional[float] = None,
+        tenant: str = "default",
     ) -> Tuple[int, object, Any]:
         """H2D: longest-prefix hit fetched back to the device. Returns
         (hit_tokens, transfer task or None, payload). ``deadline`` tags
         the fetch for EDF ordering in the engine."""
+        if traffic_class is None:
+            traffic_class = self.FETCH_CLASS
+        if self.store is not None:
+            hit, task, payload, _staged = self.store.fetch(
+                tokens, tenant=tenant, exact_only=self.cfg.uses_ssm,
+                traffic_class=traffic_class, deadline=deadline,
+            )
+            if hit == 0:
+                return 0, None, None
+            self.admit(hit)
+            return hit, task, payload
         hit, entry = self.prefix.match(tokens)
         if hit == 0:
             return 0, None, None
         nbytes = hit * self.bytes_per_token
-        if traffic_class is None:
-            traffic_class = self.FETCH_CLASS
+        # the flat pool is pageable host memory: staging precedes the DMA
+        # and consumes the caller's slack, exactly as on the tiered store
+        staged_s = nbytes / (self.mma_config.kvstore_pageable_gbps * GB)
         task = self.engine.memcpy(
             nbytes, device=self.target, direction=Direction.H2D,
-            traffic_class=traffic_class, deadline=deadline,
+            traffic_class=traffic_class,
+            deadline=None if deadline is None else deadline - staged_s,
         )
+        task.staged_s = staged_s
         self.admit(hit)
         return hit, task, entry.payload
 
@@ -224,8 +299,14 @@ class KVCacheManager:
     ) -> float:
         """Admission-control estimate of this request's prefix-cache fetch
         time given the engine's current LATENCY backlog (0 on a miss —
-        nothing to fetch). Does not move any data. With ``deadline``,
-        only the backlog EDF would serve first counts."""
+        nothing to fetch). Does not move any data. Tier-aware on the
+        radix store: pinned-resident bytes go at the engine's multipath
+        rate, pageable bytes pay the staging cost on top. With
+        ``deadline``, only the backlog EDF would serve first counts."""
+        if self.store is not None:
+            return self.store.estimate_fetch_seconds(
+                tokens, deadline=deadline
+            )
         hit, _ = self.prefix.match(tokens)
         if hit == 0:
             return 0.0
@@ -233,7 +314,32 @@ class KVCacheManager:
         est = getattr(self.engine, "estimate_service_seconds", None)
         if est is None:                      # engine without QoS support
             return 0.0
-        return est(nbytes, TrafficClass.LATENCY, deadline=deadline)
+        # the flat pool is pageable host memory: staging cost applies to
+        # every byte before the multipath DMA can touch it
+        staged = nbytes / (self.mma_config.kvstore_pageable_gbps * GB)
+        return staged + est(nbytes, TrafficClass.LATENCY, deadline=deadline)
+
+    def estimate_fetch_floor_seconds(self, tokens: np.ndarray) -> float:
+        """Backlog-independent floor on the fetch time (pageable staging
+        only). Queue backlog drains; this floor does not — if it alone
+        exceeds a request's deadline budget, admission can reject
+        immediately instead of holding."""
+        if self.store is not None:
+            return self.store.estimate_fetch_floor_seconds(tokens)
+        hit, _ = self.prefix.match(tokens)
+        nbytes = hit * self.bytes_per_token
+        return nbytes / (self.mma_config.kvstore_pageable_gbps * GB)
+
+    def tier_report(self) -> Dict:
+        """Per-tier hit/byte statistics (radix store) or a flat-pool
+        summary (control arm)."""
+        if self.store is not None:
+            return self.store.stats()
+        return {
+            "pages": len(self.pool),
+            "bytes_total": self.pool.bytes_used,
+            "tier_bytes": {"pageable": self.pool.bytes_used},
+        }
 
     def release_if_admitted(self, n_tokens: int) -> None:
         take = min(self.device_bytes, n_tokens * self.bytes_per_token)

@@ -19,12 +19,16 @@ import dataclasses
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from ..configs.base import ModelConfig
 from ..core import Direction, MMAConfig, SimWorld, TrafficClass, make_sim_engine
 from ..core.engine import MMAEngine
 from ..core.task_launcher import SimBackend
 from ..core.topology import h20_server
+from ..kvstore import TieredKVStore
 from .engine import LatencyModel
+from .kv_cache import kv_bytes_per_token
 
 
 @dataclasses.dataclass
@@ -45,12 +49,19 @@ class ServedRequest:
     # ``arrival``). None = best-effort.
     tenant: str = "default"
     deadline: Optional[float] = None
+    # Optional prompt token ids: when set (and the orchestrator tracks
+    # KV), the prefix hit comes from the shared tiered radix store
+    # instead of the declared ``context_tokens``.
+    tokens: Optional[np.ndarray] = dataclasses.field(
+        default=None, compare=False
+    )
     # filled by the orchestrator
     start: float = 0.0
     wake_s: float = 0.0
     fetch_s: float = 0.0
     compute_s: float = 0.0
     finish: float = 0.0
+    hit_tokens: int = 0
 
     @property
     def first_token_time(self) -> float:
@@ -84,6 +95,8 @@ class Orchestrator:
         gpu_budget_bytes: int,
         use_mma: bool = True,
         kv_dtype_size: int = 1,
+        track_kv: bool = False,
+        kv_page_tokens: int = 256,
     ) -> None:
         self.instances: "OrderedDict[str, ModelInstance]" = OrderedDict()
         self.latency: Dict[str, LatencyModel] = {}
@@ -96,9 +109,32 @@ class Orchestrator:
             )
         self.budget = gpu_budget_bytes
         self.use_mma = use_mma
+        self.kv_dtype_size = kv_dtype_size
         self.clock = 0.0
         self.resident_bytes = 0
         self.events: List[Tuple[float, str, str]] = []
+        # Optional tiered KV tracking: one radix store per model (KV is
+        # model-specific) on a persistent shared sim engine, so tier
+        # residency/hit state survives across requests and per-tier
+        # hit/byte stats can be surfaced via ``kv_report``.
+        self.track_kv = track_kv
+        self.kv_page_tokens = kv_page_tokens
+        self.kv_stores: Dict[str, TieredKVStore] = {}
+        if track_kv:
+            self.kv_engine, self.kv_world, _ = make_sim_engine()
+
+    def _kv_store(self, name: str) -> TieredKVStore:
+        store = self.kv_stores.get(name)
+        if store is None:
+            store = TieredKVStore(
+                self.kv_engine,
+                bytes_per_token=kv_bytes_per_token(
+                    self.instances[name].cfg, self.kv_dtype_size
+                ),
+                page_size=self.kv_page_tokens,
+            )
+            self.kv_stores[name] = store
+        return store
 
     # ------------------------------------------------------------------
     def _transfer_s(
@@ -169,10 +205,40 @@ class Orchestrator:
             req.wake_s = self._ensure_resident(req.model, deadline_s=budget)
             self.clock += req.wake_s
             lm = self.latency[req.model]
-            if req.context_tokens:
+            if self.track_kv and req.tokens is not None:
+                store = self._kv_store(req.model)
+                # a cold wake already consumed part of the TTFT budget;
+                # the fetch gets only what remains, or EDF would see 5x
+                # the true slack on a request that waited out a wake
+                fetch_budget = (
+                    None if req.deadline is None
+                    else max(req.deadline - self.clock, 0.0)
+                )
+                hit, task, _payload, staged_s = store.fetch(
+                    req.tokens, tenant=req.tenant,
+                    traffic_class=TrafficClass.LATENCY,
+                    deadline=(
+                        None if fetch_budget is None
+                        else self.kv_world.now + fetch_budget
+                    ),
+                )
+                self.kv_world.run()
+                req.hit_tokens = hit
+                req.fetch_s = staged_s + (task.elapsed if hit else 0.0)
+                suffix = max(len(req.tokens) - hit, 1)
+                req.compute_s = (
+                    lm.prefill_seconds(suffix, kv_context=hit)
+                    + lm.decode_step_seconds() + 0.030
+                )
+                # the finished sequence lands back in the host cache
+                # (BACKGROUND writeback; dedup makes shared pages free)
+                store.insert(req.tokens, tenant=req.tenant)
+                self.kv_world.run()
+            elif req.context_tokens:
                 tb = lm.ttft(req.context_tokens)
                 req.fetch_s = tb.fetch_s
                 req.compute_s = tb.compute_s
+                req.hit_tokens = req.context_tokens
             else:
                 req.compute_s = lm.prefill_seconds(512) + 0.03
             self.clock += req.fetch_s + req.compute_s
@@ -182,6 +248,23 @@ class Orchestrator:
         return requests
 
     # ------------------------------------------------------------------
+    def kv_report(self) -> Dict[str, Dict]:
+        """Per-model tiered KV stats plus a cross-model aggregate of
+        per-tier hits and hit bytes (the §5.2.1 observability surface:
+        how much TTFT-critical traffic each residency tier absorbed)."""
+        report: Dict[str, Dict] = {
+            name: store.stats() for name, store in self.kv_stores.items()
+        }
+        agg_hits: Dict[str, int] = {}
+        agg_bytes: Dict[str, int] = {}
+        for stats in report.values():
+            for tier, n in stats["hits"].items():
+                agg_hits[tier] = agg_hits.get(tier, 0) + n
+            for tier, b in stats["hit_bytes"].items():
+                agg_bytes[tier] = agg_bytes.get(tier, 0) + b
+        report["aggregate"] = {"hits": agg_hits, "hit_bytes": agg_bytes}
+        return report
+
     @staticmethod
     def slo_report(requests: List[ServedRequest]) -> Dict[str, Dict]:
         """Per-tenant SLO summary over served requests: TTFT percentiles

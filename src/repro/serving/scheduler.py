@@ -16,6 +16,12 @@ requests that can still hit theirs), and one whose deadline has already
 passed is rejected outright — it lands in ``self.rejected`` with state
 ``"rejected"`` so the serving layer can surface the SLO violation instead
 of burning bandwidth on a guaranteed miss.
+
+The estimate is tier-aware (pinned-resident hit bytes go at the engine's
+multipath rate; pageable bytes pay the staging cost on top), and a
+request whose *staging floor alone* exceeds its budget is rejected
+immediately rather than held — backlog drains, source-tier bandwidth
+does not.
 """
 from __future__ import annotations
 
@@ -127,6 +133,18 @@ class Scheduler:
         )
         return now + est <= req.deadline
 
+    def deadline_floor_exceeded(self, req: Request, now: float) -> bool:
+        """Tier-aware hard infeasibility: the fetch's backlog-independent
+        floor (pageable->pinned staging of cold-tier hit bytes) already
+        blows the deadline. Unlike engine backlog, staging cost never
+        drains — holding such a request can only waste queue headroom."""
+        if req.deadline is None:
+            return False
+        floor = getattr(self.kv, "estimate_fetch_floor_seconds", None)
+        if floor is None:
+            return False
+        return now + floor(req.tokens) > req.deadline
+
     def _admit(self, req: Request) -> bool:
         need = req.n_tokens + req.max_new_tokens
         if len(self.running) >= self.max_running:
@@ -159,6 +177,12 @@ class Scheduler:
                     self._reject(req)
                     continue
                 if not self.deadline_feasible(req, now):
+                    if self.deadline_floor_exceeded(req, now):
+                        # staging cost alone (source tier too slow) blows
+                        # the budget — no amount of backlog drain helps
+                        self.waiting.popleft()
+                        self._reject(req)
+                        continue
                     if self._engine_busy():
                         break       # backlog may drain; hold the queue
                     # idle engine: the estimate can only improve with a

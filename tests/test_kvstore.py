@@ -1,0 +1,704 @@
+"""Tiered content-addressed KV store: radix prefix index, pinned slab
+pool, QoS-routed promotion/demotion, cost-aware eviction — plus the
+KVCacheManager/Scheduler/Orchestrator integration and hypothesis
+properties (match alignment/monotonicity, roundtrip, ref-count eviction
+safety, per-tier byte conservation)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Direction, MMAConfig, TrafficClass, make_sim_engine
+from repro.core.config import GB
+from repro.kvstore import (
+    PinnedSlabPool,
+    RadixPrefixIndex,
+    Tier,
+    TieredKVStore,
+    chain_keys,
+    legacy_prefix_key,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_store(
+    page_size: int = 4,
+    bytes_per_token: int = 1024,
+    pinned_bytes: int = 1 << 20,
+    pageable_bytes: int = 1 << 20,
+    **cfg_kw,
+):
+    cfg_kw.setdefault("kvstore_slab_bytes", 1024)
+    cfg = MMAConfig(**cfg_kw)
+    eng, world, _ = make_sim_engine(config=cfg)
+    store = TieredKVStore(
+        eng, bytes_per_token=bytes_per_token, page_size=page_size,
+        pinned_bytes=pinned_bytes, pageable_bytes=pageable_bytes,
+    )
+    return store, eng, world
+
+
+def toks(*vals) -> np.ndarray:
+    return np.asarray(vals, dtype=np.int32)
+
+
+def arange(n: int, start: int = 0) -> np.ndarray:
+    return np.arange(start, start + n, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Hashing: incremental chain keys + legacy shim
+# ---------------------------------------------------------------------------
+def test_chain_keys_cover_every_boundary_in_one_pass():
+    t = arange(40)
+    keys = chain_keys(t, 8)
+    assert len(keys) == 5
+    # each boundary key equals the key of the truncated array: the chain
+    # commits to the full prefix, not just the last page
+    for k in range(1, 6):
+        assert chain_keys(t[: 8 * k], 8)[-1] == keys[k - 1]
+    # diverging an early token changes every later key
+    t2 = t.copy()
+    t2[0] += 1
+    keys2 = chain_keys(t2, 8)
+    assert all(a != b for a, b in zip(keys, keys2))
+
+
+def test_chain_keys_subpage_empty():
+    assert chain_keys(arange(7), 8) == []
+    assert chain_keys(arange(0), 8) == []
+
+
+def test_legacy_sha_keys_stay_readable_via_pool_alias():
+    from repro.serving.kv_cache import HostKVPool, PrefixCache, prefix_key
+
+    pool = HostKVPool()
+    pc = PrefixCache(pool, page_size=8)
+    t = arange(24)
+    new_key = pc.store(t, nbytes=100)
+    old_key = prefix_key(t)          # key a pre-upgrade caller kept
+    assert new_key != old_key
+    assert pool.get(old_key) is pool.get(new_key)
+    assert old_key in pool and new_key in pool
+    assert prefix_key(t) == legacy_prefix_key(t)
+
+
+# ---------------------------------------------------------------------------
+# Radix index
+# ---------------------------------------------------------------------------
+def test_radix_insert_match_roundtrip():
+    idx = RadixPrefixIndex(page_size=4)
+    t = arange(10)
+    path, fresh = idx.insert(t, nbytes_per_page=64)
+    assert len(path) == len(fresh) == 2      # 10 tokens -> 2 full pages
+    assert idx.total_bytes == 128 and idx.n_pages == 2
+    assert idx.match(t) == path
+    assert idx.match(arange(8)) == path      # page-aligned prefix hits
+
+
+def test_radix_pages_shared_across_sequences_and_tenants():
+    idx = RadixPrefixIndex(page_size=4)
+    shared = arange(8)
+    a = np.concatenate([shared, arange(4, start=100)])
+    b = np.concatenate([shared, arange(4, start=200)])
+    path_a, fresh_a = idx.insert(a, 64, tenant="a")
+    path_b, fresh_b = idx.insert(b, 64, tenant="b")
+    assert len(fresh_a) == 3
+    assert len(fresh_b) == 1                 # only b's tail is new
+    assert path_a[0] is path_b[0] and path_a[1] is path_b[1]
+    assert path_a[0].tenants == {"a", "b"}
+    assert idx.n_pages == 4
+
+
+def test_radix_divergence_inside_first_page_misses():
+    idx = RadixPrefixIndex(page_size=4)
+    t = arange(8)
+    idx.insert(t, 64)
+    bad = t.copy()
+    bad[0] += 1
+    assert idx.match(bad) == []
+
+
+def test_radix_remove_guards_refcount_and_interior():
+    idx = RadixPrefixIndex(page_size=4)
+    path, _ = idx.insert(arange(12), 64)
+    leaf, interior = path[-1], path[0]
+    idx.pin([leaf])
+    with pytest.raises(AssertionError):
+        idx.remove(leaf)                     # pinned
+    with pytest.raises(AssertionError):
+        idx.remove(interior)                 # interior
+    idx.unpin([leaf])
+    idx.remove(leaf)
+    assert idx.n_pages == 2 and idx.total_bytes == 128
+    # the old parent is a leaf now and becomes evictable
+    assert path[1] in idx.evictable()
+
+
+def test_radix_evictable_excludes_pinned_leaves():
+    idx = RadixPrefixIndex(page_size=4)
+    path, _ = idx.insert(arange(8), 64)
+    idx.pin([path[-1]])
+    assert idx.evictable() == []             # leaf pinned, parent interior
+    idx.unpin([path[-1]])
+    assert idx.evictable() == [path[-1]]
+
+
+# ---------------------------------------------------------------------------
+# Pinned slab pool
+# ---------------------------------------------------------------------------
+def test_pinned_pool_accounting_and_capacity():
+    pool = PinnedSlabPool(capacity_bytes=10 * 1024, slab_bytes=1024)
+    assert pool.slabs_total == 10
+    pool.alloc(1500)
+    assert pool.allocated_bytes == 1500 and pool.slabs_used == 2
+    assert pool.can_alloc(8 * 1024) and not pool.can_alloc(9 * 1024)
+    with pytest.raises(MemoryError):
+        pool.alloc(9 * 1024)
+    pool.free(1500)
+    assert pool.allocated_bytes == 0 and pool.slabs_free == 10
+    assert pool.high_water_bytes == 1500 and pool.high_water_slabs == 2
+
+
+# ---------------------------------------------------------------------------
+# Tiered store: movement, residency, QoS routing
+# ---------------------------------------------------------------------------
+def test_store_writeback_is_background_and_fetch_is_latency():
+    store, eng, world = make_store()
+    t = arange(8)
+    _, tasks = store.insert(t)
+    assert all(x.traffic_class is TrafficClass.BACKGROUND for x in tasks)
+    assert all(x.direction is Direction.D2H for x in tasks)
+    world.run()
+    hit, task, _, staged_s = store.fetch(t, deadline=5.0)
+    assert hit == 8
+    assert task.traffic_class is TrafficClass.LATENCY
+    assert task.direction is Direction.H2D
+    assert task.deadline == 5.0
+    world.run()
+
+
+def test_store_pages_land_pinned_after_writeback():
+    store, _, world = make_store()
+    _, _ = store.insert(arange(8))
+    pages = store.index.pages()
+    assert all(p.tier is Tier.GPU for p in pages)     # writeback in flight
+    world.run()
+    assert all(p.tier is Tier.PINNED for p in pages)
+    assert store.tiers.tier_bytes[Tier.PINNED] == store.index.total_bytes
+    assert store.tiers.pinned.allocated_bytes == store.index.total_bytes
+
+
+def test_store_overflow_lands_pageable_and_staging_is_charged():
+    # pinned pool holds only 1 page; the rest must land pageable
+    store, _, world = make_store(pinned_bytes=4 * 1024,
+                                 kvstore_promote_on_hit=False)
+    t = arange(16)                                    # 4 pages of 4 KB
+    store.insert(t)
+    world.run()
+    tiers = sorted(p.tier.name for p in store.index.pages())
+    assert tiers.count("PINNED") == 1 and tiers.count("PAGEABLE") == 3
+    hit, _, _, staged_s = store.fetch(t)
+    world.run()
+    assert hit == 16
+    expect = 3 * 4 * 1024 / (store.config.kvstore_pageable_gbps * GB)
+    assert staged_s == pytest.approx(expect)
+    assert store.tiers.counters.staged_bytes == 3 * 4 * 1024
+
+
+def test_store_promote_on_hit_moves_pageable_to_pinned():
+    # pinned pool holds one page: inserting b spills the colder a to
+    # pageable; fetching a then promotes it back, spilling b
+    store, _, world = make_store(pinned_bytes=4 * 1024)
+    a, b = arange(4), arange(4, start=100)
+    store.insert(a)
+    world.run()
+    store.insert(b)
+    world.run()
+    assert store.index.match(a)[0].tier is Tier.PAGEABLE   # spilled
+    assert store.index.match(b)[0].tier is Tier.PINNED
+    assert store.tiers.counters.spills == 1
+    store.fetch(a)
+    world.run()
+    assert store.tiers.counters.promotions == 1
+    assert store.tiers.counters.promoted_bytes == 4 * 1024
+    assert store.index.match(a)[0].tier is Tier.PINNED     # hot set rose
+    assert store.index.match(b)[0].tier is Tier.PAGEABLE
+
+
+def test_store_writeback_batching():
+    store, _, world = make_store(kvstore_writeback_batch_pages=4)
+    _, tasks = store.insert(arange(40))               # 10 pages
+    assert len(tasks) == 3                            # 4 + 4 + 2 pages
+    assert store.tiers.counters.writebacks == 3
+    assert store.tiers.counters.writeback_bytes == 10 * 4 * 1024
+    world.run()
+
+
+def test_store_dedup_reoffload_moves_zero_new_bytes():
+    store, _, world = make_store()
+    store.insert(arange(8))
+    world.run()
+    moved0 = store.tiers.counters.writeback_bytes
+    key, tasks = store.insert(arange(8))              # same tokens again
+    world.run()
+    assert store.tiers.counters.writeback_bytes == moved0
+    assert tasks[-1].nbytes == 0                      # observable, empty
+    assert key == chain_keys(arange(8), 4)[-1]
+
+
+def test_store_subpage_sequence_returns_empty_key_and_task():
+    store, _, world = make_store()
+    key, tasks = store.insert(arange(3))
+    assert key == "" and len(tasks) == 1
+    world.run()
+    assert store.index.n_pages == 0
+
+
+def test_store_exact_only_hits_only_at_stored_terminals():
+    store, _, world = make_store()
+    t = arange(12)
+    store.insert(t, exact_only=True, payload={"ssm": 1})
+    world.run()
+    # a longer query extending the snapshot exactly reuses it (the
+    # snapshot is a valid resume point)…
+    hit, pages = store.match(np.concatenate([t, arange(4, start=50)]),
+                             exact_only=True)
+    assert hit == 12 and pages[-1].terminal
+    # …but a shorter page-aligned prefix does NOT: no snapshot was taken
+    # there (old flat-cache semantics: e.n_tokens must equal the probe)
+    hit, pages = store.match(t[:8], exact_only=True)
+    assert hit == 0 and pages == []
+    # without exact_only the same prefix truncates fine (attention KV)
+    hit, _ = store.match(t[:8])
+    assert hit == 8
+    hit, _, payload, _ = store.fetch(t, exact_only=True)
+    assert hit == 12 and payload == {"ssm": 1}
+    world.run()
+
+
+def test_store_fetch_pins_pages_in_flight():
+    store, _, world = make_store()
+    t = arange(8)
+    store.insert(t)
+    world.run()
+    hit, task, _, _ = store.fetch(t)
+    assert hit == 8
+    assert all(p.refs == 1 for p in store.index.pages())
+    world.run()                                       # transfer lands
+    assert all(p.refs == 0 for p in store.index.pages())
+
+
+def test_store_eviction_never_frees_refcounted_pages():
+    # host capacity of 2 pages total, everything pageable
+    store, _, world = make_store(pinned_bytes=0, pageable_bytes=8 * 1024)
+    a = arange(8)
+    store.insert(a)
+    world.run()
+    pages_a = store.index.match(a)
+    store.index.pin(pages_a)                          # in-flight elsewhere
+    store.insert(arange(8, start=100), tenant="b")    # needs their space
+    world.run()
+    assert all(store.index.get(p.key) is p for p in pages_a), (
+        "pinned pages were evicted"
+    )
+    store.index.unpin(pages_a)
+
+
+def test_store_eviction_is_cost_aware_pageable_first():
+    # a lands pinned, then b's landing spills it to pageable (LRU spill);
+    # under capacity pressure the pageable page — higher fetch cost,
+    # lower keep benefit — is the eviction victim, not the pinned one
+    a, b = arange(4), arange(4, start=100)
+    store, _, world = make_store(pinned_bytes=4 * 1024,
+                                 pageable_bytes=4 * 1024,
+                                 kvstore_promote_on_hit=False)
+    store.insert(a)
+    world.run()
+    store.insert(b)
+    world.run()
+    assert store.index.match(a)[0].tier is Tier.PAGEABLE
+    assert store.index.match(b)[0].tier is Tier.PINNED
+    store.insert(arange(4, start=200))                # forces one eviction
+    world.run()
+    assert store.tiers.counters.evictions >= 1
+    assert store.index.match(a) == []                 # pageable evicted
+    assert store.index.match(b) != []                 # pinned survived
+    # (b may itself be spilled to pageable when the new page lands —
+    # landing gives the hottest page pinned preference)
+
+
+def test_store_eviction_frees_enough_for_multi_page_inserts():
+    # 4-page host capacity, full; a 4-page insert must evict all four
+    # residents, not stop halfway (regression: need was double-counted
+    # against the shrinking host_bytes)
+    store, _, world = make_store(pinned_bytes=0, pageable_bytes=16 * 1024)
+    store.insert(arange(16))
+    world.run()
+    store.insert(arange(16, start=500))
+    world.run()
+    assert store.tiers.counters.evictions == 4
+    assert store.tiers.host_bytes <= store.tiers.host_capacity
+    assert len(store.index.match(arange(16, start=500))) == 4
+
+
+def test_store_tenant_quota_targets_over_quota_tenants():
+    store, _, world = make_store(
+        pinned_bytes=0, pageable_bytes=16 * 1024,
+        kvstore_tenant_quota_frac=0.25,               # quota = 1 page
+    )
+    store.insert(arange(12), tenant="hog")            # 3 pages, over quota
+    world.run()
+    store.index.touch(store.index.match(arange(12)))  # hog is also hottest
+    store.insert(arange(8, start=500), tenant="small")
+    world.run()
+    assert store.tiers.counters.evictions >= 1
+    # the victim came from the over-quota tenant despite its recency
+    assert len(store.index.match(arange(8, start=500))) == 2
+    assert len(store.index.match(arange(12))) < 3
+
+
+def test_store_byte_conservation_across_ops():
+    store, _, world = make_store(pinned_bytes=8 * 1024,
+                                 pageable_bytes=8 * 1024)
+    rng = np.random.default_rng(3)
+    base = arange(8)
+    for i in range(12):
+        t = np.concatenate([
+            base, rng.integers(0, 100, size=4 * (i % 3), dtype=np.int32)
+        ])
+        store.insert(t, tenant=f"t{i % 3}")
+        world.run()
+        store.fetch(t)
+        world.run()
+        total = sum(store.tiers.tier_bytes.values())
+        assert total == store.index.total_bytes
+        assert store.tiers.tier_bytes[Tier.PINNED] == (
+            store.tiers.pinned.allocated_bytes
+        )
+        assert all(b >= 0 for b in store.tiers.tier_bytes.values())
+        assert store.tiers.tier_bytes[Tier.GPU] == 0  # all landed
+
+
+def test_store_stats_surface():
+    store, _, world = make_store()
+    store.insert(arange(8))
+    world.run()
+    store.fetch(arange(8))
+    world.run()
+    s = store.stats()
+    assert s["pages"] == 2 and s["bytes_total"] == 2 * 4 * 1024
+    assert s["hits"]["pinned"] == 2
+    assert s["hit_bytes"]["pinned"] == 2 * 4 * 1024
+    assert s["pinned_pool"]["allocated_bytes"] == 2 * 4 * 1024
+    assert s["writebacks"] == 1
+
+
+# ---------------------------------------------------------------------------
+# KVCacheManager integration (public API preserved)
+# ---------------------------------------------------------------------------
+def _manager(**kw):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    mma = MMAConfig(kvstore_slab_bytes=1024, **kw.pop("mma", {}))
+    eng, world, _ = make_sim_engine(config=mma)
+    from repro.serving.kv_cache import KVCacheManager
+
+    kv = KVCacheManager(cfg, eng, device_budget_bytes=1 << 30,
+                        page_size=16, **kw)
+    return kv, eng, world
+
+
+def test_manager_radix_roundtrip_and_accounting():
+    kv, _, world = _manager()
+    assert kv.store is not None                       # radix is the default
+    t = arange(64)
+    kv.admit(64)
+    used = kv.device_bytes
+    key, off = kv.offload(t)
+    world.run()
+    assert kv.device_bytes == 0
+    assert off.traffic_class is TrafficClass.BACKGROUND
+    hit, task, _ = kv.fetch(t)
+    world.run()
+    assert hit == 64 and kv.device_bytes == used
+    assert task.traffic_class is TrafficClass.LATENCY
+    other = t.copy()
+    other[0] += 1
+    assert kv.fetch(other)[0] == 0
+
+
+def test_manager_partial_prefix_reuse_across_requests():
+    kv, _, world = _manager()
+    kv.offload(arange(64), tenant="a")
+    world.run()
+    # a different request sharing only the first 32 tokens still hits —
+    # impossible under whole-prefix hashing
+    query = np.concatenate([arange(32), arange(32, start=900)])
+    hit, _, _ = kv.fetch(query, tenant="b")
+    world.run()
+    assert hit == 32
+
+
+def test_manager_flat_control_arm_still_works():
+    kv, _, world = _manager(use_radix=False)
+    assert kv.store is None and kv.prefix is not None
+    t = arange(64)
+    key, _ = kv.offload(t)
+    world.run()
+    hit, task, _ = kv.fetch(t)
+    world.run()
+    assert hit == 64
+    # flat pool is pageable: estimates include the staging floor
+    assert kv.estimate_fetch_floor_seconds(t) > 0
+    assert kv.estimate_fetch_seconds(t) >= kv.estimate_fetch_floor_seconds(t)
+
+
+def test_manager_estimates_are_tier_aware():
+    kv_pinned, _, w1 = _manager()
+    kv_pageable, _, w2 = _manager(pinned_bytes=0)
+    t = arange(64)
+    for kv, w in ((kv_pinned, w1), (kv_pageable, w2)):
+        kv.offload(t)
+        w.run()
+    assert kv_pinned.estimate_fetch_floor_seconds(t) == 0.0
+    assert kv_pageable.estimate_fetch_floor_seconds(t) > 0.0
+    assert kv_pageable.estimate_fetch_seconds(t) > (
+        kv_pinned.estimate_fetch_seconds(t)
+    )
+    assert kv_pinned.estimate_fetch_seconds(np.asarray([1], np.int32)) == 0.0
+
+
+def test_manager_tier_report_shapes():
+    kv, _, world = _manager()
+    kv.offload(arange(64))
+    world.run()
+    rep = kv.tier_report()
+    assert set(rep["tier_bytes"]) == {"gpu", "pinned", "pageable"}
+    flat, _, _ = _manager(use_radix=False)
+    assert "pageable" in flat.tier_report()["tier_bytes"]
+
+
+def test_scheduler_rejects_when_staging_floor_blows_deadline():
+    from repro.serving.scheduler import Request, Scheduler
+
+    # all-pageable store with a crawling staging rate: the floor alone
+    # exceeds any reasonable budget, and backlog drain cannot help
+    kv, eng, world = _manager(
+        pinned_bytes=0, mma={"kvstore_pageable_gbps": 1e-4}
+    )
+    t = arange(64)
+    kv.offload(t)
+    world.run()
+    eng.memcpy(1 * GB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY)     # engine is busy
+    sched = Scheduler(kv, max_running=2, admission_control=True)
+    req = Request(tokens=t, deadline=0.5)
+    sched.submit(req)
+    assert sched.schedule(now=0.0) == []
+    assert req.state == "rejected"                     # not held: floor
+    world.run()
+
+
+def test_orchestrator_kv_report_and_shared_hits():
+    from repro.serving import Orchestrator, ServedRequest
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    orch = Orchestrator({"m": cfg}, gpu_budget_bytes=1 << 40,
+                        track_kv=True, kv_page_tokens=8)
+    t = arange(32)
+    reqs = [
+        ServedRequest(model="m", arrival=0.0, tokens=t, tenant="a"),
+        ServedRequest(model="m", arrival=1.0, tokens=t, tenant="b"),
+    ]
+    done = orch.serve(reqs)
+    assert done[0].hit_tokens == 0
+    assert done[1].hit_tokens == 32                   # cross-tenant hit
+    assert done[1].fetch_s >= 0.0
+    rep = orch.kv_report()
+    assert "m" in rep and "aggregate" in rep
+    assert sum(rep["aggregate"]["hits"].values()) > 0
+    assert rep["m"]["tier_bytes"]["pinned"] > 0
+
+
+def test_kvstore_env_mirrors(monkeypatch):
+    env = {
+        "MMA_KVSTORE_RADIX": "0",
+        "MMA_KVSTORE_PAGE_TOKENS": "128",
+        "MMA_KVSTORE_PINNED_GB": "2",
+        "MMA_KVSTORE_SLAB_MB": "4",
+        "MMA_KVSTORE_PAGEABLE_GB": "8",
+        "MMA_KVSTORE_PAGEABLE_GBPS": "3.5",
+        "MMA_KVSTORE_PROMOTE": "0",
+        "MMA_KVSTORE_WB_BATCH": "7",
+        "MMA_KVSTORE_TENANT_QUOTA": "0.3",
+        "MMA_KVSTORE_RECOMPUTE_TPS": "9000",
+    }
+    for k, v in env.items():
+        monkeypatch.setenv(k, v)
+    c = MMAConfig.from_env()
+    assert c.kvstore_radix is False
+    assert c.kvstore_page_tokens == 128
+    assert c.kvstore_pinned_bytes == 2 * GB
+    assert c.kvstore_slab_bytes == 4 << 20
+    assert c.kvstore_pageable_bytes == 8 * GB
+    assert c.kvstore_pageable_gbps == 3.5
+    assert c.kvstore_promote_on_hit is False
+    assert c.kvstore_writeback_batch_pages == 7
+    assert c.kvstore_tenant_quota_frac == 0.3
+    assert c.kvstore_recompute_tok_per_s == 9000.0
+    monkeypatch.setenv("MMA_KVSTORE_TENANT_QUOTA", "0")
+    with pytest.raises(ValueError):
+        MMAConfig.from_env()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (skipped — not the whole module — when the
+# hypothesis dev extra is absent)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    def _skip_all(*a, **kw):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="property tests need hypothesis"
+            )(fn)
+        return deco
+
+    given = settings = _skip_all
+
+    class st:  # noqa: N801 — stand-in for hypothesis.strategies
+        @staticmethod
+        def _nop(*a, **kw):
+            return None
+        integers = lists = tuples = _nop
+
+
+@given(
+    page=st.integers(2, 16),
+    n_tokens=st.integers(0, 120),
+    extra=st.integers(0, 40),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=60, deadline=None)
+def test_prop_match_is_page_aligned_and_monotone(page, n_tokens, extra, seed):
+    idx = RadixPrefixIndex(page_size=page)
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, 50, size=n_tokens).astype(np.int32)
+    idx.insert(t, nbytes_per_page=page * 10)
+    query = np.concatenate(
+        [t, rng.integers(50, 100, size=extra).astype(np.int32)]
+    )
+    hit = len(idx.match(query)) * page
+    assert hit == (n_tokens // page) * page           # page-aligned, full
+    # monotone: a query sharing fewer pages can never hit longer
+    prev = None
+    for k in range(len(query) // page, -1, -1):
+        h = len(idx.match(query[: k * page])) * page
+        assert prev is None or h <= prev
+        prev = h
+
+
+@given(
+    page=st.integers(2, 8),
+    lengths=st.lists(st.integers(1, 60), min_size=1, max_size=6),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=40, deadline=None)
+def test_prop_insert_match_roundtrip(page, lengths, seed):
+    idx = RadixPrefixIndex(page_size=page)
+    rng = np.random.default_rng(seed)
+    seqs = [rng.integers(0, 30, size=n).astype(np.int32) for n in lengths]
+    for s in seqs:
+        idx.insert(s, nbytes_per_page=64)
+    for s in seqs:
+        assert len(idx.match(s)) == len(s) // page
+    # global byte accounting matches the page count
+    assert idx.total_bytes == idx.n_pages * 64
+
+
+@given(
+    page=st.integers(2, 6),
+    seed=st.integers(0, 2**31),
+    n_pin=st.integers(0, 3),
+)
+@settings(max_examples=30, deadline=None)
+def test_prop_eviction_never_frees_pinned(page, seed, n_pin):
+    rng = np.random.default_rng(seed)
+    store, _, world = make_store(
+        page_size=page, bytes_per_token=64,
+        pinned_bytes=0, pageable_bytes=3 * page * 64,   # 3 pages total
+    )
+    first = rng.integers(0, 30, size=3 * page).astype(np.int32)
+    store.insert(first)
+    world.run()
+    pinned = store.index.match(first)[:n_pin]
+    store.index.pin(pinned)
+    for _ in range(4):                                  # pressure
+        store.insert(rng.integers(30, 60, size=2 * page).astype(np.int32))
+        world.run()
+    for p in pinned:
+        assert store.index.get(p.key) is p
+    store.index.unpin(pinned)
+
+
+@given(
+    page=st.integers(2, 6),
+    ops=st.lists(
+        st.tuples(st.integers(0, 2), st.integers(1, 40),
+                  st.integers(0, 2**31)),
+        min_size=1, max_size=10,
+    ),
+)
+@settings(max_examples=30, deadline=None)
+def test_prop_tier_byte_accounting_conserves(page, ops):
+    store, _, world = make_store(
+        page_size=page, bytes_per_token=64,
+        pinned_bytes=4 * page * 64, pageable_bytes=4 * page * 64,
+    )
+    known = []
+    for kind, n, seed in ops:
+        rng = np.random.default_rng(seed)
+        t = rng.integers(0, 20, size=n).astype(np.int32)
+        if kind == 0 or not known:
+            store.insert(t, tenant=f"t{seed % 2}")
+            known.append(t)
+        elif kind == 1:
+            store.fetch(known[seed % len(known)])
+        else:
+            store.fetch(t)
+        world.run()
+        # conservation: every page is in exactly one tier, pinned bytes
+        # equal the slab pool's ledger, nothing is negative or dangling
+        assert sum(store.tiers.tier_bytes.values()) == (
+            store.index.total_bytes
+        )
+        assert store.tiers.tier_bytes[Tier.PINNED] == (
+            store.tiers.pinned.allocated_bytes
+        )
+        assert all(v >= 0 for v in store.tiers.tier_bytes.values())
+        assert all(p.refs == 0 for p in store.index.pages())
+
+
+# ---------------------------------------------------------------------------
+# Trace benchmark (slow tier)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_kvstore_trace_benchmark_clears_bar(tmp_path):
+    out = tmp_path / "BENCH_kvstore.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["MMA_BENCH_KVSTORE_PATH"] = str(out)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kvstore_trace"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(out.read_text())
+    assert data["improvement"] >= 1.3
+    assert data["radix"]["hit_rate"] >= data["flat"]["hit_rate"]
