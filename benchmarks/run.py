@@ -29,6 +29,7 @@ MODULES = [
     ("qos", "qos_contention"),
     ("slo", "slo_trace"),
     ("kvstore", "kvstore_trace"),
+    ("tenant", "tenant_isolation"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),

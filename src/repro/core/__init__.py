@@ -25,8 +25,10 @@ from .transfer_task import (
     MicroTaskQueue,
     TaskManager,
     TaskState,
+    TenantArbiter,
     TrafficClass,
     TransferTask,
+    WFQTenantArbiter,
 )
 
 __all__ = [
@@ -41,5 +43,5 @@ __all__ = [
     "Backend", "SimBackend",
     "Device", "Topology", "h20_server", "tpu_host",
     "Direction", "MicroTask", "MicroTaskQueue", "TaskManager", "TaskState",
-    "TrafficClass", "TransferTask",
+    "TenantArbiter", "TrafficClass", "TransferTask", "WFQTenantArbiter",
 ]

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 MB = 1 << 20
 GB = 1 << 30
@@ -18,6 +18,56 @@ GB = 1 << 30
 def _env_float(name: str, default: float) -> float:
     v = os.environ.get(name)
     return float(v) if v is not None else default
+
+
+def _parse_weight_list(name: str, raw: str, expect: int) -> tuple:
+    """Parse a comma-separated positive-float list from env var ``name``,
+    failing loudly (never silently keeping defaults) on wrong-length or
+    non-numeric input."""
+    items = raw.split(",")
+    if len(items) != expect:
+        raise ValueError(
+            f"{name} needs {expect} values "
+            f"(LATENCY,THROUGHPUT,BACKGROUND), got {raw!r}"
+        )
+    try:
+        parsed = tuple(float(x) for x in items)
+    except ValueError:
+        raise ValueError(
+            f"{name} must be comma-separated numbers, got {raw!r}"
+        ) from None
+    if any(w <= 0 for w in parsed):
+        # a zero/negative weight would starve its class outright
+        raise ValueError(f"{name} must be positive, got {raw!r}")
+    return parsed
+
+
+def _parse_share_map(name: str, raw: str) -> Dict[str, float]:
+    """Parse ``tenantA:4,tenantB:1`` share maps from env var ``name``,
+    failing loudly on malformed entries or non-positive shares."""
+    shares: Dict[str, float] = {}
+    for item in raw.split(","):
+        tenant, sep, share = item.partition(":")
+        tenant = tenant.strip()
+        if not sep or not tenant:
+            raise ValueError(
+                f"{name} entries must look like 'tenant:share', got {item!r}"
+            )
+        try:
+            value = float(share)
+        except ValueError:
+            raise ValueError(
+                f"{name} share for {tenant!r} must be numeric, got {share!r}"
+            ) from None
+        if value <= 0:
+            # a zero/negative share would starve the tenant outright
+            raise ValueError(
+                f"{name} share for {tenant!r} must be positive, got {share!r}"
+            )
+        shares[tenant] = value
+    if not shares:
+        raise ValueError(f"{name} must name at least one tenant, got {raw!r}")
+    return shares
 
 
 def _env_int(name: str, default: int) -> int:
@@ -104,6 +154,25 @@ class MMAConfig:
     # exposes no congestion signal, so the projection uses a conservative
     # fixed rate rather than the optimistic aggregate multipath rate.
     qos_deadline_est_gbps: float = 25.0
+    # ---- Hierarchical tenancy (class -> tenant -> flow) -----------------
+    # Per-tenant WFQ shares *within* each traffic class. ``None`` (default)
+    # disables the tenant level entirely: every transfer lands in one
+    # implicit tenant queue and arbitration is byte-for-byte the class-only
+    # scheme. A mapping like ``{"gold": 8, "noisy": 1}`` activates
+    # virtual-time WFQ between tenants inside each class; tenants absent
+    # from the map get ``tenant_default_share``. Idle tenants' bandwidth is
+    # borrowed work-conservingly, and the WFQ virtual clock bounds any
+    # backlogged tenant's wait to ~total_share/own_share fair intervals.
+    tenant_shares: Optional[Dict[str, float]] = None
+    # Share assumed for tenants not named in ``tenant_shares``.
+    tenant_default_share: float = 1.0
+    # Cooperative in-flight chunk preemption: a BACKGROUND/THROUGHPUT chunk
+    # that has not yet started service on its host-link (PCIe) stage is
+    # recalled — its remaining bytes re-queued — when a LATENCY chunk (or,
+    # under tenant WFQ, an in-share tenant's chunk displacing an
+    # out-of-share tenant's) arrives for that link. Chunks already on the
+    # wire always finish: preemption is cooperative at chunk granularity.
+    qos_preempt_inflight: bool = True
     # Admission control: fraction of the aggregate link bandwidth assumed
     # available when deciding whether a prefix fetch can meet its deadline.
     # 1.0 = the certified "provably unmeetable" test (the aggregate rate
@@ -158,6 +227,13 @@ class MMAConfig:
             return float(self.qos_weights[i])
         return 1.0
 
+    def tenant_share(self, tenant: str) -> float:
+        """WFQ share for ``tenant`` (``tenant_default_share`` when the
+        tenant is not named in ``tenant_shares``)."""
+        if self.tenant_shares and tenant in self.tenant_shares:
+            return float(self.tenant_shares[tenant])
+        return float(self.tenant_default_share)
+
     @staticmethod
     def from_env() -> "MMAConfig":
         cfg = MMAConfig()
@@ -179,18 +255,20 @@ class MMAConfig:
         )
         weights = os.environ.get("MMA_QOS_WEIGHTS")
         if weights:
-            parsed = tuple(float(x) for x in weights.split(","))
-            if len(parsed) != len(cfg.qos_weights):
-                raise ValueError(
-                    f"MMA_QOS_WEIGHTS needs {len(cfg.qos_weights)} values "
-                    f"(LATENCY,THROUGHPUT,BACKGROUND), got {weights!r}"
-                )
-            if any(w <= 0 for w in parsed):
-                # a zero/negative weight would starve its class outright
-                raise ValueError(
-                    f"MMA_QOS_WEIGHTS must be positive, got {weights!r}"
-                )
-            cfg.qos_weights = parsed
+            cfg.qos_weights = _parse_weight_list(
+                "MMA_QOS_WEIGHTS", weights, len(cfg.qos_weights)
+            )
+        shares = os.environ.get("MMA_TENANT_SHARES")
+        if shares:
+            cfg.tenant_shares = _parse_share_map("MMA_TENANT_SHARES", shares)
+        cfg.tenant_default_share = _env_float(
+            "MMA_TENANT_DEFAULT_SHARE", cfg.tenant_default_share
+        )
+        if cfg.tenant_default_share <= 0:
+            raise ValueError("MMA_TENANT_DEFAULT_SHARE must be positive")
+        cfg.qos_preempt_inflight = bool(
+            _env_int("MMA_QOS_PREEMPT", int(cfg.qos_preempt_inflight))
+        )
         cfg.qos_reserve_direct = bool(
             _env_int("MMA_QOS_RESERVE_DIRECT", int(cfg.qos_reserve_direct))
         )

@@ -47,6 +47,8 @@ class EngineStats:
                 "by_class": {
                     c.name.lower(): b for c, b in w.bytes_by_class.items()
                 },
+                "by_tenant": dict(w.bytes_by_tenant),
+                "preempted": w.chunks_preempted,
             }
             for d, w in workers.items()
         }
@@ -100,16 +102,18 @@ class MMAEngine:
         on_complete: Optional[Callable[[TransferTask], None]] = None,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
         deadline: Optional[float] = None,
+        tenant: str = "default",
     ) -> DummyTask:
         """Intercept an asynchronous copy: record a Transfer Task, return
         the Dummy Task to be enqueued on the caller's stream. Dispatch
         begins only when the stream reaches the Dummy Task (C1: deferred
         path binding). ``deadline`` is an absolute backend-clock SLO
-        deadline (EDF ordering, escalation)."""
+        deadline (EDF ordering, escalation); ``tenant`` is the owning
+        tenant for hierarchical class->tenant arbitration."""
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=False, src=src, dst=dst, on_complete=on_complete,
-            traffic_class=traffic_class, deadline=deadline,
+            traffic_class=traffic_class, deadline=deadline, tenant=tenant,
         )
         dummy = DummyTask(task=task, on_activate=self._activate)
         self.sync_engine.register(dummy)
@@ -124,6 +128,7 @@ class MMAEngine:
         dst: object = None,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
         deadline: Optional[float] = None,
+        tenant: str = "default",
     ) -> TransferTask:
         """Intercept a synchronous copy: same Transfer-Task machinery, but
         the transfer is activated immediately; the caller is expected to
@@ -132,7 +137,7 @@ class MMAEngine:
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=True, src=src, dst=dst, traffic_class=traffic_class,
-            deadline=deadline,
+            deadline=deadline, tenant=tenant,
         )
         self._activate(task)
         return task
@@ -199,7 +204,26 @@ class MMAEngine:
             return
 
         self.task_manager.split(task)
+        # kick_all's preemption pass runs first, so the arrival's chunks
+        # are not stuck behind outranked pre-wire chunks already pulled.
         self.selector.kick_all()
+
+    # ------------------------------------------------------------------
+    # Tenant observability
+    # ------------------------------------------------------------------
+    def tenant_bytes(self) -> Dict[str, int]:
+        """Delivered bytes per tenant, aggregated across all link
+        workers (the per-link split is in
+        ``EngineStats.snapshot_workers``)."""
+        out: Dict[str, int] = {}
+        for w in self.workers.values():
+            for tenant, b in w.bytes_by_tenant.items():
+                out[tenant] = out.get(tenant, 0) + b
+        return out
+
+    def preemptions(self) -> int:
+        """Chunks cooperatively recalled in flight so far."""
+        return sum(w.chunks_preempted for w in self.workers.values())
 
     # ------------------------------------------------------------------
     # SLO admission support

@@ -72,6 +72,8 @@ class JaxBackend(Backend):
     def launch(
         self, mt: MicroTask, route: Route, on_done: Callable[[], None]
     ) -> None:
+        # Copies run synchronously; there is no recall window, so no
+        # PreemptHandle is returned (preemption is a sim-backend feature).
         task = mt.parent
         payload: HostPayload = (
             task.src if mt.direction == Direction.H2D else task.dst
@@ -130,6 +132,7 @@ def multipath_device_put(
     target: int = 0,
     engine: Optional[MMAEngine] = None,
     traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+    tenant: str = "default",
 ) -> jax.Array:
     """H2D: move a host array to ``devices[target]`` over all paths."""
     eng = engine or make_functional_engine()
@@ -148,6 +151,7 @@ def multipath_device_put(
     task = eng.memcpy(
         nbytes=arr.nbytes, device=target, direction=Direction.H2D,
         src=payload, dst=assembler, traffic_class=traffic_class,
+        tenant=tenant,
     )
     assert assembler.complete(), "functional dispatch must complete inline"
     return assembler.result(payload.shape, payload.dtype)
@@ -158,6 +162,7 @@ def multipath_device_get(
     target: int = 0,
     engine: Optional[MMAEngine] = None,
     traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+    tenant: str = "default",
 ) -> np.ndarray:
     """D2H: fetch a device array back to host memory over all paths."""
     eng = engine or make_functional_engine()
@@ -169,5 +174,6 @@ def multipath_device_get(
     task = eng.memcpy(
         nbytes=out.nbytes, device=target, direction=Direction.D2H,
         src=jarr.reshape(-1), dst=payload, traffic_class=traffic_class,
+        tenant=tenant,
     )
     return out.reshape(shape)

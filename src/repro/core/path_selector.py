@@ -27,6 +27,13 @@ capacity:
     LATENCY (``qos_deadline_escalate``), and BACKGROUND pulls pause while
     any LATENCY deadline is in jeopardy (``qos_background_pause``), resuming
     when the pressure clears.
+  * **Tenant arbitration** — with ``MMAConfig.tenant_shares`` set, pops
+    additionally run per-tenant WFQ within each class (the queue's level-2
+    arbiter), and per-tenant bytes are attributed on every pull.
+  * **Cooperative preemption** — a newly arrived LATENCY flow (or an
+    in-share tenant under tenant WFQ) recalls lower-ranked chunks still
+    waiting before their wire stage on its destination's link
+    (``qos_preempt_inflight``); recalled chunks re-queue loss-free.
 """
 from __future__ import annotations
 
@@ -87,6 +94,15 @@ class LinkWorker:
         self.bytes_by_class: Dict[TrafficClass, int] = {
             c: 0 for c in TrafficClass
         }
+        # Per-tenant byte attribution, mirroring bytes_by_class, so worker
+        # snapshots and the tenant-isolation harness agree on who moved
+        # what over this link.
+        self.bytes_by_tenant: Dict[str, int] = {}
+        self.chunks_preempted = 0
+        # In-flight chunks this worker launched, keyed by id(micro-task):
+        # (mt, route, class-at-pull, backend preemption handle). Only
+        # entries whose backend returned a handle are recallable.
+        self._inflight: Dict[int, tuple] = {}
 
     # -- backpressure: effective pull capacity ---------------------------
     def _capacity(self) -> int:
@@ -111,12 +127,34 @@ class LinkWorker:
                 self.chunks_relay += 1
             self.bytes_total += mt.nbytes
             self.bytes_by_class[mt.traffic_class] += mt.nbytes
+            self.bytes_by_tenant[mt.tenant] = (
+                self.bytes_by_tenant.get(mt.tenant, 0) + mt.nbytes
+            )
             t0 = self.backend.now()
-            self.backend.launch(
+            handle = self.backend.launch(
                 mt, route, lambda mt=mt, t0=t0: self._on_chunk_done(mt, t0)
             )
+            if handle is not None:
+                self._inflight[id(mt)] = (mt, route, mt.traffic_class, handle)
+
+    def preempt_inflight(self, mt: MicroTask, route, cls_at_pull) -> None:
+        """Undo the accounting of a successfully recalled chunk: the bytes
+        never crossed the wire and the micro-task returns to the shared
+        queue, so this pull must vanish from every ledger the benches and
+        conservation properties compare."""
+        self.outstanding -= 1
+        if route.is_direct:
+            self.chunks_direct -= 1
+        else:
+            self.chunks_relay -= 1
+        self.bytes_total -= mt.nbytes
+        self.bytes_by_class[cls_at_pull] -= mt.nbytes
+        self.bytes_by_tenant[mt.tenant] -= mt.nbytes
+        self.chunks_preempted += 1
+        self._inflight.pop(id(mt), None)
 
     def _on_chunk_done(self, mt: MicroTask, t0: float) -> None:
+        self._inflight.pop(id(mt), None)
         self.outstanding -= 1
         dt = self.backend.now() - t0
         if dt > 0 and mt.nbytes > 0:
@@ -166,6 +204,80 @@ class PathSelector:
     def register_worker(self, worker: LinkWorker) -> None:
         self.workers[worker.dev] = worker
         self.backend = worker.backend
+
+    # -- cooperative in-flight preemption --------------------------------
+    def _serveable_dests(self, dev: int, cls: TrafficClass) -> List[int]:
+        """Destinations with queued ``cls`` work that ``dev``'s link could
+        carry — its own, or any relay-eligible one (the same reach as the
+        pull loop's class sweep)."""
+        return [
+            dest for dest in self.queue.pending_dests(cls)
+            if dest == dev or self._may_relay_for(dev, dest)
+        ]
+
+    def _preempt_worker(self, worker: LinkWorker) -> int:
+        """Cooperatively recall in-flight chunks on ``worker``'s link that
+        queued work now outranks (``qos_preempt_inflight``). Two triggers,
+        mirroring the two arbitration levels:
+
+          * class — queued LATENCY work this link could carry (direct or
+            stolen relay) recalls THROUGHPUT/BACKGROUND chunks still
+            waiting before their wire stage;
+          * tenant — under tenant WFQ, queued same-class work of a
+            less-served tenant (lower virtual time) recalls a chunk of a
+            tenant already served beyond it (out-of-share).
+
+        Recalled chunks re-queue loss-free (their bytes never crossed the
+        wire); chunks in service always finish — preemption is cooperative
+        at the chunk boundary. Returns the number of chunks recalled."""
+        if not self.config.qos_preempt_inflight or not worker._inflight:
+            return 0
+        dev = worker.dev
+        latency_waiting = bool(
+            self._serveable_dests(dev, TrafficClass.LATENCY)
+        )
+        tenant_wfq = self.queue.tenant_wfq_active
+        if not latency_waiting and not tenant_wfq:
+            return 0
+        n = 0
+        # serveable dests depend only on (dev, class): compute once per
+        # class, not per in-flight chunk — this runs on every kick_all
+        dests_by_cls: Dict[TrafficClass, List[int]] = {}
+        for mt, route, cls_at_pull, handle in list(
+            worker._inflight.values()
+        ):
+            cls = mt.traffic_class
+            victim = (
+                latency_waiting
+                and cls.value > TrafficClass.LATENCY.value
+            )
+            if not victim and tenant_wfq:
+                if cls not in dests_by_cls:
+                    dests_by_cls[cls] = self._serveable_dests(dev, cls)
+                # compare the clock the victim would return to after the
+                # recall refund, or the refund itself makes the victim
+                # the minimum again and the same chunk thrashes. If the
+                # task changed class since the pull, the refund goes to
+                # the pull-time class's clock, not this one — compare
+                # this clock unrefunded.
+                mine = (
+                    self.queue.tenants.refunded_vtime(
+                        cls, mt.tenant, mt.nbytes
+                    )
+                    if cls is cls_at_pull
+                    else self.queue.tenant_vtime(cls, mt.tenant)
+                )
+                victim = any(
+                    t != mt.tenant
+                    and self.queue.tenant_vtime(cls, t) < mine
+                    for dest in dests_by_cls[cls]
+                    for t in self.queue.queued_tenants(cls, dest)
+                )
+            if victim and handle.try_cancel():
+                worker.preempt_inflight(mt, route, cls_at_pull)
+                self.queue.requeue(mt, cls_at_pull=cls_at_pull)
+                n += 1
+        return n
 
     def refresh_deadlines(self) -> None:
         """Re-evaluate deadline state before dispatching: escalate at-risk
@@ -301,6 +413,12 @@ class PathSelector:
         self._kicking = True
         try:
             self.refresh_deadlines()
+            # Preemption pass: every dispatch round is a micro-task
+            # boundary — in-flight chunks that queued work now outranks
+            # yield here (their recalled slots are pulled again below).
+            if self.config.qos_enabled and self.config.qos_preempt_inflight:
+                for w in self.workers.values():
+                    self._preempt_worker(w)
             # Two-phase: direct pulls first so a synchronously-completing
             # backend cannot let one relay worker drain the queue before
             # the destination's own link gets its direct-priority chance.

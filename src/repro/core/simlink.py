@@ -71,6 +71,51 @@ class Grant:
             self.link._slot_freed()
 
 
+class PreemptHandle:
+    """Cooperative-cancellation handle for one chunk's tandem-queue path.
+
+    A chunk may be recalled while it still *waits in a link queue* at or
+    before its wire stage (``wire_stage``, the chunk's first interconnect
+    hop — PCIe or NVLink): no interconnect link has carried it yet, so
+    the recall is loss-free (only cheap host-side stages re-run) and the
+    full chunk re-queues. A chunk whose current stage service has
+    begun — or that already advanced past the wire stage — always
+    finishes: preemption is cooperative at chunk-boundary granularity, the
+    link never aborts an in-service DMA.
+    """
+
+    def __init__(self, wire_stage: int = 0) -> None:
+        self.wire_stage = wire_stage
+        self._stage = -1                       # -1: pre-dispatch delay
+        self._token: Optional[Dict[str, bool]] = None
+        self._done = False
+        self._cancelled = False
+        self._held: List["Grant"] = []
+
+    @property
+    def preempted(self) -> bool:
+        return self._cancelled
+
+    def try_cancel(self) -> bool:
+        """Recall the chunk if it is still queued at or before its wire
+        stage. Returns True when the recall succeeded (the path's
+        ``on_done`` will never fire); False when the chunk is already in
+        service, past the wire, or finished."""
+        if self._done or self._cancelled:
+            return False
+        if self._stage > self.wire_stage:
+            return False
+        if self._token is not None and self._token.get("started"):
+            return False
+        self._cancelled = True
+        if self._token is not None:
+            self._token["cancelled"] = True
+        for g in self._held:
+            g.release()
+        self._held.clear()
+        return True
+
+
 class SimLink:
     """A FIFO bandwidth server (one PCIe direction, NVLink port, DRAM
     channel group, or the inter-socket fabric).
@@ -84,6 +129,9 @@ class SimLink:
     If ``hold=True`` the slot is NOT auto-freed at service end — the caller
     must release the returned Grant (used to model the naive single-pipeline
     relay, where the PCIe stage stays blocked during the NVLink stage).
+    A submission carrying a cancellation ``token`` can be withdrawn while
+    it still waits in the queue (see ``PreemptHandle``); cancelled entries
+    are skipped, unserved, when a slot frees.
     """
 
     def __init__(
@@ -98,9 +146,10 @@ class SimLink:
         self.rate = rate_gbps * GB  # bytes/s
         self.slots = slots
         self._busy = 0
-        self._queue: Deque[Tuple[int, float, Callable[[Grant], None], bool, str]] = (
-            deque()
-        )
+        self._queue: Deque[
+            Tuple[int, float, Callable[[Grant], None], bool, str,
+                  Optional[Dict[str, bool]]]
+        ] = deque()
         # stats
         self.bytes_done = 0
         self.busy_time = 0.0
@@ -115,8 +164,9 @@ class SimLink:
         efficiency: float = 1.0,
         hold: bool = False,
         tag: str = "",
+        token: Optional[Dict[str, bool]] = None,
     ) -> None:
-        self._queue.append((nbytes, efficiency, on_done, hold, tag))
+        self._queue.append((nbytes, efficiency, on_done, hold, tag, token))
         self._try_start()
 
     def queue_depth(self) -> int:
@@ -124,7 +174,11 @@ class SimLink:
 
     def _try_start(self) -> None:
         while self._busy < self.slots and self._queue:
-            nbytes, eff, on_done, hold, tag = self._queue.popleft()
+            nbytes, eff, on_done, hold, tag, token = self._queue.popleft()
+            if token is not None and token.get("cancelled"):
+                continue            # recalled while waiting: skip unserved
+            if token is not None:
+                token["started"] = True
             self._busy += 1
             per_slot_rate = self.rate / self.slots
             dt = nbytes / (per_slot_rate * eff) if self.rate > 0 else 0.0
@@ -164,6 +218,7 @@ def submit_path(
     pipelined: bool = True,
     hold_from: int = 0,
     tag: str = "",
+    handle: Optional[PreemptHandle] = None,
 ) -> None:
     """Send one chunk through a tandem of ``(link, efficiency)`` stages.
 
@@ -173,12 +228,23 @@ def submit_path(
     overlap with each other's successors. (Host-side stages before
     ``hold_from`` — DRAM, xGMI — are never held: the relay GPU's internal
     pipelining is what Fig 6 is about.)
+
+    With a ``handle``, the path supports cooperative preemption: while the
+    chunk waits (unserved) in a link queue at or before
+    ``handle.wire_stage``, ``handle.try_cancel()`` withdraws it — no later
+    stage runs, ``on_done`` never fires, held grants are released.
     """
 
     held: List[Grant] = []
+    if handle is not None:
+        handle._held = held
 
     def start_stage(i: int) -> None:
+        if handle is not None and handle._cancelled:
+            return                 # recalled during the dispatch delay
         if i == len(stages):
+            if handle is not None:
+                handle._done = True
             for g in held:
                 g.release()
             on_done()
@@ -191,7 +257,13 @@ def submit_path(
                 held.append(grant)
             start_stage(i + 1)
 
-        link.submit(nbytes, next_stage, efficiency=eff, hold=hold, tag=tag)
+        token = None
+        if handle is not None:
+            token = {"cancelled": False, "started": False}
+            handle._stage = i
+            handle._token = token
+        link.submit(nbytes, next_stage, efficiency=eff, hold=hold, tag=tag,
+                    token=token)
 
     if initial_delay > 0:
         world.after(initial_delay, lambda: start_stage(0))

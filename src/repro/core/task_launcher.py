@@ -24,7 +24,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from .config import MMAConfig
 from .path_selector import Route
-from .simlink import SimLink, SimWorld, submit_path
+from .simlink import PreemptHandle, SimLink, SimWorld, submit_path
 from .topology import Topology
 from .transfer_task import Direction, MicroTask
 
@@ -37,7 +37,11 @@ class Backend:
 
     def launch(
         self, mt: MicroTask, route: Route, on_done: Callable[[], None]
-    ) -> None:
+    ) -> Optional[PreemptHandle]:
+        """Start moving one chunk. May return a ``PreemptHandle`` when the
+        backend supports cooperative in-flight recall (the simulator
+        does; the functional backend copies synchronously and returns
+        None)."""
         raise NotImplementedError
 
 
@@ -126,7 +130,7 @@ class SimBackend(Backend):
 
     def launch(
         self, mt: MicroTask, route: Route, on_done: Callable[[], None]
-    ) -> None:
+    ) -> PreemptHandle:
         stages = self.stages_for(route, mt.direction)
         pipelined = self.config.relay_streams >= 2 or route.is_direct
         # naive mode only serializes the relay GPU's own hops (PCIe,
@@ -143,6 +147,17 @@ class SimBackend(Backend):
                 self.on_chunk_landed(mt)
             on_done()
 
+        # A chunk may be cooperatively recalled only while none of its
+        # interconnect hops (PCIe wire or NVLink) has begun — recalling
+        # after an NVLink hop would re-run it, double-counting that
+        # link's load. Host-side stages (DRAM read, xGMI) are re-run
+        # cheaply and don't gate the recall window.
+        wire = next(
+            (i for i, (lk, _) in enumerate(stages)
+             if lk.name.startswith(("pcie", "nvl"))),
+            0,
+        )
+        handle = PreemptHandle(wire_stage=wire)
         submit_path(
             self.world,
             stages,
@@ -152,7 +167,9 @@ class SimBackend(Backend):
             pipelined=pipelined,
             hold_from=hold_from,
             tag=f"task{mt.parent.task_id}",
+            handle=handle,
         )
+        return handle
 
     # ------------------------------------------------------------------
     # Native (non-MMA) copy: one DMA on the direct path, single dispatch

@@ -19,6 +19,13 @@ Same-class pops are then earliest-deadline-first (deadline-less tasks keep
 arrival order behind all deadlined ones), and the TaskManager can promote
 ("escalate") a lower-class flow to LATENCY when its slack runs out —
 see ``escalate_at_risk`` and ``MMAConfig.qos_deadline_*``.
+
+Tenancy (hierarchical class -> tenant -> flow arbitration): every task
+carries a ``tenant``; with ``MMAConfig.tenant_shares`` configured, a
+second arbitration level (``WFQTenantArbiter``) runs virtual-time WFQ
+between tenants *within* each class, so one tenant's bulk flows cannot
+starve another's same-class traffic. Unset shares collapse the level to a
+single implicit tenant and the queue is byte-for-byte the class-only one.
 """
 from __future__ import annotations
 
@@ -67,6 +74,10 @@ class TransferTask:
     direction: Direction
     sync: bool = False               # blocking (cudaMemcpy) vs async
     traffic_class: TrafficClass = TrafficClass.THROUGHPUT
+    # Owning tenant (hierarchical class->tenant->flow arbitration). The
+    # serving layer threads Request/ServedRequest.tenant down to here;
+    # "default" keeps single-tenant callers on the implicit tenant.
+    tenant: str = "default"
     # Absolute completion deadline in the backend's clock domain (sim time
     # on SimBackend, time.monotonic on the functional backend). None =
     # best-effort; the deadline machinery ignores the task entirely.
@@ -137,8 +148,125 @@ class MicroTask:
         return self.parent.qos_class
 
     @property
+    def tenant(self) -> str:
+        return self.parent.tenant
+
+    @property
     def deadline(self) -> Optional[float]:
         return self.parent.deadline
+
+
+class TenantArbiter:
+    """Level-2 (tenant) arbitration policy plugged into ``MicroTaskQueue``.
+
+    The queue is a two-level arbiter: level 1 orders traffic *classes*
+    (strict LATENCY + per-class WFQ, unchanged from the class-only
+    scheme); level 2 — this object — orders *tenants* within one class.
+    The base class is the single-implicit-tenant policy: every micro-task
+    maps to one tenant key, so level 2 degenerates to a no-op and
+    arbitration is byte-for-byte the class-only queue.
+    """
+
+    enabled = False
+
+    def key(self, mt: MicroTask) -> str:
+        """Tenant bucket a micro-task queues under."""
+        return ""
+
+    def pick(self, cls, tenants, head_arrival) -> str:
+        """Choose which tenant's sub-queue serves next within ``cls``.
+        ``head_arrival(t)`` is the tenant's oldest arrival stamp."""
+        return min(tenants, key=head_arrival)
+
+    def vtime(self, cls, tenant: str) -> float:
+        return 0.0
+
+    def refunded_vtime(self, cls, tenant: str, nbytes: int) -> float:
+        """The clock ``tenant`` would return to if an in-flight chunk of
+        ``nbytes`` were recalled (preemption triggers must compare this,
+        not the post-charge clock, or a recall refund makes the victim
+        the minimum again and the same chunk thrashes)."""
+        return 0.0
+
+    def charge(self, cls, tenant: str, nbytes: int) -> None:
+        pass
+
+    def refund(self, cls, tenant: str, nbytes: int) -> None:
+        pass
+
+    def on_activate(self, cls, tenant: str, active) -> None:
+        pass
+
+    def reset(self) -> None:
+        pass
+
+
+class WFQTenantArbiter(TenantArbiter):
+    """Virtual-time weighted-fair queueing between tenants within a class
+    (stride scheduling on bytes served, shares from
+    ``MMAConfig.tenant_shares`` / ``tenant_default_share``).
+
+    Work-conserving: only tenants with pending work for the popped
+    destination are candidates, so an idle tenant's bandwidth is borrowed
+    freely. Starvation bound: a continuously backlogged tenant with share
+    s out of total active share S is served at least every ~S/s chunk
+    services (its virtual clock falls behind by one chunk's worth of
+    virtual time at most before it becomes the minimum again).
+    """
+
+    enabled = True
+
+    def __init__(self, config: MMAConfig) -> None:
+        self.config = config
+        self._vtime: Dict[Tuple[TrafficClass, str], float] = {}
+
+    def key(self, mt: MicroTask) -> str:
+        return mt.tenant
+
+    def _share(self, tenant: str) -> float:
+        return max(self.config.tenant_share(tenant), 1e-9)
+
+    def vtime(self, cls, tenant: str) -> float:
+        return self._vtime.get((cls, tenant), 0.0)
+
+    def refunded_vtime(self, cls, tenant: str, nbytes: int) -> float:
+        return max(0.0, self.vtime(cls, tenant) - nbytes / self._share(tenant))
+
+    def pick(self, cls, tenants, head_arrival) -> str:
+        return min(
+            tenants, key=lambda t: (self.vtime(cls, t), head_arrival(t))
+        )
+
+    def charge(self, cls, tenant: str, nbytes: int) -> None:
+        key = (cls, tenant)
+        self._vtime[key] = (
+            self._vtime.get(key, 0.0) + nbytes / self._share(tenant)
+        )
+
+    def refund(self, cls, tenant: str, nbytes: int) -> None:
+        """Undo a ``charge`` for bytes that never reached the wire (an
+        in-flight chunk preempted back into the queue) — shares must
+        track *served* bytes or a repeatedly preempted tenant starves.
+        Clamped at zero: a busy-period ``reset`` between charge and
+        refund must not leave the tenant with phantom credit."""
+        key = (cls, tenant)
+        self._vtime[key] = max(
+            0.0, self._vtime.get(key, 0.0) - nbytes / self._share(tenant)
+        )
+
+    def on_activate(self, cls, tenant: str, active) -> None:
+        """Tenant (re)activates into a busy class: advance its virtual
+        time to the least-served *other* active tenant so an idle tenant
+        cannot hoard credit and then monopolize the class (the same WFQ
+        re-activation rule level 1 applies to classes)."""
+        floor = [self.vtime(cls, t) for t in active if t != tenant]
+        if floor:
+            key = (cls, tenant)
+            self._vtime[key] = max(self._vtime.get(key, 0.0), min(floor))
+
+    def reset(self) -> None:
+        """Whole-queue busy period over: clear all tenant clocks."""
+        self._vtime.clear()
 
 
 class MicroTaskQueue:
@@ -166,16 +294,41 @@ class MicroTaskQueue:
       * with QoS disabled the queue degrades to exact arrival-order FIFO
         (the pre-QoS baseline, used as the benchmark control).
 
-    Each (class, dest) queue is a heap of ``(deadline_key, arrival, mt)``:
+    Hierarchical tenancy (class -> tenant -> flow): each (class, dest)
+    slot holds one heap *per tenant*; a pluggable level-2
+    ``TenantArbiter`` picks which tenant's heap serves each pop. With
+    ``tenant_shares`` unset every micro-task maps to one implicit tenant
+    key, the per-slot structure is a single heap, and arbitration is
+    byte-for-byte the class-only queue. With shares configured, tenants
+    inside a class share by virtual-time WFQ (idle tenants' bandwidth is
+    borrowed; backlogged tenants are starvation-bounded), and EDF/FIFO
+    ordering applies *within* each tenant.
+
+    Each (class, dest, tenant) heap holds ``(deadline_key, arrival, mt)``:
     with EDF off (or QoS off) every key is +inf, so the heap degenerates
     to exact arrival-order FIFO and all pre-deadline behavior is
     unchanged.
     """
 
-    def __init__(self, config: Optional[MMAConfig] = None) -> None:
+    def __init__(
+        self,
+        config: Optional[MMAConfig] = None,
+        tenant_arbiter: Optional[TenantArbiter] = None,
+    ) -> None:
         self.config = config or MMAConfig()
+        if tenant_arbiter is None:
+            tenant_arbiter = (
+                WFQTenantArbiter(self.config)
+                if self.config.tenant_shares
+                else TenantArbiter()
+            )
+        self.tenants = tenant_arbiter
+        # class -> dest -> tenant -> heap of (deadline_key, arrival, mt).
+        # Drained tenant heaps are deleted (so a dest slot is falsy once
+        # empty); dest keys persist like the flat queue's did.
         self._by_class_dest: Dict[
-            TrafficClass, Dict[int, List[Tuple[float, int, MicroTask]]]
+            TrafficClass,
+            Dict[int, Dict[str, List[Tuple[float, int, MicroTask]]]],
         ] = {c: {} for c in TrafficClass}
         self._remaining: Dict[Tuple[TrafficClass, int], int] = {}
         self._vtime: Dict[TrafficClass, float] = {c: 0.0 for c in TrafficClass}
@@ -208,8 +361,10 @@ class MicroTaskQueue:
     def _head_arrival(self, cls: TrafficClass, dest: Optional[int]) -> int:
         by_dest = self._by_class_dest[cls]
         if dest is not None:
-            return by_dest[dest][0][1]
-        return min(q[0][1] for q in by_dest.values() if q)
+            return min(h[0][1] for h in by_dest[dest].values())
+        return min(
+            h[0][1] for q in by_dest.values() for h in q.values()
+        )
 
     def class_order(self, dest: Optional[int] = None) -> List[TrafficClass]:
         """Pending classes in arbitration order (highest priority first).
@@ -234,36 +389,97 @@ class MicroTaskQueue:
             ]
         return order
 
+    # -- tenant helpers ---------------------------------------------------
+    def _tenant_has_work(self, cls: TrafficClass, tenant: str) -> bool:
+        return any(
+            tenant in q for q in self._by_class_dest[cls].values()
+        )
+
+    def _active_tenants(self, cls: TrafficClass) -> List[str]:
+        seen: List[str] = []
+        for q in self._by_class_dest[cls].values():
+            for t in q:
+                if t not in seen:
+                    seen.append(t)
+        return seen
+
+    def tenant_vtime(self, cls: TrafficClass, tenant: str) -> float:
+        """Level-2 virtual clock of ``tenant`` within ``cls`` (0.0 when
+        tenant arbitration is inert)."""
+        return self.tenants.vtime(cls, tenant)
+
+    def queued_tenants(self, cls: TrafficClass, dest: int) -> List[str]:
+        """Tenants with pending work in ``(cls, dest)`` (preemption-
+        pressure probe)."""
+        q = self._by_class_dest[cls].get(dest)
+        return list(q) if q else []
+
+    @property
+    def tenant_wfq_active(self) -> bool:
+        return self.tenants.enabled
+
     # -- queue operations -------------------------------------------------
     def push(self, mt: MicroTask) -> None:
         cls = mt.traffic_class
+        tkey = self.tenants.key(mt)
         by_dest = self._by_class_dest[cls]
         if self.is_empty():
             # Whole backlog drained: the WFQ busy period is over. Reset all
             # virtual times so credit/debt earned while classes ran solo
             # does not starve (or favor) anyone when contention returns.
             self._vtime = {c: 0.0 for c in TrafficClass}
-        elif not any(by_dest.values()):
-            # Class (re)activates into a busy system: advance its virtual
-            # time to the busiest active floor so an idle class cannot
-            # hoard credit and then monopolize the links (standard WFQ
-            # re-activation rule).
-            floor = [self._vtime[c] for c in self._active_classes(None)
-                     if c is not cls]
-            if floor:
-                self._vtime[cls] = max(self._vtime[cls], min(floor))
+            self.tenants.reset()
+        else:
+            if not any(by_dest.values()):
+                # Class (re)activates into a busy system: advance its
+                # virtual time to the busiest active floor so an idle
+                # class cannot hoard credit and then monopolize the links
+                # (standard WFQ re-activation rule).
+                floor = [self._vtime[c] for c in self._active_classes(None)
+                         if c is not cls]
+                if floor:
+                    self._vtime[cls] = max(self._vtime[cls], min(floor))
+            if self.tenants.enabled and not self._tenant_has_work(cls, tkey):
+                # Same re-activation rule one level down: a tenant joining
+                # a busy class starts at the least-served active floor.
+                self.tenants.on_activate(cls, tkey, self._active_tenants(cls))
         heapq.heappush(
-            by_dest.setdefault(mt.dest, []),
+            by_dest.setdefault(mt.dest, {}).setdefault(tkey, []),
             (self._deadline_key(mt), next(self._arrivals), mt),
         )
         key = (cls, mt.dest)
         self._remaining[key] = self._remaining.get(key, 0) + mt.nbytes
 
+    def requeue(
+        self, mt: MicroTask, cls_at_pull: Optional[TrafficClass] = None
+    ) -> None:
+        """Return a preempted in-flight micro-task to the queue. The chunk
+        never reached the wire, so the virtual time its pop charged is
+        refunded (class and tenant clocks both track *served* bytes) —
+        against ``cls_at_pull``, the class the pop actually charged, which
+        can differ from the task's current class if it escalated or
+        demoted in between. The chunk itself re-queues under the task's
+        *current* class/tenant with a fresh arrival stamp — a preempted
+        chunk goes to the back of its line. Refunds clamp at zero: a
+        busy-period reset may have wiped the charge already, and a
+        negative clock would hand out phantom credit."""
+        fresh_busy_period = self.is_empty()
+        self.push(mt)
+        if fresh_busy_period:
+            return      # push reset all clocks; nothing left to refund
+        cls = mt.traffic_class if cls_at_pull is None else cls_at_pull
+        self._vtime[cls] = max(
+            0.0, self._vtime[cls] - mt.nbytes / self._weight(cls)
+        )
+        self.tenants.refund(cls, self.tenants.key(mt), mt.nbytes)
+
     def pop_for_dest(
         self, dest: int, cls: Optional[TrafficClass] = None
     ) -> Optional[MicroTask]:
         """Pop the next micro-task for ``dest``; ``cls=None`` arbitrates
-        across classes, a given ``cls`` pops only that class."""
+        across classes, a given ``cls`` pops only that class. Within the
+        class, the tenant arbiter picks whose heap serves (inert with a
+        single implicit tenant)."""
         if cls is None:
             order = self.class_order(dest)
             if not order:
@@ -272,9 +488,19 @@ class MicroTaskQueue:
         q = self._by_class_dest[cls].get(dest)
         if not q:
             return None
-        _, _, mt = heapq.heappop(q)
+        if len(q) == 1:
+            tkey = next(iter(q))
+        else:
+            tkey = self.tenants.pick(
+                cls, list(q), lambda t: q[t][0][1]
+            )
+        heap = q[tkey]
+        _, _, mt = heapq.heappop(heap)
+        if not heap:
+            del q[tkey]
         self._remaining[(cls, dest)] -= mt.nbytes
         self._vtime[cls] += mt.nbytes / self._weight(cls)
+        self.tenants.charge(cls, tkey, mt.nbytes)
         return mt
 
     def reclass_task(
@@ -287,23 +513,40 @@ class MicroTaskQueue:
         moved_total = 0
         src_map = self._by_class_dest[old_cls]
         dst_map = self._by_class_dest[new_cls]
+        # Tenants entering new_cls through this move bypass push, so the
+        # WFQ re-activation floor must be applied here too — an escalated
+        # tenant must not enter the class with a zero clock and
+        # monopolize it.
+        already_active = set(self._active_tenants(new_cls))
         for dest, q in src_map.items():
-            moved = [e for e in q if e[2].parent.task_id == task_id]
-            if not moved:
-                continue
-            kept = [e for e in q if e[2].parent.task_id != task_id]
-            heapq.heapify(kept)
-            src_map[dest] = kept
-            dq = dst_map.setdefault(dest, [])
             nbytes = 0
-            for e in moved:
-                heapq.heappush(dq, e)
-                nbytes += e[2].nbytes
+            for tkey, heap in list(q.items()):
+                moved = [e for e in heap if e[2].parent.task_id == task_id]
+                if not moved:
+                    continue
+                kept = [e for e in heap if e[2].parent.task_id != task_id]
+                if kept:
+                    heapq.heapify(kept)
+                    q[tkey] = kept
+                else:
+                    del q[tkey]
+                dq = dst_map.setdefault(dest, {}).setdefault(tkey, [])
+                for e in moved:
+                    heapq.heappush(dq, e)
+                    nbytes += e[2].nbytes
+            if nbytes == 0:
+                continue
             self._remaining[(old_cls, dest)] -= nbytes
             self._remaining[(new_cls, dest)] = (
                 self._remaining.get((new_cls, dest), 0) + nbytes
             )
             moved_total += nbytes
+        if moved_total and self.tenants.enabled:
+            for tkey in self._active_tenants(new_cls):
+                if tkey not in already_active:
+                    self.tenants.on_activate(
+                        new_cls, tkey, self._active_tenants(new_cls)
+                    )
         return moved_total
 
     def remaining_bytes(
@@ -333,9 +576,10 @@ class MicroTaskQueue:
         waits behind."""
         total = 0
         for q in self._by_class_dest[cls].values():
-            for dkey, _, mt in q:
-                if dkey <= deadline:
-                    total += mt.nbytes
+            for heap in q.values():
+                for dkey, _, mt in heap:
+                    if dkey <= deadline:
+                        total += mt.nbytes
         return total
 
     def longest_remaining_dest(
@@ -369,8 +613,9 @@ class MicroTaskQueue:
         best, best_stamp = None, None
         for c in classes:
             for dest, q in self._by_class_dest[c].items():
-                if q and (best_stamp is None or q[0][1] < best_stamp):
-                    best, best_stamp = dest, q[0][1]
+                for heap in q.values():
+                    if best_stamp is None or heap[0][1] < best_stamp:
+                        best, best_stamp = dest, heap[0][1]
         return best
 
     def any_dest(self, cls: Optional[TrafficClass] = None) -> Optional[int]:
@@ -389,9 +634,10 @@ class MicroTaskQueue:
 
     def __len__(self) -> int:
         return sum(
-            len(q)
+            len(heap)
             for by_dest in self._by_class_dest.values()
             for q in by_dest.values()
+            for heap in q.values()
         )
 
     def is_empty(self) -> bool:

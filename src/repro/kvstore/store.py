@@ -149,6 +149,7 @@ class TierManager:
         extra_bytes: int = 0,
         traffic_class: TrafficClass = TrafficClass.BACKGROUND,
         deadline: Optional[float] = None,
+        tenant: str = "default",
         pin: Optional[Callable[[List[Page]], None]] = None,
         unpin: Optional[Callable[[List[Page]], None]] = None,
     ) -> List[object]:
@@ -171,6 +172,7 @@ class TierManager:
             task = self.engine.memcpy(
                 nbytes, device=self.target, direction=Direction.D2H,
                 traffic_class=traffic_class, deadline=deadline,
+                tenant=tenant,
             )
             self.counters.writebacks += 1
             self.counters.writeback_bytes += nbytes
@@ -191,6 +193,7 @@ class TierManager:
         pages: List[Page],
         traffic_class: TrafficClass = TrafficClass.LATENCY,
         deadline: Optional[float] = None,
+        tenant: str = "default",
         pin: Optional[Callable[[List[Page]], None]] = None,
         unpin: Optional[Callable[[List[Page]], None]] = None,
     ) -> Tuple[object, float]:
@@ -234,6 +237,7 @@ class TierManager:
             dma_bytes, device=self.target, direction=Direction.H2D,
             traffic_class=traffic_class,
             deadline=None if deadline is None else deadline - staged_s,
+            tenant=tenant,
         )
         # callers that only see the task (KVCacheManager.fetch keeps its
         # 3-tuple API) can still account the staging seconds
@@ -296,6 +300,7 @@ class TieredKVStore:
                 extra_bytes, device=self.tiers.target,
                 direction=Direction.D2H,
                 traffic_class=traffic_class, deadline=deadline,
+                tenant=tenant,
             )
             return "", [task]
         for p in fresh:
@@ -316,7 +321,7 @@ class TieredKVStore:
                 p.exact_only = True
         tasks = self.tiers.writeback(
             fresh, extra_bytes=extra_bytes,
-            traffic_class=traffic_class, deadline=deadline,
+            traffic_class=traffic_class, deadline=deadline, tenant=tenant,
             pin=self.index.pin, unpin=self.index.unpin,
         )
         return last.key, tasks
@@ -363,6 +368,7 @@ class TieredKVStore:
             p.tenants.add(tenant)
         task, staged_s = self.tiers.fetch(
             pages, traffic_class=traffic_class, deadline=deadline,
+            tenant=tenant,
             pin=self.index.pin, unpin=self.index.unpin,
         )
         last = pages[-1]

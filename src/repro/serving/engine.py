@@ -73,6 +73,7 @@ class LatencyModel:
         direction: Direction,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
         deadline_s: Optional[float] = None,
+        tenant: str = "default",
     ) -> float:
         """Time one transfer on a fresh, otherwise-idle simulator.
 
@@ -101,6 +102,7 @@ class LatencyModel:
         task = eng.memcpy(
             nbytes, device=0, direction=direction,
             traffic_class=traffic_class, deadline=deadline_s,
+            tenant=tenant,
         )
         world.run()
         return task.elapsed

@@ -163,7 +163,10 @@ class KVCacheManager:
 
     QoS: prefix-cache fetches are TTFT-critical (``LATENCY`` class);
     offloads drain opportunistically (``BACKGROUND``), so a fetch is never
-    starved by eviction traffic sharing the engine.
+    starved by eviction traffic sharing the engine. The caller's
+    ``tenant`` rides every transfer down to the engine, so hierarchical
+    class->tenant arbitration and per-tenant byte attribution see cache
+    traffic end to end.
     """
 
     FETCH_CLASS = TrafficClass.LATENCY
@@ -249,6 +252,7 @@ class KVCacheManager:
             task = self.engine.memcpy(
                 nbytes, device=self.target, direction=Direction.D2H,
                 traffic_class=traffic_class, deadline=deadline,
+                tenant=tenant,
             )
             key = self.prefix.store(
                 tokens, nbytes, payload=payload,
@@ -289,6 +293,7 @@ class KVCacheManager:
             nbytes, device=self.target, direction=Direction.H2D,
             traffic_class=traffic_class,
             deadline=None if deadline is None else deadline - staged_s,
+            tenant=tenant,
         )
         task.staged_s = staged_s
         self.admit(hit)

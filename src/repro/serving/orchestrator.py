@@ -143,12 +143,14 @@ class Orchestrator:
         direction: Direction,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
         deadline_s: Optional[float] = None,
+        tenant: str = "default",
     ) -> float:
         # any latency model can time raw transfers; they share the link sim
         lm = next(iter(self.latency.values()))
         lm.use_mma = self.use_mma
         return lm.transfer_seconds(
-            nbytes, direction, traffic_class, deadline_s=deadline_s
+            nbytes, direction, traffic_class, deadline_s=deadline_s,
+            tenant=tenant,
         )
 
     def _evict_until_fits(self, need: int) -> float:
@@ -174,18 +176,22 @@ class Orchestrator:
         return total
 
     def _ensure_resident(
-        self, name: str, deadline_s: Optional[float] = None
+        self,
+        name: str,
+        deadline_s: Optional[float] = None,
+        tenant: str = "default",
     ) -> float:
         """Wake ``name`` if cold. A cold wake a request is waiting on
         carries the request's remaining deadline budget (relative
-        seconds) so the engine can EDF-order/escalate it."""
+        seconds) so the engine can EDF-order/escalate it, and is
+        attributed to the waiting request's tenant."""
         inst = self.instances[name]
         if inst.resident:
             return 0.0
         t = self._evict_until_fits(inst.nbytes)
         t += self._transfer_s(
             inst.nbytes, Direction.H2D, TrafficClass.THROUGHPUT,
-            deadline_s=deadline_s,
+            deadline_s=deadline_s, tenant=tenant,
         )
         inst.resident = True
         self.resident_bytes += inst.nbytes
@@ -202,7 +208,9 @@ class Orchestrator:
                 None if req.deadline is None
                 else max(req.deadline - self.clock, 0.0)
             )
-            req.wake_s = self._ensure_resident(req.model, deadline_s=budget)
+            req.wake_s = self._ensure_resident(
+                req.model, deadline_s=budget, tenant=req.tenant
+            )
             self.clock += req.wake_s
             lm = self.latency[req.model]
             if self.track_kv and req.tokens is not None:
@@ -264,6 +272,37 @@ class Orchestrator:
                 agg_bytes[tier] = agg_bytes.get(tier, 0) + b
         report["aggregate"] = {"hits": agg_hits, "hit_bytes": agg_bytes}
         return report
+
+    def tenant_report(
+        self, requests: Optional[List[ServedRequest]] = None
+    ) -> Dict[str, Dict]:
+        """Per-tenant observability for hierarchical class->tenant
+        arbitration: bytes the shared KV engine moved on each tenant's
+        behalf (with the realized per-tenant rate over the engine's busy
+        clock, when ``track_kv`` keeps a persistent engine), merged with
+        per-tenant TTFT / deadline-hit stats when a served-request list
+        is given, plus the configured shares and the cooperative
+        preemption count."""
+        tenants: Dict[str, Dict] = {}
+        if requests:
+            for tenant, row in self.slo_report(requests).items():
+                tenants.setdefault(tenant, {}).update(row)
+        preempted = 0
+        shares = None
+        if self.track_kv:
+            eng = self.kv_engine
+            elapsed = max(self.kv_world.now, 1e-12)
+            for tenant, nbytes in eng.tenant_bytes().items():
+                row = tenants.setdefault(tenant, {})
+                row["engine_bytes"] = nbytes
+                row["engine_rate_gbps"] = nbytes / elapsed / (1 << 30)
+            preempted = eng.preemptions()
+            shares = eng.config.tenant_shares
+        return {
+            "tenants": dict(sorted(tenants.items())),
+            "tenant_shares": shares,
+            "preempted_chunks": preempted,
+        }
 
     @staticmethod
     def slo_report(requests: List[ServedRequest]) -> Dict[str, Dict]:

@@ -233,3 +233,24 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running or self.preempted)
+
+    def tenant_summary(self) -> Dict[str, Dict[str, int]]:
+        """Per-tenant request-state counts (waiting/running/preempted/
+        done/rejected) — the scheduler-side half of the tenant
+        observability surface (`Orchestrator.tenant_report` is the
+        engine-side half)."""
+        states = (
+            ("waiting", self.waiting),
+            ("running", self.running),
+            ("preempted", self.preempted),
+            ("done", self.done),
+            ("rejected", self.rejected),
+        )
+        out: Dict[str, Dict[str, int]] = {}
+        for state, reqs in states:
+            for req in reqs:
+                row = out.setdefault(
+                    req.tenant, {name: 0 for name, _ in states}
+                )
+                row[state] += 1
+        return out

@@ -47,11 +47,15 @@ class WeightManager:
         params: Optional[Any] = None,
         nbytes: Optional[int] = None,
         target_device: int = 0,
+        tenant: str = "default",
     ) -> None:
         if params is None and nbytes is None:
             raise ValueError("need params or nbytes")
         self.engine = engine
         self.params = params
+        # Owning tenant: sleep/wake traffic is attributed (and, under
+        # hierarchical WFQ, arbitrated) against this tenant's share.
+        self.tenant = tenant
         self.nbytes = (
             nbytes
             if nbytes is not None
@@ -68,6 +72,7 @@ class WeightManager:
         task = self.engine.memcpy(
             self.nbytes, device=self.target, direction=direction,
             traffic_class=self.TRANSFER_CLASS, deadline=deadline,
+            tenant=self.tenant,
         )
         world = self.engine.backend.world  # type: ignore[attr-defined]
         world.run()
@@ -86,6 +91,7 @@ class WeightManager:
                 lambda l: multipath_device_get(
                     l, engine=self.engine,
                     traffic_class=self.TRANSFER_CLASS,
+                    tenant=self.tenant,
                 ),
                 self.params,
             )
@@ -107,6 +113,7 @@ class WeightManager:
                 lambda l: multipath_device_put(
                     np.asarray(l), target=self.target, engine=self.engine,
                     traffic_class=self.TRANSFER_CLASS,
+                    tenant=self.tenant,
                 ),
                 self._host_copy,
             )

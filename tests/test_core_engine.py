@@ -292,3 +292,82 @@ def test_cpu_overhead_model_matches_paper():
     # Paper Fig 11: ~8.2 equivalent cores at 8 active GPUs, linear.
     assert eng.estimated_cpu_cores(8) == pytest.approx(8.2, rel=0.05)
     assert eng.estimated_cpu_cores(4) == pytest.approx(4.1, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Topology relay discovery
+# ---------------------------------------------------------------------------
+def test_relay_candidates_excludes_target_and_exclude_set():
+    from repro.core.topology import h20_server
+
+    topo = h20_server()
+    peers = topo.relay_candidates(target=2)
+    assert 2 not in peers
+    assert sorted(peers) == [0, 1, 3, 4, 5, 6, 7]
+    peers = topo.relay_candidates(target=2, exclude=(0, 5))
+    assert set(peers).isdisjoint({0, 2, 5})
+    assert sorted(peers) == [1, 3, 4, 6, 7]
+    # excluding the target itself is a no-op (it is never a candidate)
+    assert topo.relay_candidates(target=2, exclude=(2,)) == (
+        topo.relay_candidates(target=2)
+    )
+
+
+def test_relay_candidates_numa_local_only_filter():
+    from repro.core.topology import h20_server
+
+    topo = h20_server()     # devices 0-3 on NUMA 0, 4-7 on NUMA 1
+    assert topo.relay_candidates(target=1, numa_local_only=True) == [0, 2, 3]
+    assert topo.relay_candidates(target=6, numa_local_only=True) == [4, 5, 7]
+    # exclusions compose with the NUMA filter
+    assert topo.relay_candidates(
+        target=1, numa_local_only=True, exclude=(2,)
+    ) == [0, 3]
+
+
+def test_relay_candidates_numa_first_ordering():
+    from repro.core.topology import h20_server
+
+    topo = h20_server()
+    peers = topo.relay_candidates(target=5)
+    # same-NUMA peers (4, 6, 7) come before cross-socket ones (0-3),
+    # each group in index order
+    assert peers == [4, 6, 7, 0, 1, 2, 3]
+    # single-socket topology: ordering degenerates to plain index order
+    from repro.core.topology import tpu_host
+
+    assert tpu_host(4).relay_candidates(target=0) == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Zero-byte copies (edge path: zero micro-tasks)
+# ---------------------------------------------------------------------------
+def test_zero_byte_memcpy_completes_inline():
+    eng, world, _ = make_sim_engine()
+    t = eng.memcpy(0, device=3, direction=Direction.D2H)
+    assert t.state == TaskState.COMPLETE
+    assert t.complete_time == t.submit_time
+    assert eng.task_manager.pending_transfers() == 0
+    world.run()
+    assert eng.stats.transfers == 1 and eng.stats.bytes_total == 0
+
+
+def test_zero_byte_memcpy_async_releases_stream():
+    """A zero-byte async copy splits into zero micro-tasks; its Dummy
+    Task must still release the stream exactly at the copy point rather
+    than blocking it forever."""
+    eng, world, _ = make_sim_engine()
+    stream = SimStream(world)
+    done = []
+    dummy = eng.memcpy_async(
+        0, device=0, direction=Direction.H2D,
+        on_complete=lambda t: done.append(t.task_id),
+    )
+    stream.dummy(dummy, label="empty")
+    stream.compute(1e-4, label="kernel")
+    world.run()
+    assert dummy.task.state == TaskState.COMPLETE
+    assert dummy.released
+    assert done == [dummy.task.task_id]
+    assert stream.completion_time("kernel") is not None
+    assert eng.sync_engine.pending() == 0

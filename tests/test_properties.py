@@ -297,3 +297,98 @@ def test_edf_never_inverts_same_class_deadlines(ops):
             else:
                 assert mt.deadline <= min(deadlined)
             pending.remove(mt.deadline)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical tenant WFQ + preemption invariants
+# ---------------------------------------------------------------------------
+@given(
+    shares=st.tuples(
+        st.integers(1, 8), st.integers(1, 8), st.integers(1, 8)
+    ),
+    order=st.permutations(["a"] * 40 + ["b"] * 40 + ["c"] * 40),
+)
+@settings(max_examples=40, deadline=None)
+def test_tenant_wfq_starvation_bound(shares, order):
+    """Per-tenant WFQ starvation bound: a continuously-backlogged tenant
+    with share s of total S receives at least s/S of the served bytes
+    minus a bounded stride-scheduling lag — i.e. it never waits more than
+    ~S/s fair service intervals — under adversarial arrival orders."""
+    chunk = 1 * MB
+    share_map = dict(zip("abc", (float(s) for s in shares)))
+    cfg = MMAConfig(tenant_shares=share_map)
+    q = MicroTaskQueue(cfg)
+    for i, tenant in enumerate(order):
+        t = TransferTask(nbytes=chunk, target=0, direction=Direction.H2D,
+                         traffic_class=TrafficClass.LATENCY, tenant=tenant)
+        q.push(MicroTask(parent=t, offset=0, nbytes=chunk, seq=i))
+    # serve only 40 chunks: every tenant stays backlogged throughout
+    served = {t: 0 for t in share_map}
+    total = 0
+    for _ in range(40):
+        mt = q.pop_for_dest(0)
+        served[mt.tenant] += mt.nbytes
+        total += mt.nbytes
+    ssum = float(sum(shares))
+    for tenant, s in share_map.items():
+        # stride lag bound: one max-chunk of virtual time => up to
+        # s/min_share chunks of real bytes, plus one chunk of slack
+        bound = (s / min(shares) + 1) * chunk
+        assert served[tenant] >= (s / ssum) * total - bound, (
+            f"tenant {tenant} starved: served {served[tenant] / MB} MB of "
+            f"{total / MB} MB (share {s}/{ssum})"
+        )
+
+
+@given(
+    flows=st.lists(
+        st.tuples(
+            st.integers(0, 7),                        # destination
+            st.integers(16 * MB, 96 * MB),            # size (> fallback)
+            st.sampled_from(list(TrafficClass)),      # class
+            st.sampled_from(["a", "b"]),              # tenant
+            st.floats(0.0, 0.004),                    # arrival time
+        ),
+        min_size=2, max_size=8,
+    ),
+)
+@settings(max_examples=25, deadline=None)
+def test_preemption_conserves_bytes_and_completions(flows):
+    """Cooperative in-flight preemption is loss-free: with staggered
+    arrivals forcing recalls, every task still completes exactly once
+    with complete_time >= submit_time, and per-class / per-tenant /
+    total delivered bytes all equal what was submitted (re-queued
+    remainder bytes are conserved)."""
+    cfg = MMAConfig(
+        tenant_shares={"a": 4.0, "b": 1.0},
+        qos_deadline_escalate=False,
+    )
+    eng, world, _ = make_sim_engine(config=cfg)
+    completed = []
+    eng.add_completion_listener(lambda t: completed.append(t.task_id))
+    tasks = []
+    pushed_cls = {c: 0 for c in TrafficClass}
+    pushed_tenant = {"a": 0, "b": 0}
+    for dest, nb, cls, tenant, t_arr in flows:
+        def submit(dest=dest, nb=nb, cls=cls, tenant=tenant):
+            tasks.append(eng.memcpy(
+                nb, device=dest, direction=Direction.H2D,
+                traffic_class=cls, tenant=tenant,
+            ))
+        world.at(t_arr, submit)
+        pushed_cls[cls] += nb
+        pushed_tenant[tenant] += nb
+    world.run()
+    assert sorted(completed) == sorted(t.task_id for t in tasks)
+    assert len(set(completed)) == len(completed)
+    for t in tasks:
+        assert t.complete_time >= t.submit_time
+    served_cls = {
+        c: sum(w.bytes_by_class[c] for w in eng.workers.values())
+        for c in TrafficClass
+    }
+    assert served_cls == pushed_cls
+    served_tenant = eng.tenant_bytes()
+    assert {t: b for t, b in served_tenant.items() if b} == {
+        t: b for t, b in pushed_tenant.items() if b
+    }

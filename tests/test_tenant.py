@@ -1,0 +1,540 @@
+"""Hierarchical class->tenant->flow arbitration: per-tenant WFQ shares in
+the micro-task queue, cooperative in-flight chunk preemption, tenant
+threading through the serving layers, and the single-implicit-tenant
+equivalence guarantee (shares unset => byte-for-byte the class-only
+queue)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Direction,
+    MMAConfig,
+    MicroTaskQueue,
+    SimStream,
+    TrafficClass,
+    TransferTask,
+    make_sim_engine,
+)
+from repro.core.config import GB, MB
+from repro.core.transfer_task import MicroTask
+
+SHARES = {"gold": 6.0, "bronze": 2.0}
+
+
+def _mt(dest=0, nbytes=1 * MB, cls=TrafficClass.THROUGHPUT, tenant="default",
+        deadline=None, seq=0):
+    t = TransferTask(
+        nbytes=nbytes, target=dest, direction=Direction.H2D,
+        traffic_class=cls, tenant=tenant, deadline=deadline,
+    )
+    return MicroTask(parent=t, offset=0, nbytes=nbytes, seq=seq)
+
+
+# ---------------------------------------------------------------------------
+# Single-implicit-tenant equivalence (the control-arm guarantee)
+# ---------------------------------------------------------------------------
+def test_shares_unset_is_byte_for_byte_class_only():
+    """With tenant_shares unset, tenant labels must be invisible: pop
+    order over a mixed-class, mixed-deadline, mixed-tenant sequence is
+    identical to the same sequence with every task on the default
+    tenant."""
+    rng = np.random.default_rng(7)
+    classes = list(TrafficClass)
+    seq = []
+    for i in range(120):
+        seq.append((
+            classes[int(rng.integers(0, 3))],
+            int(rng.integers(0, 4)),                       # dest
+            ["a", "b", "c"][int(rng.integers(0, 3))],      # tenant
+            None if rng.random() < 0.5 else float(rng.random()),
+        ))
+    q_tagged = MicroTaskQueue(MMAConfig())       # shares unset, tenants vary
+    q_plain = MicroTaskQueue(MMAConfig())        # everything default tenant
+    for i, (cls, dest, tenant, dl) in enumerate(seq):
+        q_tagged.push(_mt(dest=dest, cls=cls, tenant=tenant, deadline=dl,
+                          seq=i))
+        q_plain.push(_mt(dest=dest, cls=cls, tenant="default", deadline=dl,
+                         seq=i))
+    order_tagged, order_plain = [], []
+    for q, order in ((q_tagged, order_tagged), (q_plain, order_plain)):
+        while not q.is_empty():
+            dest = q.any_dest()
+            mt = q.pop_for_dest(dest)
+            order.append((mt.traffic_class, dest, mt.seq, mt.nbytes))
+    assert order_tagged == order_plain
+
+
+def test_class_only_config_remains_valid_control_arm():
+    cfg = MMAConfig(tenant_shares=dict(SHARES)).class_only()
+    assert cfg.tenant_shares == SHARES          # orthogonal knobs
+    assert not cfg.qos_deadline_edf
+    q = MicroTaskQueue(cfg)
+    assert q.tenant_wfq_active                  # level 2 still pluggable
+
+
+# ---------------------------------------------------------------------------
+# Tenant WFQ inside one class
+# ---------------------------------------------------------------------------
+def test_tenant_wfq_share_split():
+    cfg = MMAConfig(tenant_shares={"gold": 3.0, "bronze": 1.0})
+    q = MicroTaskQueue(cfg)
+    for i in range(200):
+        q.push(_mt(cls=TrafficClass.LATENCY, tenant="gold", seq=i))
+        q.push(_mt(cls=TrafficClass.LATENCY, tenant="bronze", seq=i))
+    served = {"gold": 0, "bronze": 0}
+    for _ in range(100):                 # both tenants stay backlogged
+        served[q.pop_for_dest(0).tenant] += 1
+    assert served["gold"] / served["bronze"] == pytest.approx(3.0, rel=0.1)
+
+
+def test_tenant_default_share_applies_to_unnamed_tenants():
+    cfg = MMAConfig(tenant_shares={"gold": 4.0}, tenant_default_share=2.0)
+    q = MicroTaskQueue(cfg)
+    for i in range(200):
+        q.push(_mt(cls=TrafficClass.LATENCY, tenant="gold", seq=i))
+        q.push(_mt(cls=TrafficClass.LATENCY, tenant="anon", seq=i))
+    served = {"gold": 0, "anon": 0}
+    for _ in range(120):
+        served[q.pop_for_dest(0).tenant] += 1
+    assert served["gold"] / served["anon"] == pytest.approx(2.0, rel=0.15)
+
+
+def test_idle_tenant_bandwidth_is_borrowed_work_conservingly():
+    """Only one tenant backlogged -> it takes every pop; a late-arriving
+    tenant cannot replay the borrowed period as credit (activation
+    floor)."""
+    cfg = MMAConfig(tenant_shares={"gold": 8.0, "bronze": 1.0})
+    q = MicroTaskQueue(cfg)
+    for i in range(100):
+        q.push(_mt(cls=TrafficClass.LATENCY, tenant="bronze", seq=i))
+    for _ in range(50):                 # bronze runs solo at full rate
+        assert q.pop_for_dest(0).tenant == "bronze"
+    for i in range(100):
+        q.push(_mt(cls=TrafficClass.LATENCY, tenant="gold", seq=i))
+    # gold re-activates at bronze's floor: it gets its 8:1 share of what
+    # follows, not a burst repaying the 50 solo pops first
+    first_18 = [q.pop_for_dest(0).tenant for _ in range(18)]
+    assert first_18.count("bronze") >= 1
+    assert first_18.count("gold") >= 14
+
+
+def test_tenant_starvation_bound_deterministic():
+    """No continuously-backlogged tenant falls further behind its WFQ
+    share than the stride-scheduling lag bound (the local, deterministic
+    twin of the hypothesis property)."""
+    shares = {"a": 5.0, "b": 2.0, "c": 1.0}
+    cfg = MMAConfig(tenant_shares=dict(shares))
+    q = MicroTaskQueue(cfg)
+    chunk = 1 * MB
+    for i in range(300):
+        for t in shares:
+            q.push(_mt(cls=TrafficClass.LATENCY, tenant=t, nbytes=chunk,
+                       seq=i))
+    served = {t: 0 for t in shares}
+    total = 0
+    for _ in range(160):                # every tenant stays backlogged
+        mt = q.pop_for_dest(0)
+        served[mt.tenant] += mt.nbytes
+        total += mt.nbytes
+    wsum = sum(shares.values())
+    for t, s in shares.items():
+        bound = (s / min(shares.values()) + 1) * chunk
+        assert served[t] >= (s / wsum) * total - bound, (
+            f"tenant {t} starved: {served[t] / MB} of {total / MB} MB"
+        )
+
+
+def test_tenant_wfq_nested_under_class_priority():
+    """Level 1 outranks level 2: a LATENCY chunk of the lowest-share
+    tenant still pops before any lower-class chunk of the highest-share
+    tenant."""
+    cfg = MMAConfig(tenant_shares=dict(SHARES))
+    q = MicroTaskQueue(cfg)
+    q.push(_mt(cls=TrafficClass.THROUGHPUT, tenant="gold"))
+    q.push(_mt(cls=TrafficClass.LATENCY, tenant="bronze"))
+    mt = q.pop_for_dest(0)
+    assert mt.traffic_class is TrafficClass.LATENCY and mt.tenant == "bronze"
+
+
+def test_requeue_refunds_virtual_time_and_ledger():
+    cfg = MMAConfig(tenant_shares=dict(SHARES))
+    q = MicroTaskQueue(cfg)
+    a = _mt(cls=TrafficClass.LATENCY, tenant="gold", nbytes=4 * MB)
+    b = _mt(cls=TrafficClass.LATENCY, tenant="bronze", nbytes=4 * MB)
+    q.push(a)
+    q.push(b)
+    before = q.tenant_vtime(TrafficClass.LATENCY, "gold")
+    popped = q.pop_for_dest(0)
+    assert q.tenant_vtime(TrafficClass.LATENCY, popped.tenant) > before
+    q.requeue(popped)
+    assert q.tenant_vtime(TrafficClass.LATENCY, popped.tenant) == (
+        pytest.approx(before)
+    )
+    assert q.remaining_bytes(0) == 8 * MB
+    assert len(q) == 2
+
+
+def test_queued_tenants_probe():
+    cfg = MMAConfig(tenant_shares=dict(SHARES))
+    q = MicroTaskQueue(cfg)
+    q.push(_mt(cls=TrafficClass.LATENCY, tenant="gold", dest=1))
+    q.push(_mt(cls=TrafficClass.LATENCY, tenant="bronze", dest=1))
+    assert sorted(q.queued_tenants(TrafficClass.LATENCY, 1)) == [
+        "bronze", "gold",
+    ]
+    assert q.queued_tenants(TrafficClass.BACKGROUND, 1) == []
+
+
+# ---------------------------------------------------------------------------
+# Cooperative in-flight preemption
+# ---------------------------------------------------------------------------
+def test_latency_arrival_preempts_inflight_bulk_chunks():
+    eng, world, _ = make_sim_engine()
+    eng.memcpy(1 * GB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.BACKGROUND)
+    world.run(until=0.002)
+    fetch = eng.memcpy(128 * MB, device=0, direction=Direction.H2D,
+                       traffic_class=TrafficClass.LATENCY)
+    world.run()
+    assert eng.preemptions() > 0
+    assert fetch.state.name == "COMPLETE"
+    # loss-free: every submitted byte is delivered exactly once
+    assert sum(w.bytes_total for w in eng.workers.values()) == (
+        1 * GB + 128 * MB
+    )
+
+
+def test_preemption_disabled_knob():
+    cfg = MMAConfig(qos_preempt_inflight=False)
+    eng, world, _ = make_sim_engine(config=cfg)
+    eng.memcpy(1 * GB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.BACKGROUND)
+    world.run(until=0.002)
+    eng.memcpy(128 * MB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY)
+    world.run()
+    assert eng.preemptions() == 0
+
+
+def test_preemption_speeds_up_latency_arrival():
+    def fetch_elapsed(preempt: bool) -> float:
+        cfg = MMAConfig(qos_preempt_inflight=preempt)
+        eng, world, _ = make_sim_engine(config=cfg)
+        eng.memcpy(2 * GB, device=0, direction=Direction.H2D,
+                   traffic_class=TrafficClass.BACKGROUND)
+        holder = {}
+
+        def start():
+            holder["t"] = eng.memcpy(
+                64 * MB, device=0, direction=Direction.H2D,
+                traffic_class=TrafficClass.LATENCY,
+            )
+
+        world.at(0.005, start)
+        world.run()
+        return holder["t"].elapsed
+
+    assert fetch_elapsed(True) < fetch_elapsed(False)
+
+
+def test_inshare_tenant_preempts_out_of_share_same_class():
+    """With both tenants continuously backlogged, the noisy tenant's
+    in-flight charges push its clock beyond the in-share tenant's, and
+    the in-share tenant's queued work recalls noisy pre-wire chunks.
+    (A *freshly activating* tenant deliberately does not trigger this:
+    its re-activation floor equals the noisy clock, and recalling would
+    just re-pull the same chunk — the trigger compares the victim's
+    post-refund clock.)"""
+    cfg = MMAConfig(tenant_shares={"gold": 8.0, "noisy": 1.0})
+    eng, world, _ = make_sim_engine(config=cfg)
+    for d in range(8):
+        eng.memcpy(256 * MB, device=d, direction=Direction.H2D,
+                   traffic_class=TrafficClass.LATENCY, tenant="noisy")
+    eng.memcpy(128 * MB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, tenant="gold")
+    holder = {}
+    world.at(0.003, lambda: holder.setdefault("t", eng.memcpy(
+        64 * MB, device=1, direction=Direction.H2D,
+        traffic_class=TrafficClass.LATENCY, tenant="gold",
+    )))
+    world.run()
+    fetch = holder["t"]
+    assert eng.preemptions() > 0
+    assert fetch.state.name == "COMPLETE"
+    assert sum(w.bytes_total for w in eng.workers.values()) == (
+        8 * 256 * MB + 128 * MB + 64 * MB
+    )
+
+
+def test_no_tenant_preemption_without_shares():
+    """Same-class traffic of different tenants must not preempt each
+    other when the tenant level is inert (single implicit tenant)."""
+    eng, world, _ = make_sim_engine()
+    eng.memcpy(1 * GB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, tenant="noisy")
+    world.run(until=0.002)
+    eng.memcpy(64 * MB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, tenant="gold")
+    world.run()
+    assert eng.preemptions() == 0
+
+
+def test_preemption_conserves_bytes_deterministic():
+    """Staggered mixed-class, mixed-tenant flows with preemption firing:
+    every task completes exactly once, per-class and total bytes are
+    conserved, and worker ledgers agree (the deterministic twin of the
+    hypothesis conservation property)."""
+    cfg = MMAConfig(tenant_shares={"a": 4.0, "b": 1.0},
+                    qos_deadline_escalate=False)
+    eng, world, _ = make_sim_engine(config=cfg)
+    rng = np.random.default_rng(3)
+    flows = []
+    pushed = {c: 0 for c in TrafficClass}
+    completed = []
+    eng.add_completion_listener(lambda t: completed.append(t.task_id))
+    # deterministic class cycle: bulk flows lead, LATENCY flows arrive
+    # into them — guarantees the preemption path actually exercises
+    cycle = [TrafficClass.BACKGROUND, TrafficClass.THROUGHPUT,
+             TrafficClass.LATENCY]
+    for k in range(24):
+        cls = cycle[k % 3]
+        nb = int(rng.integers(32, 128)) * MB
+        dest = int(rng.integers(0, 8))
+        tenant = ["a", "b"][k % 2]
+        t_arr = float(k) * 0.0002     # dense: flows overlap in flight
+
+        def submit(nb=nb, dest=dest, cls=cls, tenant=tenant):
+            flows.append(eng.memcpy(
+                nb, device=dest, direction=Direction.H2D,
+                traffic_class=cls, tenant=tenant,
+            ))
+
+        world.at(t_arr, submit)
+        pushed[cls] += nb
+    world.run()
+    assert eng.preemptions() > 0          # the scenario actually preempts
+    assert sorted(completed) == sorted(t.task_id for t in flows)
+    served = {
+        c: sum(w.bytes_by_class[c] for w in eng.workers.values())
+        for c in TrafficClass
+    }
+    assert served == pushed
+    by_tenant = eng.tenant_bytes()
+    assert sum(by_tenant.values()) == sum(pushed.values())
+
+
+def test_preempted_async_task_releases_dummy_at_completion():
+    """A preempted-and-requeued chunk's task must still complete exactly
+    once, with the Dummy Task released at the (sync-engine) completion
+    instant and complete_time ordered after submit_time."""
+    eng, world, _ = make_sim_engine()
+    stream = SimStream(world)
+    dummy = eng.memcpy_async(256 * MB, device=0, direction=Direction.H2D,
+                             traffic_class=TrafficClass.BACKGROUND)
+    stream.dummy(dummy, label="bulk")
+    # LATENCY arrival mid-flight forces preemption of the bulk flow's
+    # queued chunks on dev 0
+    world.at(0.001, lambda: eng.memcpy(
+        64 * MB, device=0, direction=Direction.H2D,
+        traffic_class=TrafficClass.LATENCY,
+    ))
+    world.run()
+    assert eng.preemptions() > 0
+    assert dummy.task.state.name == "COMPLETE"
+    assert dummy.released
+    assert stream.completion_time("bulk") == pytest.approx(
+        dummy.task.complete_time, rel=1e-9
+    )
+    assert dummy.task.complete_time >= dummy.task.submit_time
+
+
+# ---------------------------------------------------------------------------
+# Engine/serving threading + observability
+# ---------------------------------------------------------------------------
+def test_worker_snapshot_has_tenant_attribution():
+    cfg = MMAConfig(tenant_shares=dict(SHARES))
+    eng, world, _ = make_sim_engine(config=cfg)
+    eng.memcpy(64 * MB, device=0, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, tenant="gold")
+    eng.memcpy(32 * MB, device=1, direction=Direction.H2D,
+               traffic_class=TrafficClass.LATENCY, tenant="bronze")
+    world.run()
+    snap = eng.stats.snapshot_workers(eng.workers)
+    by_tenant = {}
+    for row in snap.values():
+        assert "by_tenant" in row and "preempted" in row
+        for t, b in row["by_tenant"].items():
+            by_tenant[t] = by_tenant.get(t, 0) + b
+    assert by_tenant == {"gold": 64 * MB, "bronze": 32 * MB}
+    assert eng.tenant_bytes() == by_tenant
+    # the sum of per-tenant bytes matches the class ledger
+    assert sum(by_tenant.values()) == sum(
+        w.bytes_total for w in eng.workers.values()
+    )
+
+
+def test_kv_manager_threads_tenant_to_engine():
+    from repro.configs import get_config
+    from repro.serving.kv_cache import KVCacheManager
+
+    for use_radix in (True, False):
+        cfg = get_config("tinyllama-1.1b").reduced()
+        eng, world, _ = make_sim_engine()
+        seen = []
+        eng.add_completion_listener(lambda t: seen.append(t.tenant))
+        kv = KVCacheManager(cfg, eng, device_budget_bytes=1 << 30,
+                            page_size=16, use_radix=use_radix)
+        toks = np.arange(64, dtype=np.int32)
+        kv.offload(toks, tenant="gold")
+        world.run()
+        hit, task, _ = kv.fetch(toks, tenant="gold")
+        world.run()
+        assert hit > 0
+        assert seen and set(seen) == {"gold"}
+
+
+def test_weight_manager_transfers_carry_tenant():
+    from repro.serving.weight_manager import WeightManager
+
+    eng, world, _ = make_sim_engine()
+    seen = []
+    eng.add_completion_listener(lambda t: seen.append(t.tenant))
+    wm = WeightManager(eng, nbytes=1 * GB, tenant="gold")
+    wm.sleep()
+    wm.wake()
+    assert seen == ["gold", "gold"]
+
+
+def test_scheduler_tenant_summary():
+    from repro.configs import get_config
+    from repro.serving.kv_cache import KVCacheManager
+    from repro.serving.scheduler import Request, Scheduler
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    eng, world, _ = make_sim_engine()
+    kv = KVCacheManager(cfg, eng, device_budget_bytes=1 << 30, page_size=16)
+    sched = Scheduler(kv, max_running=1)
+    a = Request(tokens=np.arange(32, dtype=np.int32), tenant="gold")
+    b = Request(tokens=np.arange(32, dtype=np.int32), tenant="bronze")
+    sched.submit(a)
+    sched.submit(b)
+    sched.schedule()
+    summary = sched.tenant_summary()
+    assert summary["gold"]["running"] == 1
+    assert summary["bronze"]["waiting"] == 1
+
+
+def test_orchestrator_tenant_report():
+    from repro.configs import get_config
+    from repro.serving.orchestrator import Orchestrator, ServedRequest
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    orch = Orchestrator({"m": cfg}, gpu_budget_bytes=8 << 30, track_kv=True)
+    toks = np.arange(256, dtype=np.int32)
+    reqs = [
+        ServedRequest(model="m", arrival=0.0, tokens=toks, tenant="gold"),
+        ServedRequest(model="m", arrival=1.0, tokens=toks, tenant="gold"),
+        ServedRequest(model="m", arrival=2.0, tokens=toks[:128],
+                      tenant="bronze"),
+    ]
+    orch.serve(reqs)
+    report = orch.tenant_report(reqs)
+    assert set(report["tenants"]) >= {"gold", "bronze"}
+    gold = report["tenants"]["gold"]
+    assert gold["n"] == 2
+    assert gold["engine_bytes"] > 0 and gold["engine_rate_gbps"] > 0
+    assert "preempted_chunks" in report
+
+
+# ---------------------------------------------------------------------------
+# Env parsing (fail loudly, naming the variable)
+# ---------------------------------------------------------------------------
+def test_qos_weights_env_rejects_non_numeric(monkeypatch):
+    monkeypatch.setenv("MMA_QOS_WEIGHTS", "8,apple,1")
+    with pytest.raises(ValueError, match="MMA_QOS_WEIGHTS"):
+        MMAConfig.from_env()
+
+
+def test_qos_weights_env_rejects_wrong_length(monkeypatch):
+    monkeypatch.setenv("MMA_QOS_WEIGHTS", "8,4")
+    with pytest.raises(ValueError, match="MMA_QOS_WEIGHTS"):
+        MMAConfig.from_env()
+
+
+def test_tenant_shares_env_parses_and_validates(monkeypatch):
+    monkeypatch.setenv("MMA_TENANT_SHARES", "gold:8,bronze:1.5")
+    cfg = MMAConfig.from_env()
+    assert cfg.tenant_shares == {"gold": 8.0, "bronze": 1.5}
+
+    for bad in ("gold", "gold:abc", "gold:0", ":3", "gold:-1"):
+        monkeypatch.setenv("MMA_TENANT_SHARES", bad)
+        with pytest.raises(ValueError, match="MMA_TENANT_SHARES"):
+            MMAConfig.from_env()
+
+
+def test_tenant_default_share_env_validated(monkeypatch):
+    monkeypatch.setenv("MMA_TENANT_DEFAULT_SHARE", "0")
+    with pytest.raises(ValueError, match="MMA_TENANT_DEFAULT_SHARE"):
+        MMAConfig.from_env()
+
+
+def test_preempt_env_mirror(monkeypatch):
+    monkeypatch.setenv("MMA_QOS_PREEMPT", "0")
+    assert MMAConfig.from_env().qos_preempt_inflight is False
+
+
+# ---------------------------------------------------------------------------
+# End-to-end noisy-neighbor isolation (miniature of the benchmark)
+# ---------------------------------------------------------------------------
+def _victim_fetch_elapsed(hierarchical: bool) -> float:
+    cfg = MMAConfig(
+        tenant_shares={"victim": 8.0, "noisy": 1.0} if hierarchical else None
+    )
+    eng, world, _ = make_sim_engine(config=cfg)
+    for dest in range(8):
+        eng.memcpy(256 * MB, device=dest, direction=Direction.H2D,
+                   traffic_class=TrafficClass.LATENCY, tenant="noisy")
+    holder = {}
+    world.at(0.002, lambda: holder.setdefault("t", eng.memcpy(
+        64 * MB, device=0, direction=Direction.H2D,
+        traffic_class=TrafficClass.LATENCY, tenant="victim",
+    )))
+    world.run()
+    return holder["t"].elapsed
+
+
+def test_hierarchical_wfq_isolates_victim_from_noisy_neighbor():
+    wfq = _victim_fetch_elapsed(True)
+    cls = _victim_fetch_elapsed(False)
+    assert wfq < 0.67 * cls, (
+        f"victim not isolated: wfq={wfq * 1e3:.2f} ms vs "
+        f"class-only={cls * 1e3:.2f} ms"
+    )
+
+
+def test_escalated_tenant_gets_activation_floor_in_new_class():
+    """A tenant entering a class via reclass_task (escalation) must start
+    at the active-tenant floor, not at a zero clock that would let it
+    monopolize the class (regression: reclass bypassed push's floor)."""
+    from repro.core import TaskManager
+
+    cfg = MMAConfig(tenant_shares={"gold": 8.0, "noisy": 1.0})
+    tm = TaskManager(cfg)
+    q = tm.queue
+    # gold accumulates LATENCY service history
+    for i in range(50):
+        q.push(_mt(cls=TrafficClass.LATENCY, tenant="gold", seq=i))
+    for _ in range(20):
+        q.pop_for_dest(0)
+    gold_v = q.tenant_vtime(TrafficClass.LATENCY, "gold")
+    assert gold_v > 0
+    # noisy's THROUGHPUT task escalates into LATENCY
+    task = TransferTask(nbytes=10 * MB, target=0, direction=Direction.H2D,
+                        traffic_class=TrafficClass.THROUGHPUT,
+                        tenant="noisy")
+    tm.split(task)
+    tm.promote(task, TrafficClass.LATENCY)
+    assert q.tenant_vtime(TrafficClass.LATENCY, "noisy") >= gold_v
+    # service stays share-proportional, not a noisy monopoly
+    first_9 = [q.pop_for_dest(0).tenant for _ in range(9)]
+    assert first_9.count("gold") >= 6
