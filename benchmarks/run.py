@@ -30,6 +30,7 @@ MODULES = [
     ("slo", "slo_trace"),
     ("kvstore", "kvstore_trace"),
     ("tenant", "tenant_isolation"),
+    ("disagg", "disagg_trace"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),

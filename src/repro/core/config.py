@@ -4,12 +4,19 @@ Mirrors the paper's environment-variable configuration surface (§4):
 relay GPU list, chunk size, fallback (bandwidth) threshold, outstanding
 queue depth, and flow-control mode. All values can be overridden via
 ``MMA_*`` environment variables or programmatically.
+
+The knob surface is self-documenting: ``python -m repro.core.config
+--dump-knobs`` emits the canonical markdown reference table
+(checked in as ``docs/KNOBS.md``; ``tests/test_docs.py`` asserts the
+file matches a fresh dump and that every ``MMA_*`` variable read by
+``from_env`` appears in the ``ENV_VARS`` registry, so the doc cannot
+drift from the dataclass).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 MB = 1 << 20
 GB = 1 << 30
@@ -68,6 +75,22 @@ def _parse_share_map(name: str, raw: str) -> Dict[str, float]:
     if not shares:
         raise ValueError(f"{name} must name at least one tenant, got {raw!r}")
     return shares
+
+
+def _parse_device_list(name: str, raw: str) -> Tuple[int, ...]:
+    """Parse a comma-separated GPU-index list from env var ``name``,
+    failing loudly on non-integer or negative entries."""
+    try:
+        devices = tuple(int(x) for x in raw.split(","))
+    except ValueError:
+        raise ValueError(
+            f"{name} must be comma-separated GPU indices, got {raw!r}"
+        ) from None
+    if any(d < 0 for d in devices):
+        raise ValueError(f"{name} indices must be >= 0, got {raw!r}")
+    if len(set(devices)) != len(devices):
+        raise ValueError(f"{name} lists a GPU twice: {raw!r}")
+    return devices
 
 
 def _env_int(name: str, default: int) -> int:
@@ -209,6 +232,26 @@ class MMAConfig:
     # Assumed prefill recompute rate (tokens/s) for cost-aware eviction:
     # a page is worth keeping in proportion to recompute_cost - fetch_cost.
     kvstore_recompute_tok_per_s: float = 4000.0
+    # ---- Prefill/decode disaggregation ----------------------------------
+    # Number of decode engines sharing the decode-side GPU slice (the
+    # decode devices are split round-robin among them).
+    disagg_decode_engines: int = 1
+    # GPU indices owned by the prefill engine / the decode engines.
+    # ``None`` = split the topology in half (first half prefill, second
+    # half decode) — the DisaggOrchestrator resolves the split.
+    disagg_prefill_devices: Optional[Sequence[int]] = None
+    disagg_decode_devices: Optional[Sequence[int]] = None
+    # Default decode-side TTFT budget for the KV handoff fetch (relative
+    # seconds; the handoff transfer is LATENCY-class and carries
+    # arrival + budget as its absolute EDF deadline). Requests may
+    # override per-request.
+    disagg_handoff_budget_s: float = 0.25
+    # Published pages are forced into the pinned tier once their
+    # writeback lands (spilling colder pages if needed) so the decode
+    # fetch pays no pageable staging floor. Off = pages land wherever
+    # capacity allows — the regime where the decode-side admission
+    # check (staging floor vs deadline) starts rejecting handoffs.
+    disagg_publish_pinned: bool = True
 
     def class_only(self) -> "MMAConfig":
         """Copy with the deadline machinery disabled (PR-1 class-only
@@ -345,7 +388,205 @@ class MMAConfig:
         )
         if cfg.kvstore_recompute_tok_per_s <= 0:
             raise ValueError("MMA_KVSTORE_RECOMPUTE_TPS must be positive")
+        cfg.disagg_decode_engines = _env_int(
+            "MMA_DISAGG_DECODE_ENGINES", cfg.disagg_decode_engines
+        )
+        if cfg.disagg_decode_engines <= 0:
+            raise ValueError("MMA_DISAGG_DECODE_ENGINES must be positive")
+        prefill = os.environ.get("MMA_DISAGG_PREFILL_GPUS")
+        if prefill:
+            cfg.disagg_prefill_devices = _parse_device_list(
+                "MMA_DISAGG_PREFILL_GPUS", prefill
+            )
+        decode = os.environ.get("MMA_DISAGG_DECODE_GPUS")
+        if decode:
+            cfg.disagg_decode_devices = _parse_device_list(
+                "MMA_DISAGG_DECODE_GPUS", decode
+            )
+        if (
+            cfg.disagg_prefill_devices is not None
+            and cfg.disagg_decode_devices is not None
+            and set(cfg.disagg_prefill_devices)
+            & set(cfg.disagg_decode_devices)
+        ):
+            raise ValueError(
+                "MMA_DISAGG_PREFILL_GPUS and MMA_DISAGG_DECODE_GPUS overlap"
+            )
+        cfg.disagg_handoff_budget_s = _env_float(
+            "MMA_DISAGG_HANDOFF_BUDGET_S", cfg.disagg_handoff_budget_s
+        )
+        if cfg.disagg_handoff_budget_s <= 0:
+            raise ValueError("MMA_DISAGG_HANDOFF_BUDGET_S must be positive")
+        cfg.disagg_publish_pinned = bool(
+            _env_int("MMA_DISAGG_PUBLISH_PINNED",
+                     int(cfg.disagg_publish_pinned))
+        )
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:
         return max(1, -(-nbytes // self.chunk_bytes))
+
+
+# ---------------------------------------------------------------------------
+# Knob reference (docs/KNOBS.md is generated from these registries —
+# `python -m repro.core.config --dump-knobs`; tests/test_docs.py keeps
+# the checked-in file and the `from_env` reader in sync with them).
+# ---------------------------------------------------------------------------
+
+# MMAConfig field -> environment variable read by ``from_env``. Fields
+# absent here are programmatic-only (no env override).
+ENV_VARS: Dict[str, str] = {
+    "chunk_bytes": "MMA_CHUNK_MB",
+    "queue_depth": "MMA_QUEUE_DEPTH",
+    "fallback_bytes": "MMA_FALLBACK_MB",
+    "relay_devices": "MMA_RELAY_GPUS",
+    "flow_control": "MMA_FLOW_CONTROL",
+    "numa_local_only": "MMA_NUMA_LOCAL",
+    "direct_priority": "MMA_DIRECT_PRIORITY",
+    "relay_streams": "MMA_RELAY_STREAMS",
+    "qos_enabled": "MMA_QOS",
+    "qos_strict_latency": "MMA_QOS_STRICT",
+    "qos_weights": "MMA_QOS_WEIGHTS",
+    "qos_reserve_direct": "MMA_QOS_RESERVE_DIRECT",
+    "qos_deadline_edf": "MMA_QOS_EDF",
+    "qos_deadline_escalate": "MMA_QOS_ESCALATE",
+    "qos_background_pause": "MMA_QOS_BG_PAUSE",
+    "qos_deadline_slack": "MMA_QOS_DEADLINE_SLACK",
+    "qos_deadline_est_gbps": "MMA_QOS_DEADLINE_EST_GBPS",
+    "tenant_shares": "MMA_TENANT_SHARES",
+    "tenant_default_share": "MMA_TENANT_DEFAULT_SHARE",
+    "qos_preempt_inflight": "MMA_QOS_PREEMPT",
+    "qos_admission_util": "MMA_QOS_ADMISSION_UTIL",
+    "kvstore_radix": "MMA_KVSTORE_RADIX",
+    "kvstore_page_tokens": "MMA_KVSTORE_PAGE_TOKENS",
+    "kvstore_pinned_bytes": "MMA_KVSTORE_PINNED_GB",
+    "kvstore_slab_bytes": "MMA_KVSTORE_SLAB_MB",
+    "kvstore_pageable_bytes": "MMA_KVSTORE_PAGEABLE_GB",
+    "kvstore_pageable_gbps": "MMA_KVSTORE_PAGEABLE_GBPS",
+    "kvstore_promote_on_hit": "MMA_KVSTORE_PROMOTE",
+    "kvstore_writeback_batch_pages": "MMA_KVSTORE_WB_BATCH",
+    "kvstore_tenant_quota_frac": "MMA_KVSTORE_TENANT_QUOTA",
+    "kvstore_recompute_tok_per_s": "MMA_KVSTORE_RECOMPUTE_TPS",
+    "disagg_decode_engines": "MMA_DISAGG_DECODE_ENGINES",
+    "disagg_prefill_devices": "MMA_DISAGG_PREFILL_GPUS",
+    "disagg_decode_devices": "MMA_DISAGG_DECODE_GPUS",
+    "disagg_handoff_budget_s": "MMA_DISAGG_HANDOFF_BUDGET_S",
+    "disagg_publish_pinned": "MMA_DISAGG_PUBLISH_PINNED",
+}
+
+# One-line meaning per field (every dataclass field must appear; the
+# drift test fails on a missing or stale entry).
+KNOB_DOCS: Dict[str, str] = {
+    "chunk_bytes": "micro-task (chunk) size; env value in MiB",
+    "queue_depth": "per-link outstanding queue depth (paper: 2)",
+    "fallback_bytes":
+        "below this size, native single-path copy; env value in MiB",
+    "relay_devices": "explicit relay GPU list; unset = topology discovery",
+    "flow_control": "'per_gpu' or 'centralized' dispatch (paper §4)",
+    "numa_local_only": "restrict relays to the target's NUMA node",
+    "direct_priority": "serve a link's own destination first (Table 2)",
+    "lrd_stealing": "longest-remaining-destination relay stealing",
+    "relay_streams": "relay streams per GPU; 2 = ping-pong dual pipeline",
+    "backoff_factor": "contended when EWMA service > factor x best observed",
+    "backoff_enabled": "contended links pull only when their queue drains",
+    "score_based_selection": "EWMA-rate-weighted path selection (beyond-paper)",
+    "ewma_alpha": "EWMA smoothing for per-link service-time monitoring",
+    "qos_enabled": "class-aware arbitration; off = arrival-order FIFO",
+    "qos_strict_latency": "LATENCY served strictly before lower classes",
+    "qos_weights": "WFQ weights (LATENCY,THROUGHPUT,BACKGROUND)",
+    "qos_reserve_direct":
+        "a dest's own link carries only LATENCY while a LATENCY flow runs",
+    "qos_deadline_edf": "EDF ordering of same-class deadlined micro-tasks",
+    "qos_deadline_escalate": "promote at-risk lower-class flows to LATENCY",
+    "qos_background_pause": "pause BACKGROUND pulls under deadline pressure",
+    "qos_deadline_slack": "at-risk margin (x projected finish)",
+    "qos_deadline_est_gbps": "assumed per-flow rate for deadline projections",
+    "tenant_shares":
+        "per-tenant WFQ shares within each class, e.g. gold:8,noisy:1",
+    "tenant_default_share": "share for tenants not named in tenant_shares",
+    "qos_preempt_inflight":
+        "cooperative recall of outranked not-yet-on-the-wire chunks",
+    "qos_admission_util":
+        "aggregate-bandwidth fraction for admission estimates (1.0 = bound)",
+    "kvstore_radix": "radix+tiered store vs flat whole-prefix pool",
+    "kvstore_page_tokens": "radix page granularity in tokens",
+    "kvstore_pinned_bytes": "pinned-host slab pool capacity; env value in GiB",
+    "kvstore_slab_bytes": "pinned registration granularity; env value in MiB",
+    "kvstore_pageable_bytes": "pageable host tier capacity; env value in GiB",
+    "kvstore_pageable_gbps": "pageable->pinned staging bandwidth (GB/s)",
+    "kvstore_promote_on_hit": "promote pageable pages to pinned on a hit",
+    "kvstore_writeback_batch_pages":
+        "pages coalesced per BACKGROUND writeback transfer",
+    "kvstore_tenant_quota_frac":
+        "per-tenant soft quota as a fraction of host capacity",
+    "kvstore_recompute_tok_per_s":
+        "assumed prefill rate for cost-aware eviction scoring",
+    "disagg_decode_engines": "decode engines sharing the decode GPU slice",
+    "disagg_prefill_devices":
+        "GPU indices owned by the prefill engine; unset = first half",
+    "disagg_decode_devices":
+        "GPU indices owned by decode engines; unset = second half",
+    "disagg_handoff_budget_s":
+        "default decode-side TTFT budget for the KV handoff fetch (s)",
+    "disagg_publish_pinned":
+        "force published pages into the pinned tier when writeback lands",
+}
+
+
+def _fmt_default(name: str, value) -> str:
+    """Human-readable default for the knob table."""
+    if name.endswith("_bytes") and isinstance(value, int):
+        if value % GB == 0 and value:
+            return f"{value // GB} GiB"
+        if value % MB == 0 and value:
+            return f"{value // MB} MiB"
+        return f"{value} B"
+    if isinstance(value, tuple):
+        return ",".join(str(v) for v in value)
+    if value is None:
+        return "unset"
+    return str(value)
+
+
+def dump_knobs() -> str:
+    """Render the canonical `MMAConfig` knob reference as markdown.
+
+    The table is generated straight from the dataclass (field order
+    preserved) plus the ``ENV_VARS`` / ``KNOB_DOCS`` registries, so a new
+    field without registry entries fails loudly here — which is exactly
+    what the drift test wants."""
+    cfg = MMAConfig()
+    lines = [
+        "# MMAConfig knob reference",
+        "",
+        "Generated by `python -m repro.core.config --dump-knobs` — do not",
+        "edit by hand; `tests/test_docs.py` asserts this file matches a",
+        "fresh dump. Fields without an env var are programmatic-only.",
+        "",
+        "| Field | Env var | Default | Meaning |",
+        "|---|---|---|---|",
+    ]
+    for f in dataclasses.fields(MMAConfig):
+        if f.name not in KNOB_DOCS:
+            raise KeyError(f"KNOB_DOCS missing entry for {f.name}")
+        env = ENV_VARS.get(f.name, "—")
+        default = _fmt_default(f.name, getattr(cfg, f.name))
+        lines.append(
+            f"| `{f.name}` | `{env}` | `{default}` | {KNOB_DOCS[f.name]} |"
+            if env != "—" else
+            f"| `{f.name}` | — | `{default}` | {KNOB_DOCS[f.name]} |"
+        )
+    lines.append("")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--dump-knobs" in sys.argv:
+        sys.stdout.write(dump_knobs())
+    else:
+        sys.stderr.write(
+            "usage: python -m repro.core.config --dump-knobs\n"
+        )
+        sys.exit(2)

@@ -55,15 +55,39 @@ class EngineStats:
 
 
 class MMAEngine:
+    """Top-level transfer engine.
+
+    ``devices`` restricts the engine to a *topology slice*: link workers
+    (and therefore direct paths and relay stealing) exist only for the
+    listed GPU indices, and ``memcpy(_async)`` rejects targets outside
+    the slice. Two sliced engines sharing one backend model a
+    disaggregated deployment — e.g. a prefill engine owning GPUs 0-3 and
+    a decode engine owning GPUs 4-7 whose flows still contend on the
+    shared host-DRAM and xGMI stages. ``name`` labels the engine for
+    cross-engine transfer-ownership accounting (kvstore
+    ``bytes_by_owner``, disagg reports)."""
+
     def __init__(
         self,
         topology: Topology,
         backend: Backend,
         config: Optional[MMAConfig] = None,
+        devices: Optional[Sequence[int]] = None,
+        name: str = "engine",
     ) -> None:
         self.topology = topology
         self.backend = backend
         self.config = config or MMAConfig.from_env()
+        self.name = name
+        if devices is None:
+            devices = range(topology.n_devices)
+        self.devices = tuple(devices)
+        bad = [d for d in self.devices if not 0 <= d < topology.n_devices]
+        if bad:
+            raise ValueError(
+                f"engine devices {bad} outside topology "
+                f"(n_devices={topology.n_devices})"
+            )
         self.task_manager = TaskManager(self.config)
         self.sync_engine = SyncEngine()
         self.task_manager.add_completion_listener(
@@ -71,7 +95,7 @@ class MMAEngine:
         )
         self.selector = PathSelector(topology, self.config, self.task_manager)
         self.workers: Dict[int, LinkWorker] = {}
-        for dev in range(topology.n_devices):
+        for dev in self.devices:
             w = LinkWorker(
                 dev, self.selector, backend, self.config, topology.pcie_gbps
             )
@@ -80,6 +104,13 @@ class MMAEngine:
         self.stats = EngineStats()
         self._completion_listeners: List[Callable[[TransferTask], None]] = []
         self.task_manager.add_completion_listener(self._on_task_complete)
+
+    def _check_target(self, device: int) -> None:
+        if device not in self.workers:
+            raise ValueError(
+                f"device {device} is not owned by engine {self.name!r} "
+                f"(slice {self.devices})"
+            )
 
     # ------------------------------------------------------------------
     def add_completion_listener(self, cb: Callable[[TransferTask], None]) -> None:
@@ -110,6 +141,7 @@ class MMAEngine:
         path binding). ``deadline`` is an absolute backend-clock SLO
         deadline (EDF ordering, escalation); ``tenant`` is the owning
         tenant for hierarchical class->tenant arbitration."""
+        self._check_target(device)
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=False, src=src, dst=dst, on_complete=on_complete,
@@ -134,6 +166,7 @@ class MMAEngine:
         the transfer is activated immediately; the caller is expected to
         block on completion (virtual-time callers observe
         ``task.complete_time``; threaded callers wait on ``on_complete``)."""
+        self._check_target(device)
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=True, src=src, dst=dst, traffic_class=traffic_class,
@@ -257,8 +290,11 @@ class MMAEngine:
         one, the whole same-or-higher-class backlog. At util=1.0 the
         result is a certified lower bound on the finish time — exceeding
         the deadline means the fetch *provably* cannot meet it."""
+        # A sliced engine owns only len(self.devices) host links, so its
+        # aggregate multipath ceiling — and therefore the certified
+        # admission bound — shrinks with the slice.
         agg = (
-            self.topology.n_devices
+            len(self.devices)
             * self.topology.pcie_gbps * (1 << 30)
             * self.config.qos_admission_util
         )
@@ -306,15 +342,35 @@ def make_sim_engine(
     config: Optional[MMAConfig] = None,
     world=None,
     record: bool = False,
+    backend: Optional[SimBackend] = None,
+    devices: Optional[Sequence[int]] = None,
+    name: str = "engine",
 ):
     """Convenience constructor: (engine, world, backend) on a simulated
-    8xH20 server (or the given topology)."""
+    8xH20 server (or the given topology). Pass an existing ``backend``
+    (and its world) to put a second engine on the *same* simulated links
+    — e.g. a decode engine slice contending with a prefill engine's
+    writeback traffic on the shared DRAM/xGMI stages."""
     from .simlink import SimWorld
     from .topology import h20_server
 
-    topo = topology or h20_server()
-    w = world or SimWorld()
-    cfg = config or MMAConfig()
-    backend = SimBackend(w, topo, cfg, record=record)
-    eng = MMAEngine(topo, backend, cfg)
+    if backend is not None:
+        # the engine must describe the fabric the backend simulates
+        if topology is not None and topology is not backend.topology:
+            raise ValueError(
+                "topology conflicts with the passed backend's topology"
+            )
+        if world is not None and world is not backend.world:
+            raise ValueError(
+                "world conflicts with the passed backend's world"
+            )
+        topo = backend.topology
+        cfg = config or MMAConfig()
+        w = backend.world
+    else:
+        topo = topology or h20_server()
+        cfg = config or MMAConfig()
+        w = world or SimWorld()
+        backend = SimBackend(w, topo, cfg, record=record)
+    eng = MMAEngine(topo, backend, cfg, devices=devices, name=name)
     return eng, w, backend

@@ -26,6 +26,30 @@ second arbitration level (``WFQTenantArbiter``) runs virtual-time WFQ
 between tenants *within* each class, so one tenant's bulk flows cannot
 starve another's same-class traffic. Unset shares collapse the level to a
 single implicit tenant and the queue is byte-for-byte the class-only one.
+
+Two-level arbiter invariants (hypothesis-tested in ``tests/test_slo.py``
+and ``tests/test_tenant.py``; relied on by every serving layer above):
+
+  * **starvation bound** — a continuously backlogged tenant with share
+    ``s`` out of total active share ``S`` is served at least once every
+    ~``S/s`` chunk services: each service advances the served tenant's
+    virtual clock by ``bytes/share``, so a backlogged tenant's clock
+    becomes the minimum again after at most one fair interval. The same
+    stride argument bounds class-level WFQ waits (weights instead of
+    shares). Work conservation means an idle tenant's/class's slack is
+    borrowed, never wasted.
+  * **vtime refund on preemption** — a cooperatively recalled chunk
+    (``requeue``) refunds exactly the virtual time its pop charged, to
+    the *pull-time* class and tenant clocks (the task may have escalated
+    in between): both clocks track **served** bytes, or a repeatedly
+    preempted tenant would pay for bandwidth it never got and starve.
+    Refunds clamp at zero — a busy-period reset between charge and
+    refund must not mint phantom credit. Preemption is loss-free: the
+    recalled chunk's bytes re-enter the queue and complete exactly once
+    (byte/completion conservation is property-tested).
+  * **re-activation floor** — a class or tenant (re)joining a busy
+    system starts its clock at the least-served active peer's clock, so
+    idling never banks credit that could later monopolize a link.
 """
 from __future__ import annotations
 

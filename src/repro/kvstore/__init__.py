@@ -16,15 +16,22 @@ Layering:
 ``serving.kv_cache.KVCacheManager`` rides on this store by default
 (``MMAConfig.kvstore_radix``); the flat whole-prefix ``HostKVPool`` is
 kept as the benchmark control arm (``benchmarks/kvstore_trace.py``).
+
+Cross-engine sharing (prefill/decode disaggregation): ``publish`` /
+``KVHandle`` / ``PageLease`` / ``fetch_leased`` let one store be written
+by a prefill engine and read by decode engines through their own
+PathSelectors — see ``store``'s docstring for the lease and
+transfer-ownership invariants, and ``repro.serving.disagg`` for the
+orchestrator that drives them.
 """
 from .hashing import chain_keys, legacy_prefix_key
 from .radix import Page, RadixPrefixIndex
-from .store import TierManager, TieredKVStore
+from .store import KVHandle, PageLease, TierManager, TieredKVStore
 from .tiers import PinnedSlabPool, Tier, TierCounters
 
 __all__ = [
     "chain_keys", "legacy_prefix_key",
     "Page", "RadixPrefixIndex",
-    "TierManager", "TieredKVStore",
+    "KVHandle", "PageLease", "TierManager", "TieredKVStore",
     "PinnedSlabPool", "Tier", "TierCounters",
 ]

@@ -16,6 +16,16 @@ Legacy-shim (one release): entries written by the old whole-prefix SHA-1
 scheme stay readable — ``legacy_prefix_key`` reproduces the old key, and
 ``HostKVPool`` aliases both keys to one entry (see
 ``serving.kv_cache.PrefixCache.store``).
+
+Invariants (property-tested in ``tests/test_kvstore.py``):
+
+  * **prefix commitment** — ``chain_keys(t, p)[i]`` equals
+    ``chain_keys(t', p)[i]`` iff the first ``(i+1)*p`` tokens agree
+    (modulo hash collisions): equal prefixes share keys across tenants
+    and engines, which is what makes a ``KVHandle`` (a bare chain key)
+    a sufficient cross-process exchange token.
+  * **alignment** — keys exist only at page boundaries; a sub-page tail
+    never gets a key and is never stored.
 """
 from __future__ import annotations
 

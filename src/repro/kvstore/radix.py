@@ -9,9 +9,20 @@ a different key.
 ``match`` walks the tree page by page (children are keyed by the exact
 raw bytes of the next page, so a lookup is O(pages) dict probes with no
 collision risk) and returns the longest stored page-aligned prefix.
-Pages are ref-counted: a page pinned by an in-flight fetch can never be
-evicted, and only leaves may be removed (an interior page backs every
-stored sequence that runs through it).
+
+Invariants (asserted in ``remove`` and exercised by
+``tests/test_kvstore.py`` / ``tests/test_disagg.py``):
+
+  * **ref-count safety** — a page with ``refs > 0`` (pinned by an
+    in-flight transfer, or held by a cross-engine ``PageLease``) can
+    never be evicted; ``pin``/``unpin`` must balance exactly (asserted).
+  * **leaf-only removal** — only childless pages may be removed: an
+    interior page backs every stored sequence that runs through it, so
+    evicting it would orphan longer prefixes.
+  * **path consistency** — ``path_to(key)`` returns the same pages, in
+    the same order, as re-matching the tokens that produced ``key``:
+    a published handle is exchangeable across engines without re-hashing
+    the token stream.
 """
 from __future__ import annotations
 
@@ -96,6 +107,21 @@ class RadixPrefixIndex:
     def get(self, key: str) -> Optional[Page]:
         node = self._nodes.get(key)
         return node.page if node is not None else None
+
+    def path_to(self, key: str) -> List[Page]:
+        """Root-to-``key`` page path (empty list if the key is unknown) —
+        the handle-exchange lookup: a chain key commits to its whole
+        prefix, so the path is exactly the pages a fetch of that prefix
+        needs, without re-hashing the token stream."""
+        node = self._nodes.get(key)
+        if node is None:
+            return []
+        out: List[Page] = []
+        while node is not None and node.page is not None:
+            out.append(node.page)
+            node = node.parent
+        out.reverse()
+        return out
 
     # -- mutation -------------------------------------------------------
     def insert(

@@ -21,9 +21,35 @@ QoS machinery governs cache traffic end to end:
 cost-aware eviction (fetch-cost vs recompute-cost scoring with per-tenant
 quotas). Pages referenced by an in-flight transfer are pinned and can
 never be evicted.
+
+Cross-engine sharing (prefill/decode disaggregation): one store may be
+read by several ``MMAEngine`` instances. A *producer* engine publishes a
+prefix (``publish`` -> ``KVHandle``: writeback routed through the
+producer's own links, landed pages forced into the pinned tier); a
+*consumer* engine exchanges the handle for a ``PageLease``
+(``acquire_lease_by_key``) and fetches the pages through **its own**
+``PathSelector`` (``fetch_leased(engine=..., target=...)``).
+
+Invariants the lease/ownership layer maintains:
+
+  * **multi-reader lease safety** — every lease holds one ref on each of
+    its pages for its whole lifetime; eviction can therefore never free
+    a page any engine still intends to read (the radix layer asserts
+    ``refs == 0`` on removal). Leases from different engines stack: a
+    page is evictable only when *all* leases and in-flight transfers
+    have released it.
+  * **transfer-ownership accounting** — every byte the store moves is
+    attributed to the engine that moved it (``bytes_by_owner``), so a
+    disaggregated deployment can separate prefill writeback traffic from
+    decode handoff traffic on one shared link fabric.
+  * **cross-device fetch pays the wire** — GPU-tier bytes are free only
+    when the fetch targets the device that produced them; a consumer
+    fetching to a *different* device pays the full DMA for every
+    non-GPU-resident byte (and the staging floor for pageable ones).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -74,6 +100,20 @@ class TierManager:
         )
         self.tier_bytes: Dict[Tier, int] = {t: 0 for t in Tier}
         self.counters = TierCounters()
+        # Transfer-ownership ledger: DMA bytes this store moved, keyed by
+        # the *engine* that carried them (cross-engine reads go through
+        # the consumer's own links and must not be billed to the
+        # producer).
+        self.bytes_by_owner: Dict[str, int] = {}
+
+    def _owner_of(self, engine) -> str:
+        return getattr(engine, "name", None) or "engine"
+
+    def _charge_owner(self, engine, nbytes: int) -> None:
+        owner = self._owner_of(engine)
+        self.bytes_by_owner[owner] = (
+            self.bytes_by_owner.get(owner, 0) + nbytes
+        )
 
     # -- accounting -----------------------------------------------------
     @property
@@ -128,11 +168,18 @@ class TierManager:
         # TieredKVStore.__init__ to avoid a back-reference cycle here.
         return []
 
-    def land(self, page: Page, protect: set) -> None:
+    def land(
+        self, page: Page, protect: set, prefer_pinned: bool = True
+    ) -> None:
         """Writeback completion: place a GPU-tier page in host memory —
         pinned if a slab is free (spilling colder pages if needed), else
-        pageable."""
+        pageable. ``prefer_pinned=False`` (a publish with
+        ``disagg_publish_pinned`` off) lands straight in pageable DRAM,
+        the regime where a later handoff fetch pays the staging floor."""
         if page.tier is not Tier.GPU:
+            return
+        if not prefer_pinned:
+            self._set_tier(page, Tier.PAGEABLE)
             return
         if not self.pinned.can_alloc(page.nbytes):
             self._spill_for(page.nbytes, protect)
@@ -152,11 +199,13 @@ class TierManager:
         tenant: str = "default",
         pin: Optional[Callable[[List[Page]], None]] = None,
         unpin: Optional[Callable[[List[Page]], None]] = None,
+        prefer_pinned: bool = True,
     ) -> List[object]:
         """GPU -> host demotion, batched: up to
         ``kvstore_writeback_batch_pages`` pages coalesce into one
         BACKGROUND transfer. Pages stay pinned (never evictable) until
-        their batch lands; landing prefers the pinned tier."""
+        their batch lands; landing prefers the pinned tier unless
+        ``prefer_pinned`` is off."""
         batch_pages = self.config.kvstore_writeback_batch_pages
         tasks: List[object] = []
         batches = [
@@ -176,11 +225,12 @@ class TierManager:
             )
             self.counters.writebacks += 1
             self.counters.writeback_bytes += nbytes
+            self._charge_owner(self.engine, nbytes)
 
             def landed(batch=batch) -> None:
                 protect = {id(p) for p in batch}
                 for p in batch:
-                    self.land(p, protect)
+                    self.land(p, protect, prefer_pinned=prefer_pinned)
                 if unpin is not None:
                     unpin(batch)
 
@@ -196,12 +246,24 @@ class TierManager:
         tenant: str = "default",
         pin: Optional[Callable[[List[Page]], None]] = None,
         unpin: Optional[Callable[[List[Page]], None]] = None,
+        engine=None,
+        target: Optional[int] = None,
     ) -> Tuple[object, float]:
         """Host -> GPU promotion of a prefix hit. Pageable pages are
         staged into pinned slabs first (returned ``staged_s``, charged at
         ``kvstore_pageable_gbps``); the DMA itself is one LATENCY-class
         multipath transfer carrying the request's deadline. Returns
-        ``(transfer task, staging seconds)``."""
+        ``(transfer task, staging seconds)``.
+
+        ``engine``/``target`` override the store's bound engine and
+        device: a decode engine fetching leased pages routes the DMA
+        through its *own* PathSelector onto its own GPU slice
+        (cross-engine handoff). GPU-tier bytes are free only for the
+        store's own target — a cross-device fetch pays the full wire for
+        them (the producing device is not the fetch destination)."""
+        engine = engine if engine is not None else self.engine
+        target = target if target is not None else self.target
+        cross_device = target != self.target
         by_tier: Dict[Tier, int] = {t: 0 for t in Tier}
         for p in pages:
             by_tier[p.tier] += p.nbytes
@@ -226,19 +288,24 @@ class TierManager:
                         self.counters.promoted_bytes += p.nbytes
 
         # GPU-tier pages (writeback still in flight) are already on the
-        # device — they cost no wire time at all.
+        # device — they cost no wire time at all. That shortcut only
+        # holds for the producing device: a cross-device fetch must move
+        # them over the wire like host-resident bytes.
         dma_bytes = by_tier[Tier.PINNED] + by_tier[Tier.PAGEABLE]
+        if cross_device:
+            dma_bytes += by_tier[Tier.GPU]
         if pin is not None:
             pin(pages)
         # staging precedes the DMA, so it consumes the caller's slack:
         # the wire transfer must land earlier by exactly staged_s for the
         # TTFT deadline to hold (EDF/escalation see the true urgency)
-        task = self.engine.memcpy(
-            dma_bytes, device=self.target, direction=Direction.H2D,
+        task = engine.memcpy(
+            dma_bytes, device=target, direction=Direction.H2D,
             traffic_class=traffic_class,
             deadline=None if deadline is None else deadline - staged_s,
             tenant=tenant,
         )
+        self._charge_owner(engine, dma_bytes)
         # callers that only see the task (KVCacheManager.fetch keeps its
         # 3-tuple API) can still account the staging seconds
         task.staged_s = staged_s
@@ -247,8 +314,48 @@ class TierManager:
         return task, staged_s
 
 
+@dataclasses.dataclass(frozen=True)
+class KVHandle:
+    """Cross-engine exchange token for a published prefix: the terminal
+    page's chain key (which commits to the whole prefix) plus enough
+    metadata for a consumer to budget the fetch without touching the
+    index. Handles are plain values — serializable, shareable between a
+    prefill and a decode process."""
+
+    key: str
+    n_tokens: int
+    nbytes: int
+    tenant: str = "default"
+
+
+@dataclasses.dataclass(eq=False)
+class PageLease:
+    """A reader's claim on a page path: one ref held on every page from
+    acquisition until ``release``. While any lease is live its pages are
+    invisible to eviction (``RadixPrefixIndex.remove`` asserts
+    ``refs == 0``), so a decode engine can fetch — and later re-fetch —
+    the pages without the producer or capacity pressure yanking them."""
+
+    key: str
+    owner: str
+    pages: List[Page]
+    hit_tokens: int
+    released: bool = False
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.pages)
+
+
 class TieredKVStore:
-    """Radix prefix index + tier manager + cost-aware eviction."""
+    """Radix prefix index + tier manager + cost-aware eviction.
+
+    One store may serve several engines (prefill/decode disaggregation):
+    ``publish`` writes pages back through the bound (producer) engine
+    and returns a ``KVHandle``; ``acquire_lease_by_key`` +
+    ``fetch_leased(engine=..., target=...)`` let a consumer engine pull
+    the same pages through its own links. See the module docstring for
+    the lease/ownership invariants."""
 
     def __init__(
         self,
@@ -273,6 +380,7 @@ class TieredKVStore:
         self.tiers._pinned_pages = lambda: [
             p for p in self.index.pages() if p.tier is Tier.PINNED
         ]
+        self._leases: List[PageLease] = []
 
     # -- store / lookup -------------------------------------------------
     def insert(
@@ -284,6 +392,7 @@ class TieredKVStore:
         extra_bytes: int = 0,
         traffic_class: TrafficClass = TrafficClass.BACKGROUND,
         deadline: Optional[float] = None,
+        prefer_pinned: bool = True,
     ) -> Tuple[str, List[object]]:
         """Store every complete page of ``tokens``; only pages not already
         host-resident move (dedup is the radix win — a re-offloaded shared
@@ -323,6 +432,7 @@ class TieredKVStore:
             fresh, extra_bytes=extra_bytes,
             traffic_class=traffic_class, deadline=deadline, tenant=tenant,
             pin=self.index.pin, unpin=self.index.unpin,
+            prefer_pinned=prefer_pinned,
         )
         return last.key, tasks
 
@@ -374,6 +484,131 @@ class TieredKVStore:
         last = pages[-1]
         payload = last.payload if last.terminal else None
         return hit, task, payload, staged_s
+
+    # -- cross-engine sharing (prefill/decode disaggregation) ------------
+    def publish(
+        self,
+        tokens: np.ndarray,
+        tenant: str = "default",
+        payload: Any = None,
+        traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
+        deadline: Optional[float] = None,
+    ) -> Tuple[Optional[KVHandle], List[object]]:
+        """Producer-side half of a KV handoff: store ``tokens``' pages
+        (dedup applies — shared prefixes cost zero wire bytes) and
+        return a ``KVHandle`` a consumer engine can exchange for a
+        lease. The writeback rides the producer's own links; with
+        ``disagg_publish_pinned`` (default) landed pages are placed in
+        the pinned tier so the consumer's fetch pays no staging floor.
+        Unlike plain ``insert``, the writeback defaults to THROUGHPUT —
+        a decode engine is (or soon will be) waiting on these bytes, so
+        they outrank ordinary BACKGROUND eviction traffic and may carry
+        a deadline for EDF/escalation."""
+        key, tasks = self.insert(
+            tokens, tenant=tenant, payload=payload,
+            traffic_class=traffic_class, deadline=deadline,
+            prefer_pinned=self.config.disagg_publish_pinned,
+        )
+        if not key:
+            return None, tasks          # sub-page sequence: nothing to hand off
+        path = self.index.path_to(key)
+        handle = KVHandle(
+            key=key,
+            n_tokens=len(path) * self.page_size,
+            nbytes=sum(p.nbytes for p in path),
+            tenant=tenant,
+        )
+        return handle, tasks
+
+    def acquire_lease(
+        self,
+        tokens: Optional[np.ndarray] = None,
+        key: Optional[str] = None,
+        owner: str = "default",
+        exact_only: bool = False,
+    ) -> Optional[PageLease]:
+        """Pin a page path for a reader. Match by ``tokens`` (longest
+        stored prefix) or by a published handle ``key`` (exact path —
+        the cross-engine exchange). Returns ``None`` on a miss. The
+        pages hold one ref each until ``release_lease``: no eviction can
+        touch them while the lease is live."""
+        if (tokens is None) == (key is None):
+            raise ValueError("acquire_lease needs tokens XOR key")
+        if key is not None:
+            pages = self.index.path_to(key)
+            if pages:
+                self.index.touch(pages)
+        else:
+            _, pages = self.match(tokens, exact_only=exact_only)
+        if not pages:
+            return None
+        self.index.pin(pages)
+        lease = PageLease(
+            key=pages[-1].key,
+            owner=owner,
+            pages=list(pages),
+            hit_tokens=len(pages) * self.page_size,
+        )
+        self._leases.append(lease)
+        return lease
+
+    def acquire_lease_by_key(
+        self, key: str, owner: str = "default"
+    ) -> Optional[PageLease]:
+        """Handle exchange: published ``KVHandle.key`` -> live lease."""
+        return self.acquire_lease(key=key, owner=owner)
+
+    def release_lease(self, lease: PageLease) -> None:
+        """Drop the lease's refs (idempotent). Its pages become
+        evictable again once no other lease or in-flight transfer holds
+        them."""
+        if lease.released:
+            return
+        lease.released = True
+        self._leases.remove(lease)
+        self.index.unpin(lease.pages)
+
+    def live_leases(self, owner: Optional[str] = None) -> List[PageLease]:
+        if owner is None:
+            return list(self._leases)
+        return [ls for ls in self._leases if ls.owner == owner]
+
+    def fetch_leased(
+        self,
+        lease: PageLease,
+        engine=None,
+        target: Optional[int] = None,
+        traffic_class: TrafficClass = TrafficClass.LATENCY,
+        deadline: Optional[float] = None,
+        tenant: Optional[str] = None,
+    ) -> Tuple[object, float]:
+        """Consumer-side half of the handoff: move the leased pages to
+        ``target`` through ``engine`` (defaults: the store's own — the
+        single-engine degenerate case). LATENCY-class, deadline-carrying:
+        the handoff contends in the consumer's arbitration hierarchy
+        exactly like a prefix-cache hit. The lease itself keeps the
+        pages pinned, so no per-transfer pin/unpin is needed. Returns
+        ``(task, staging seconds)``."""
+        if lease.released:
+            raise ValueError("fetch on a released lease")
+        return self.tiers.fetch(
+            lease.pages,
+            traffic_class=traffic_class,
+            deadline=deadline,
+            tenant=lease.owner if tenant is None else tenant,
+            engine=engine,
+            target=target,
+        )
+
+    def estimate_lease_floor_seconds(self, lease: PageLease) -> float:
+        """Backlog-independent staging floor for fetching the leased
+        pages — the decode-side admission input: if this alone blows the
+        handoff deadline, the request is provably unserveable on time
+        regardless of queue drain."""
+        staged = sum(
+            p.nbytes for p in lease.pages if p.tier is Tier.PAGEABLE
+        )
+        return staged / (self.config.kvstore_pageable_gbps * GB)
 
     # -- admission estimates --------------------------------------------
     def estimate_fetch_floor_seconds(self, tokens: np.ndarray) -> float:
@@ -483,5 +718,7 @@ class TieredKVStore:
                 "allocs": self.tiers.pinned.allocs,
                 "frees": self.tiers.pinned.frees,
             },
+            "live_leases": len(self._leases),
+            "bytes_by_owner": dict(self.tiers.bytes_by_owner),
             **c.as_dict(),
         }

@@ -7,6 +7,21 @@ pageable host DRAM. Only pinned memory is directly reachable by the
 multipath DMA engines; a pageable page must first be *staged* into a
 pinned slab at ``kvstore_pageable_gbps`` — the tier difference the
 scheduler's admission estimates must account for.
+
+Accounting invariants (property-tested in ``tests/test_kvstore.py``):
+
+  * **tier byte conservation** — every page is accounted in exactly one
+    tier at all times; ``TierManager`` moves bytes between tiers only
+    through ``_set_tier``, so ``sum(tier_bytes.values())`` always equals
+    the index's total bytes and no tier count ever goes negative
+    (asserted).
+  * **no pinned over-commit** — ``PinnedSlabPool.alloc`` raises rather
+    than exceed the slab-backed capacity; callers must spill first. A
+    ``free`` below zero is a double-free and asserts.
+  * **staging precedes DMA** — pageable bytes always pay the
+    ``kvstore_pageable_gbps`` staging cost *before* the multipath
+    transfer, and that cost is charged against the caller's deadline
+    slack (see ``TierManager.fetch``).
 """
 from __future__ import annotations
 

@@ -1,6 +1,8 @@
 """Serving substrate: tiered KV cache + radix prefix store with host
-offload, weight sleep/wake, latency model, functional server, scheduler."""
-from ..kvstore import TieredKVStore
+offload, weight sleep/wake, latency model, functional server, scheduler,
+and prefill/decode disaggregation over the shared store."""
+from ..kvstore import KVHandle, PageLease, TieredKVStore
+from .disagg import DisaggOrchestrator, DisaggRequest
 from .engine import (
     FunctionalServer,
     LatencyModel,
@@ -15,5 +17,5 @@ from .kv_cache import (
     ssm_state_bytes,
 )
 from .orchestrator import ModelInstance, Orchestrator, ServedRequest
-from .scheduler import Request, Scheduler
+from .scheduler import DecodeRouter, Request, Scheduler
 from .weight_manager import TransferReport, WeightManager

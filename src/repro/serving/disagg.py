@@ -1,0 +1,402 @@
+"""Prefill/decode disaggregation over one shared tiered KV store.
+
+A ``DisaggOrchestrator`` runs a *prefill* engine and one or more *decode*
+engines as topology slices of a single simulated server (one
+``SimBackend``: all slices contend on the shared host-DRAM and xGMI
+stages even though their PCIe links are disjoint), wired to one
+``TieredKVStore``:
+
+  * the prefill engine computes the prompt's KV (prefix-cache hits come
+    out of the shared store through the prefill engine's own links) and
+    **publishes** the pages — a THROUGHPUT, deadline-carrying writeback
+    through the prefill slice that lands the pages in the pinned tier
+    (``disagg_publish_pinned``), returning a ``KVHandle``;
+  * a ``DecodeRouter`` (``repro.serving.scheduler``) routes the
+    prefill-complete request to the least-loaded decode engine, after
+    decode-side admission control: a handoff whose *staging floor*
+    (pageable-tier lease bytes at ``kvstore_pageable_gbps``) provably
+    blows the TTFT deadline is rejected before it wastes decode
+    bandwidth;
+  * the decode engine exchanges the handle for a ``PageLease``
+    (ref-counted: the pages cannot be evicted while the lease is live,
+    however hard capacity pressure gets) and fetches them as a
+    LATENCY-class, deadline-carrying transfer through **its own**
+    ``PathSelector`` — so KV handoff traffic, prefix-cache promotion,
+    writeback, and everything else in the arbitration hierarchy contend
+    end to end, with tenant attribution on every byte
+    (``TierManager.bytes_by_owner`` splits the wire bill between the
+    prefill and decode engines).
+
+This is the serving scenario "Mind the Memory Gap" (arXiv:2503.08311)
+and LIMINAL (arXiv:2507.14397) motivate: decode is bandwidth-bound, so
+the prefill->decode KV handoff must be a first-class, QoS-arbitrated
+flow rather than an implicit cache hit. ``benchmarks/disagg_trace.py``
+replays the kvstore conversation trace through this orchestrator in
+multipath vs single-path mode and gates the TTFT win in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import MMAConfig, SimWorld, TrafficClass
+from ..core.engine import MMAEngine
+from ..core.task_launcher import SimBackend
+from ..core.topology import Topology, h20_server
+from ..kvstore import KVHandle, PageLease, TieredKVStore
+from ..kvstore.store import _when_done as _after
+from .engine import LatencyModel
+from .kv_cache import kv_bytes_per_token
+from .orchestrator import Orchestrator
+from .scheduler import DecodeRouter
+
+OVERHEAD_S = 0.030          # tokenizer/scheduler/sampling constant
+
+
+@dataclasses.dataclass(eq=False)
+class DisaggRequest:
+    """One request's life across both engine roles."""
+
+    tokens: np.ndarray
+    arrival: float
+    tenant: str = "default"
+    new_tokens: int = 64
+    # Absolute TTFT deadline (shared world clock). None = best-effort:
+    # the handoff then carries arrival + disagg_handoff_budget_s as its
+    # engine deadline so EDF still orders it, but admission never
+    # rejects it.
+    deadline: Optional[float] = None
+    # filled by the orchestrator
+    state: str = "waiting"   # waiting|prefill|handoff|decoding|done|rejected
+    reject_reason: Optional[str] = None
+    prefill_start: float = 0.0
+    prefill_fetch_s: float = 0.0
+    prefix_hit_tokens: int = 0
+    prefill_done: float = 0.0        # publish issued, lane freed
+    publish_landed: float = 0.0      # all writeback batches on host
+    decode_engine: str = ""
+    handoff_bytes: int = 0
+    handoff_fetch_s: float = 0.0
+    first_token_time: float = 0.0
+    finish: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival
+
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        if self.deadline is None:
+            return None
+        if self.state == "rejected":
+            return False
+        return self.first_token_time <= self.deadline
+
+
+class _DecodeLane:
+    """One decode engine's serving lane: FIFO over admitted handoffs,
+    ``slots`` concurrent requests (fetch + decode both occupy a slot)."""
+
+    def __init__(self, engine: MMAEngine, target: int, slots: int) -> None:
+        self.engine = engine
+        self.target = target
+        self.slots = slots
+        self.busy = 0
+        self.queue: Deque[Tuple[DisaggRequest, PageLease]] = deque()
+
+    @property
+    def load(self) -> int:
+        return self.busy + len(self.queue)
+
+
+class DisaggOrchestrator:
+    """Event-driven disaggregated serving on one shared link simulator.
+
+    ``multipath=False`` is the control arm: every engine is restricted
+    to direct paths only (``relay_devices=()``), so a handoff fetch uses
+    exactly one PCIe link — the same requests, bytes, and store state,
+    timed without the paper's multipath aggregation.
+    """
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        config: Optional[MMAConfig] = None,
+        topology: Optional[Topology] = None,
+        multipath: bool = True,
+        kv_dtype_size: int = 1,
+        page_tokens: int = 256,
+        pinned_bytes: Optional[int] = None,
+        pageable_bytes: Optional[int] = None,
+        decode_slots: int = 1,
+    ) -> None:
+        self.model_cfg = model_cfg
+        topo = topology or h20_server()
+        cfg = config or MMAConfig()
+        if not multipath:
+            cfg = dataclasses.replace(cfg, relay_devices=())
+        self.config = cfg
+        self.multipath = multipath
+
+        prefill_devs, decode_devs = self._resolve_slices(topo, cfg)
+        self.world = SimWorld()
+        self.backend = SimBackend(self.world, topo, cfg)
+        self.prefill_engine = MMAEngine(
+            topo, self.backend, cfg, devices=prefill_devs, name="prefill"
+        )
+        self.decode_engines: List[MMAEngine] = []
+        n_eng = cfg.disagg_decode_engines
+        slices = [decode_devs[i::n_eng] for i in range(n_eng)]
+        for i, devs in enumerate(slices):
+            if not devs:
+                raise ValueError(
+                    f"decode slice {i} is empty: {len(decode_devs)} decode "
+                    f"GPUs cannot host {n_eng} engines"
+                )
+            self.decode_engines.append(MMAEngine(
+                topo, self.backend, cfg, devices=devs, name=f"decode{i}"
+            ))
+
+        self.store = TieredKVStore(
+            self.prefill_engine,
+            bytes_per_token=kv_bytes_per_token(model_cfg, kv_dtype_size),
+            page_size=page_tokens,
+            config=cfg,
+            target_device=prefill_devs[0],
+            pinned_bytes=pinned_bytes,
+            pageable_bytes=pageable_bytes,
+        )
+        self.lanes: Dict[str, _DecodeLane] = {}
+        self.router = DecodeRouter(
+            self.store,
+            load_fn=lambda eng: self.lanes[eng.name].load,
+        )
+        for eng in self.decode_engines:
+            self.lanes[eng.name] = _DecodeLane(
+                eng, eng.devices[0], decode_slots
+            )
+            self.router.add_engine(eng, eng.devices[0])
+        # Each slice hosts one tensor-parallel replica of the model: the
+        # prefill replica spans the whole prefill slice, each decode
+        # replica spans its engine's slice — compute scales with the
+        # slice, transfers are timed by the engines themselves.
+        self.lm_prefill = LatencyModel(
+            model_cfg, use_mma=multipath, kv_dtype_size=kv_dtype_size,
+            tp_degree=len(prefill_devs),
+        )
+        self.lm_decode = LatencyModel(
+            model_cfg, use_mma=multipath, kv_dtype_size=kv_dtype_size,
+            tp_degree=len(self.decode_engines[0].devices),
+        )
+        self._prefill_queue: Deque[DisaggRequest] = deque()
+        self._prefill_busy = False
+        self.requests: List[DisaggRequest] = []
+
+    @staticmethod
+    def _resolve_slices(
+        topo: Topology, cfg: MMAConfig
+    ) -> Tuple[Sequence[int], Sequence[int]]:
+        """Default split: first half prefill, second half decode."""
+        n = topo.n_devices
+        prefill = cfg.disagg_prefill_devices
+        decode = cfg.disagg_decode_devices
+        if prefill is None and decode is None:
+            prefill, decode = tuple(range(n // 2)), tuple(range(n // 2, n))
+        elif prefill is None:
+            prefill = tuple(d for d in range(n) if d not in set(decode))
+        elif decode is None:
+            decode = tuple(d for d in range(n) if d not in set(prefill))
+        if set(prefill) & set(decode):
+            raise ValueError(
+                f"prefill slice {prefill} and decode slice {decode} overlap"
+            )
+        if not prefill or not decode:
+            raise ValueError("both slices need at least one GPU")
+        return tuple(prefill), tuple(decode)
+
+    # -- serving loop ----------------------------------------------------
+    def serve(self, requests: List[DisaggRequest]) -> List[DisaggRequest]:
+        """Replay ``requests`` (event-driven on the shared world): every
+        stage — prefix fetch, prefill compute, publish writeback, handoff
+        fetch, decode — overlaps with every other request's stages, so
+        the two engines' flows genuinely contend on the shared fabric."""
+        self.requests.extend(requests)
+        for req in requests:
+            self.world.at(req.arrival, lambda req=req: self._arrive(req))
+        self.world.run()
+        return requests
+
+    def _arrive(self, req: DisaggRequest) -> None:
+        self._prefill_queue.append(req)
+        self._pump_prefill()
+
+    def _pump_prefill(self) -> None:
+        if self._prefill_busy or not self._prefill_queue:
+            return
+        req = self._prefill_queue.popleft()
+        self._prefill_busy = True
+        req.state = "prefill"
+        req.prefill_start = self.world.now
+        hit, task, _payload, staged_s = self.store.fetch(
+            req.tokens, tenant=req.tenant,
+            traffic_class=TrafficClass.LATENCY, deadline=req.deadline,
+        )
+        req.prefix_hit_tokens = hit
+
+        def fetched() -> None:
+            req.prefill_fetch_s = staged_s + (task.elapsed if hit else 0.0)
+            suffix = max(len(req.tokens) - hit, 1)
+            compute_s = self.lm_prefill.prefill_seconds(suffix, kv_context=hit)
+            self.world.after(staged_s + compute_s,
+                             lambda: self._publish(req))
+
+        if task is None:
+            fetched()
+        else:
+            _after(task, fetched)
+
+    def _publish(self, req: DisaggRequest) -> None:
+        """Prefill compute done: write the KV pages back to the shared
+        store (dedup — a shared prefix republishes for free) and free
+        the prefill lane. The handoff starts once every writeback batch
+        has landed on the host."""
+        req.prefill_done = self.world.now
+        handle, tasks = self.store.publish(
+            req.tokens, tenant=req.tenant,
+            traffic_class=TrafficClass.THROUGHPUT,
+            deadline=self._handoff_deadline(req),
+        )
+        self._prefill_busy = False
+        self._pump_prefill()
+        left = {"n": len(tasks)}
+
+        def one_landed() -> None:
+            left["n"] -= 1
+            if left["n"] == 0:
+                req.publish_landed = self.world.now
+                self._handoff(req, handle)
+
+        for t in tasks:
+            _after(t, one_landed)
+
+    def _handoff_deadline(self, req: DisaggRequest) -> float:
+        if req.deadline is not None:
+            return req.deadline
+        return req.arrival + self.config.disagg_handoff_budget_s
+
+    def _handoff(self, req: DisaggRequest, handle: Optional[KVHandle]) -> None:
+        """Route the prefill-complete request to a decode engine. The
+        decode side reads through a lease, so from this moment until the
+        request finishes decoding, no capacity pressure on the shared
+        store can evict its pages."""
+        req.state = "handoff"
+        lease = (
+            self.store.acquire_lease_by_key(handle.key, owner="")
+            if handle is not None else None
+        )
+        reason = self.router.admission_reason(
+            lease, self.world.now, req.deadline
+        )
+        if reason is not None:
+            if lease is not None:
+                self.store.release_lease(lease)
+            req.state = "rejected"
+            req.reject_reason = reason
+            return
+        entry = self.router.route()
+        lane = self.lanes[entry["engine"].name]
+        req.decode_engine = entry["engine"].name
+        if lease is not None:
+            lease.owner = entry["engine"].name
+        lane.queue.append((req, lease))
+        self._pump_decode(lane)
+
+    def _pump_decode(self, lane: _DecodeLane) -> None:
+        while lane.busy < lane.slots and lane.queue:
+            req, lease = lane.queue.popleft()
+            lane.busy += 1
+            self._start_decode(lane, req, lease)
+
+    def _start_decode(
+        self, lane: _DecodeLane, req: DisaggRequest,
+        lease: Optional[PageLease],
+    ) -> None:
+        req.state = "decoding"
+        t_fetch = self.world.now
+        if lease is not None:
+            task, staged_s = self.store.fetch_leased(
+                lease, engine=lane.engine, target=lane.target,
+                traffic_class=TrafficClass.LATENCY,
+                deadline=self._handoff_deadline(req),
+                tenant=req.tenant,
+            )
+            req.handoff_bytes = task.nbytes
+        else:
+            # sub-page prompt: nothing page-aligned was published; the
+            # raw KV moves engine-to-engine as one direct transfer
+            nbytes = len(req.tokens) * self.store.bytes_per_token
+            task = lane.engine.memcpy(
+                nbytes, device=lane.target,
+                traffic_class=TrafficClass.LATENCY,
+                deadline=self._handoff_deadline(req), tenant=req.tenant,
+            )
+            staged_s = 0.0
+            req.handoff_bytes = nbytes
+
+        def fetched() -> None:
+            req.handoff_fetch_s = task.elapsed + staged_s
+            step_s = self.lm_decode.decode_step_seconds()
+
+            def first_token() -> None:
+                req.first_token_time = self.world.now
+
+            def done() -> None:
+                req.state = "done"
+                req.finish = self.world.now
+                if lease is not None:
+                    self.store.release_lease(lease)
+                lane.busy -= 1
+                self._pump_decode(lane)
+
+            self.world.after(staged_s + step_s + OVERHEAD_S, first_token)
+            self.world.after(
+                staged_s + OVERHEAD_S + step_s * max(req.new_tokens, 1),
+                done,
+            )
+
+        _after(task, fetched)
+
+    # -- observability ---------------------------------------------------
+    def delivered_bytes(self) -> int:
+        """Bytes handed to every engine (fallback copies included) —
+        the equal-work invariant the benchmark asserts across arms."""
+        engines = [self.prefill_engine] + self.decode_engines
+        return sum(e.stats.bytes_total for e in engines)
+
+    def report(self) -> Dict:
+        """Cross-engine observability: per-engine wire bytes and tenant
+        attribution, store tier/ownership stats, admission rejections,
+        and per-tenant SLO rows over the completed requests."""
+        done = [r for r in self.requests if r.state == "done"]
+        by_state: Dict[str, int] = {}
+        for r in self.requests:
+            by_state[r.state] = by_state.get(r.state, 0) + 1
+        engines = {}
+        for eng in [self.prefill_engine] + self.decode_engines:
+            engines[eng.name] = {
+                "devices": list(eng.devices),
+                "bytes_total": eng.stats.bytes_total,
+                "transfers": eng.stats.transfers,
+                "by_tenant": eng.tenant_bytes(),
+            }
+        return {
+            "requests": by_state,
+            "engines": engines,
+            "store": self.store.stats(),
+            "rejections": dict(self.router.rejections),
+            "slo": Orchestrator.slo_report(done) if done else {},
+        }

@@ -97,6 +97,9 @@ class Orchestrator:
         kv_dtype_size: int = 1,
         track_kv: bool = False,
         kv_page_tokens: int = 256,
+        kv_engine: Optional[MMAEngine] = None,
+        kv_world: Optional[SimWorld] = None,
+        kv_stores: Optional[Dict[str, TieredKVStore]] = None,
     ) -> None:
         self.instances: "OrderedDict[str, ModelInstance]" = OrderedDict()
         self.latency: Dict[str, LatencyModel] = {}
@@ -116,12 +119,35 @@ class Orchestrator:
         # Optional tiered KV tracking: one radix store per model (KV is
         # model-specific) on a persistent shared sim engine, so tier
         # residency/hit state survives across requests and per-tier
-        # hit/byte stats can be surfaced via ``kv_report``.
+        # hit/byte stats can be surfaced via ``kv_report``. Passing
+        # ``kv_engine``/``kv_world`` (and optionally a shared
+        # ``kv_stores`` map) plugs this orchestrator into someone else's
+        # transfer fabric — e.g. the prefill side of a disaggregated
+        # deployment whose stores decode engines also read (see
+        # ``repro.serving.disagg``).
         self.track_kv = track_kv
         self.kv_page_tokens = kv_page_tokens
-        self.kv_stores: Dict[str, TieredKVStore] = {}
+        if not track_kv and (
+            kv_engine is not None or kv_world is not None
+            or kv_stores is not None
+        ):
+            raise ValueError(
+                "kv_engine/kv_world/kv_stores require track_kv=True — "
+                "without it they would be silently ignored"
+            )
+        self.kv_stores: Dict[str, TieredKVStore] = (
+            kv_stores if kv_stores is not None else {}
+        )
         if track_kv:
-            self.kv_engine, self.kv_world, _ = make_sim_engine()
+            if (kv_engine is None) != (kv_world is None):
+                raise ValueError(
+                    "pass kv_engine and kv_world together (the engine's "
+                    "clock domain is the world's)"
+                )
+            if kv_engine is not None:
+                self.kv_engine, self.kv_world = kv_engine, kv_world
+            else:
+                self.kv_engine, self.kv_world, _ = make_sim_engine()
 
     def _kv_store(self, name: str) -> TieredKVStore:
         store = self.kv_stores.get(name)
@@ -132,6 +158,8 @@ class Orchestrator:
                     self.instances[name].cfg, self.kv_dtype_size
                 ),
                 page_size=self.kv_page_tokens,
+                # a sliced kv engine may not own device 0
+                target_device=self.kv_engine.devices[0],
             )
             self.kv_stores[name] = store
         return store

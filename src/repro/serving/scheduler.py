@@ -22,6 +22,14 @@ multipath rate; pageable bytes pay the staging cost on top), and a
 request whose *staging floor alone* exceeds its budget is rejected
 immediately rather than held — backlog drains, source-tier bandwidth
 does not.
+
+Disaggregated serving adds a second admission point: ``DecodeRouter``
+routes a prefill-complete request (its KV published to the shared
+tiered store) to the least-loaded decode engine, applying the same
+floor-first rejection logic to the *handoff* fetch — if staging the
+leased pages out of the pageable tier alone blows the decode-side TTFT
+deadline, the handoff is refused before any decode capacity or link
+bandwidth is spent on it.
 """
 from __future__ import annotations
 
@@ -254,3 +262,89 @@ class Scheduler:
                 )
                 row[state] += 1
         return out
+
+
+class DecodeRouter:
+    """Routes prefill-complete requests to a decode engine, with
+    decode-side admission control over the KV handoff.
+
+    Registered engines each own a GPU slice (``target`` is the device
+    leased pages are fetched onto). ``route`` picks the least-loaded
+    engine — by a caller-supplied load probe (e.g. the orchestrator's
+    lane occupancy) or, by default, the engine's queued LATENCY backlog
+    plus pending transfer count, so a handoff never lands behind another
+    engine's fetch storm when an idle slice exists.
+
+    Admission mirrors the scheduler's floor-first logic one hop later:
+    ``admission_reason`` rejects a handoff whose deadline has already
+    passed (``"expired"``) or whose *staging floor* — the
+    backlog-independent cost of staging the leased pages out of the
+    pageable tier (``TieredKVStore.estimate_lease_floor_seconds``) —
+    provably blows the remaining budget (``"staging_floor"``). Backlog
+    drains; source-tier bandwidth does not, so such a handoff can only
+    waste decode-lane headroom and link bandwidth on a guaranteed miss.
+    """
+
+    def __init__(
+        self,
+        store,
+        load_fn: Optional[Callable[[object], float]] = None,
+    ) -> None:
+        self.store = store
+        self.load_fn = load_fn
+        self._engines: List[Dict] = []   # {engine, target}
+        self.rejections: Dict[str, int] = {}
+
+    def add_engine(self, engine, target: int) -> None:
+        # engines without link workers (duck-typed fakes) skip the check
+        workers = getattr(engine, "workers", None)
+        if workers is not None and target not in workers:
+            raise ValueError(
+                f"target {target} outside engine "
+                f"{getattr(engine, 'name', '?')!r}'s slice"
+            )
+        self._engines.append({"engine": engine, "target": target})
+
+    @property
+    def engines(self) -> List[Dict]:
+        return list(self._engines)
+
+    def _load(self, entry: Dict) -> float:
+        eng = entry["engine"]
+        if self.load_fn is not None:
+            return self.load_fn(eng)
+        backlog = getattr(eng, "backlog_bytes", lambda *a: 0)(
+            TrafficClass.LATENCY
+        )
+        pending = getattr(
+            getattr(eng, "task_manager", None), "pending_transfers",
+            lambda: 0,
+        )()
+        return backlog + pending
+
+    def route(self) -> Dict:
+        """Least-loaded registered engine entry (``{engine, target}``).
+        Ties break on registration order (stable round-robin under equal
+        idle load is the caller's job via ``load_fn``)."""
+        if not self._engines:
+            raise RuntimeError("DecodeRouter has no registered engines")
+        return min(self._engines, key=self._load)
+
+    def admission_reason(
+        self, lease, now: float, deadline: Optional[float]
+    ) -> Optional[str]:
+        """``None`` if the handoff may proceed, else why it must not."""
+        if deadline is None:
+            return None
+        reason = None
+        if now > deadline:
+            reason = "expired"
+        elif (
+            lease is not None
+            and now + self.store.estimate_lease_floor_seconds(lease)
+            > deadline
+        ):
+            reason = "staging_floor"
+        if reason is not None:
+            self.rejections[reason] = self.rejections.get(reason, 0) + 1
+        return reason

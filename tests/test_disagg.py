@@ -1,0 +1,403 @@
+"""Prefill/decode disaggregation over the shared tiered KV store:
+engine topology slices, cross-engine page leases (no eviction while a
+decode lease is live), handoff byte conservation, decode-side admission
+(staging floor vs deadline), and the DisaggOrchestrator end to end."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import MMAConfig, make_sim_engine
+from repro.core.config import GB
+from repro.kvstore import Tier, TieredKVStore
+from repro.serving import DecodeRouter, DisaggOrchestrator, DisaggRequest
+
+
+def arange(n: int, start: int = 0) -> np.ndarray:
+    return np.arange(start, start + n, dtype=np.int32)
+
+
+def make_pair(page_size=4, bytes_per_token=1024, **cfg_kw):
+    """Shared-backend prefill (GPUs 0-3) + decode (GPUs 4-7) engines and
+    one store bound to the prefill side."""
+    cfg_kw.setdefault("kvstore_slab_bytes", 1024)
+    cfg = MMAConfig(**cfg_kw)
+    pe, world, backend = make_sim_engine(
+        config=cfg, devices=[0, 1, 2, 3], name="prefill"
+    )
+    de, _, _ = make_sim_engine(
+        backend=backend, config=cfg, devices=[4, 5, 6, 7], name="decode"
+    )
+    store = TieredKVStore(
+        pe, bytes_per_token=bytes_per_token, page_size=page_size,
+        config=cfg, target_device=0,
+        pinned_bytes=1 << 20, pageable_bytes=1 << 20,
+    )
+    return store, pe, de, world
+
+
+# ---------------------------------------------------------------------------
+# Engine topology slices
+# ---------------------------------------------------------------------------
+def test_engine_slice_owns_only_its_devices():
+    eng, _, _ = make_sim_engine(devices=[2, 3], name="half")
+    assert eng.devices == (2, 3)
+    assert sorted(eng.workers) == [2, 3]
+    with pytest.raises(ValueError, match="not owned by engine 'half'"):
+        eng.memcpy(1024, device=0)
+    with pytest.raises(ValueError, match="not owned"):
+        eng.memcpy_async(1024, device=7)
+
+
+def test_engine_slice_rejects_out_of_topology_devices():
+    with pytest.raises(ValueError, match="outside topology"):
+        make_sim_engine(devices=[0, 99])
+
+
+def test_sliced_engines_share_one_backend_and_clock():
+    _, pe, de, world = make_pair()
+    assert pe.backend is de.backend
+    t1 = pe.memcpy(64 << 20, device=0)
+    t2 = de.memcpy(64 << 20, device=4)
+    world.run()
+    assert t1.complete_time > 0 and t2.complete_time > 0
+    # disjoint slices: each engine's bytes land only on its own workers
+    assert sum(w.bytes_total for w in pe.workers.values()) == 64 << 20
+    assert sum(w.bytes_total for w in de.workers.values()) == 64 << 20
+
+
+def test_sliced_admission_bound_scales_with_slice():
+    full, _, _ = make_sim_engine(name="full")
+    half, _, _ = make_sim_engine(devices=[0, 1, 2, 3], name="half")
+    n = 1 << 30
+    assert half.estimate_service_seconds(n) == pytest.approx(
+        2 * full.estimate_service_seconds(n)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine page leases
+# ---------------------------------------------------------------------------
+def test_publish_returns_exchangeable_handle():
+    store, pe, de, world = make_pair()
+    handle, tasks = store.publish(arange(12), tenant="gold")
+    world.run()
+    assert handle is not None
+    assert handle.n_tokens == 12 and handle.nbytes == 12 * 1024
+    lease = store.acquire_lease_by_key(handle.key, owner="decode")
+    assert lease is not None
+    assert lease.hit_tokens == 12
+    # same pages as re-matching the tokens
+    assert [p.key for p in lease.pages] == [
+        p.key for p in store.match_pages(arange(12))
+    ]
+    store.release_lease(lease)
+
+
+def test_publish_subpage_returns_no_handle():
+    store, *_ = make_pair()
+    handle, tasks = store.publish(arange(3))   # < one page
+    assert handle is None and len(tasks) == 1
+
+
+def test_lease_blocks_eviction_until_released():
+    store, pe, de, world = make_pair()
+    handle, _ = store.publish(arange(8), tenant="a")
+    world.run()
+    lease = store.acquire_lease_by_key(handle.key, owner="decode")
+    # capacity pressure cannot evict leased pages
+    freed = store._evict_for(1 << 30, tenant="b")
+    assert freed == 0
+    assert store.index.n_pages == 2
+    assert all(p.refs == 1 for p in lease.pages)
+    # released leases make the leaf evictable again
+    store.release_lease(lease)
+    assert all(p.refs == 0 for p in lease.pages)
+    assert store._evict_for(1 << 30, tenant="b") > 0
+
+
+def test_leases_stack_across_owners():
+    store, pe, de, world = make_pair()
+    handle, _ = store.publish(arange(8))
+    world.run()
+    l1 = store.acquire_lease_by_key(handle.key, owner="decode0")
+    l2 = store.acquire_lease_by_key(handle.key, owner="decode1")
+    assert all(p.refs == 2 for p in l1.pages)
+    store.release_lease(l1)
+    assert store._evict_for(1 << 30, tenant="x") == 0   # l2 still live
+    store.release_lease(l2)
+    assert store._evict_for(1 << 30, tenant="x") > 0
+
+
+def test_release_lease_is_idempotent():
+    store, pe, de, world = make_pair()
+    handle, _ = store.publish(arange(4))
+    world.run()
+    lease = store.acquire_lease_by_key(handle.key)
+    store.release_lease(lease)
+    store.release_lease(lease)            # no double-unpin
+    assert all(p.refs == 0 for p in lease.pages)
+    with pytest.raises(ValueError, match="released lease"):
+        store.fetch_leased(lease)
+
+
+def test_acquire_lease_needs_tokens_xor_key():
+    store, *_ = make_pair()
+    with pytest.raises(ValueError, match="tokens XOR key"):
+        store.acquire_lease()
+    with pytest.raises(ValueError, match="tokens XOR key"):
+        store.acquire_lease(tokens=arange(4), key="abc")
+    assert store.acquire_lease(key="nope") is None
+
+
+# ---------------------------------------------------------------------------
+# Handoff byte conservation + transfer ownership
+# ---------------------------------------------------------------------------
+def test_handoff_bytes_ride_the_decode_engine():
+    store, pe, de, world = make_pair()
+    handle, _ = store.publish(arange(16), tenant="gold")
+    world.run()
+    # the writeback rode the prefill engine (sub-fallback sizes take the
+    # native single-path copy, so count at the engine level)
+    assert pe.stats.bytes_total == 16 * 1024
+
+    lease = store.acquire_lease_by_key(handle.key, owner="decode")
+    task, staged = store.fetch_leased(
+        lease, engine=de, target=4, tenant="gold",
+    )
+    world.run()
+    # LATENCY handoffs never take the fallback: every byte crossed the
+    # decode engine's own multipath workers
+    decode_bytes = sum(w.bytes_total for w in de.workers.values())
+    assert decode_bytes == handle.nbytes     # full path, decode links only
+    assert de.stats.bytes_total == handle.nbytes
+    # the prefill engine carried nothing for the handoff
+    assert pe.stats.bytes_total == 16 * 1024
+    # ownership ledger splits the wire bill by engine
+    assert store.tiers.bytes_by_owner == {
+        "prefill": 16 * 1024, "decode": 16 * 1024,
+    }
+    # tenant attribution crossed the engine boundary
+    assert de.tenant_bytes() == {"gold": 16 * 1024}
+    store.release_lease(lease)
+
+
+def test_cross_device_fetch_pays_for_gpu_tier_bytes():
+    store, pe, de, world = make_pair()
+    # insert but do NOT run the world: writeback still in flight, pages
+    # remain GPU-tier on the prefill device
+    key, _ = store.insert(arange(8))
+    pages = store.index.path_to(key)
+    assert all(p.tier is Tier.GPU for p in pages)
+    # same-device fetch: GPU-tier is free
+    t_same, _ = store.tiers.fetch(pages)
+    assert t_same.nbytes == 0
+    # cross-device fetch: every byte pays the wire
+    t_cross, _ = store.tiers.fetch(pages, engine=de, target=4)
+    assert t_cross.nbytes == 8 * 1024
+    world.run()
+
+
+# ---------------------------------------------------------------------------
+# Decode-side admission (DecodeRouter)
+# ---------------------------------------------------------------------------
+def test_router_rejects_when_staging_floor_blows_deadline():
+    # publish with the pinned preference off: pages land pageable, so the
+    # handoff pays the 6 GB/s staging floor before any DMA
+    store, pe, de, world = make_pair(
+        bytes_per_token=1 << 20, disagg_publish_pinned=False,
+    )
+    handle, _ = store.publish(arange(8))    # 8 MiB/page * 2 pages... 8 pages
+    world.run()
+    lease = store.acquire_lease(key=handle.key, owner="decode")
+    assert all(p.tier is Tier.PAGEABLE for p in lease.pages)
+    floor = store.estimate_lease_floor_seconds(lease)
+    assert floor == pytest.approx(handle.nbytes / (6.0 * GB))
+
+    router = DecodeRouter(store)
+    router.add_engine(de, 4)
+    now = world.now
+    # budget below the floor: provably unmeetable -> rejected
+    assert router.admission_reason(
+        lease, now, deadline=now + floor / 2
+    ) == "staging_floor"
+    # already expired
+    assert router.admission_reason(lease, now, deadline=now - 1) == "expired"
+    # generous budget: admitted
+    assert router.admission_reason(
+        lease, now, deadline=now + 10 * floor
+    ) is None
+    # best-effort: always admitted
+    assert router.admission_reason(lease, now, deadline=None) is None
+    assert router.rejections == {"staging_floor": 1, "expired": 1}
+    store.release_lease(lease)
+
+
+def test_router_routes_to_least_loaded_engine():
+    store, pe, de, world = make_pair()
+    d0, _, _ = make_sim_engine(
+        backend=pe.backend, devices=[4, 5], name="d0"
+    )
+    d1, _, _ = make_sim_engine(
+        backend=pe.backend, devices=[6, 7], name="d1"
+    )
+    loads = {"d0": 3, "d1": 1}
+    router = DecodeRouter(store, load_fn=lambda e: loads[e.name])
+    router.add_engine(d0, 4)
+    router.add_engine(d1, 6)
+    assert router.route()["engine"] is d1
+    loads["d1"] = 5
+    assert router.route()["engine"] is d0
+    with pytest.raises(ValueError, match="outside engine"):
+        router.add_engine(d0, 7)
+
+
+# ---------------------------------------------------------------------------
+# DisaggOrchestrator end to end
+# ---------------------------------------------------------------------------
+def small_orch(**kw):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    return DisaggOrchestrator(cfg, page_tokens=8, **kw)
+
+
+def test_disagg_serves_and_attributes_both_engines():
+    orch = small_orch()
+    reqs = [
+        DisaggRequest(tokens=arange(64), arrival=0.0, tenant="gold",
+                      new_tokens=2),
+        DisaggRequest(tokens=arange(64, start=1000), arrival=0.001,
+                      tenant="silver", new_tokens=2),
+    ]
+    orch.serve(reqs)
+    assert all(r.state == "done" for r in reqs)
+    assert all(r.ttft > 0 for r in reqs)
+    assert all(r.decode_engine == "decode0" for r in reqs)
+    rep = orch.report()
+    assert rep["requests"] == {"done": 2}
+    # both engines moved bytes; ownership ledger names them
+    assert rep["engines"]["prefill"]["bytes_total"] > 0
+    assert rep["engines"]["decode0"]["bytes_total"] > 0
+    owners = rep["store"]["bytes_by_owner"]
+    assert set(owners) == {"prefill", "decode0"}
+    # tenants attributed on the decode side too
+    assert set(rep["engines"]["decode0"]["by_tenant"]) == {"gold", "silver"}
+    # all leases released after decode
+    assert rep["store"]["live_leases"] == 0
+    assert set(rep["slo"]) == {"gold", "silver"}
+
+
+def test_disagg_handoff_fetches_full_context_on_decode_links():
+    orch = small_orch()
+    req = DisaggRequest(tokens=arange(64), arrival=0.0, new_tokens=1)
+    orch.serve([req])
+    assert req.handoff_bytes == 64 * orch.store.bytes_per_token
+    assert req.handoff_fetch_s > 0
+    decode = orch.decode_engines[0]
+    assert sum(w.bytes_total for w in decode.workers.values()) == \
+        req.handoff_bytes
+
+
+def test_disagg_rejects_on_decode_staging_floor():
+    # pages land pageable (publish_pinned off) and the model's KV is
+    # heavy: the staging floor alone exceeds the tight deadline
+    cfg = MMAConfig(disagg_publish_pinned=False)
+    orch = small_orch(config=cfg)
+    nbytes = 64 * orch.store.bytes_per_token
+    floor = nbytes / (cfg.kvstore_pageable_gbps * GB)
+    req = DisaggRequest(
+        tokens=arange(64), arrival=0.0, new_tokens=1,
+        deadline=floor / 10,            # provably unmeetable
+    )
+    orch.serve([req])
+    assert req.state == "rejected"
+    assert req.reject_reason in ("staging_floor", "expired")
+    assert req.met_deadline is False
+    # the rejected handoff moved zero bytes on the decode links
+    decode = orch.decode_engines[0]
+    assert sum(w.bytes_total for w in decode.workers.values()) == 0
+    # and released its lease
+    assert orch.report()["store"]["live_leases"] == 0
+
+
+def test_disagg_prefix_hits_come_from_shared_store():
+    orch = small_orch()
+    base = arange(64)
+    r1 = DisaggRequest(tokens=base, arrival=0.0, new_tokens=1)
+    r2 = DisaggRequest(
+        tokens=np.concatenate([base, arange(16, start=500)]).astype(np.int32),
+        arrival=5.0, new_tokens=1,
+    )
+    orch.serve([r1, r2])
+    assert r2.prefix_hit_tokens == 64      # r1's published pages hit
+    assert r1.prefix_hit_tokens == 0
+
+
+def test_disagg_slices_must_not_overlap():
+    cfg = MMAConfig(
+        disagg_prefill_devices=(0, 1, 4), disagg_decode_devices=(4, 5),
+    )
+    with pytest.raises(ValueError, match="overlap"):
+        small_orch(config=cfg)
+
+
+def test_disagg_multiple_decode_engines_split_the_slice():
+    cfg = MMAConfig(disagg_decode_engines=2)
+    orch = small_orch(config=cfg)
+    assert len(orch.decode_engines) == 2
+    devs = sorted(
+        d for e in orch.decode_engines for d in e.devices
+    )
+    assert devs == [4, 5, 6, 7]
+    reqs = [
+        DisaggRequest(tokens=arange(64, start=i * 100), arrival=0.002 * i,
+                      new_tokens=1)
+        for i in range(4)
+    ]
+    orch.serve(reqs)
+    assert all(r.state == "done" for r in reqs)
+    # least-loaded routing spreads handoffs across both engines
+    assert len({r.decode_engine for r in reqs}) == 2
+
+
+def test_disagg_env_knobs_round_trip(monkeypatch):
+    monkeypatch.setenv("MMA_DISAGG_DECODE_ENGINES", "2")
+    monkeypatch.setenv("MMA_DISAGG_PREFILL_GPUS", "0,1")
+    monkeypatch.setenv("MMA_DISAGG_DECODE_GPUS", "2,3,4,5,6,7")
+    monkeypatch.setenv("MMA_DISAGG_HANDOFF_BUDGET_S", "0.5")
+    monkeypatch.setenv("MMA_DISAGG_PUBLISH_PINNED", "0")
+    cfg = MMAConfig.from_env()
+    assert cfg.disagg_decode_engines == 2
+    assert cfg.disagg_prefill_devices == (0, 1)
+    assert cfg.disagg_decode_devices == (2, 3, 4, 5, 6, 7)
+    assert cfg.disagg_handoff_budget_s == 0.5
+    assert cfg.disagg_publish_pinned is False
+
+
+def test_disagg_env_knobs_fail_loudly(monkeypatch):
+    monkeypatch.setenv("MMA_DISAGG_PREFILL_GPUS", "0,zero")
+    with pytest.raises(ValueError, match="MMA_DISAGG_PREFILL_GPUS"):
+        MMAConfig.from_env()
+    monkeypatch.setenv("MMA_DISAGG_PREFILL_GPUS", "0,1")
+    monkeypatch.setenv("MMA_DISAGG_DECODE_GPUS", "1,2")
+    with pytest.raises(ValueError, match="overlap"):
+        MMAConfig.from_env()
+
+
+@pytest.mark.slow
+def test_disagg_trace_benchmark_meets_the_bar(tmp_path):
+    from benchmarks.common import CSV
+    from benchmarks.disagg_trace import run as bench_run
+
+    out = tmp_path / "BENCH_disagg.json"
+    import os
+    os.environ["MMA_BENCH_DISAGG_PATH"] = str(out)
+    try:
+        bench_run(CSV())
+    finally:
+        del os.environ["MMA_BENCH_DISAGG_PATH"]
+    import json
+    data = json.loads(out.read_text())
+    assert data["improvement"] >= 1.3
+    assert (
+        data["multipath"]["delivered_bytes"]
+        == data["singlepath"]["delivered_bytes"]
+    )

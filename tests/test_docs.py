@@ -1,0 +1,115 @@
+"""Documentation gates: docs/KNOBS.md must match a fresh knob dump (so
+the reference table cannot drift from the MMAConfig dataclass), the
+ENV_VARS registry must cover exactly the variables from_env reads, and
+every intra-repo markdown link in README/ROADMAP/docs must resolve."""
+import dataclasses
+import inspect
+import os
+import re
+import subprocess
+import sys
+
+from repro.core.config import ENV_VARS, KNOB_DOCS, MMAConfig, dump_knobs
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# Knob reference drift
+# ---------------------------------------------------------------------------
+def test_knob_docs_cover_every_config_field():
+    fields = {f.name for f in dataclasses.fields(MMAConfig)}
+    assert set(KNOB_DOCS) == fields, (
+        "KNOB_DOCS out of sync with MMAConfig: "
+        f"missing {fields - set(KNOB_DOCS)}, "
+        f"stale {set(KNOB_DOCS) - fields}"
+    )
+    assert set(ENV_VARS) <= fields, (
+        f"ENV_VARS names unknown fields: {set(ENV_VARS) - fields}"
+    )
+
+
+def test_env_registry_matches_from_env_reader():
+    """Every MMA_* variable ``from_env`` actually reads must appear in
+    ENV_VARS (and vice versa) — a new env knob cannot ship without its
+    documentation row."""
+    src = inspect.getsource(MMAConfig.from_env)
+    read = set(re.findall(r'"(MMA_[A-Z0-9_]+)"', src))
+    registered = set(ENV_VARS.values())
+    assert read == registered, (
+        f"from_env reads but ENV_VARS omits: {read - registered}; "
+        f"ENV_VARS lists but from_env never reads: {registered - read}"
+    )
+
+
+def test_checked_in_knobs_md_matches_fresh_dump():
+    path = os.path.join(REPO, "docs", "KNOBS.md")
+    with open(path) as f:
+        on_disk = f.read()
+    fresh = dump_knobs()
+    assert on_disk == fresh, (
+        "docs/KNOBS.md is stale — regenerate with: "
+        "PYTHONPATH=src python -m repro.core.config --dump-knobs "
+        "> docs/KNOBS.md"
+    )
+
+
+def test_dump_knobs_cli_entrypoint():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.config", "--dump-knobs"],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert out.returncode == 0
+    assert out.stdout == dump_knobs()
+
+
+# ---------------------------------------------------------------------------
+# Intra-repo markdown links
+# ---------------------------------------------------------------------------
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _doc_files():
+    files = [
+        os.path.join(REPO, "README.md"),
+        os.path.join(REPO, "ROADMAP.md"),
+    ]
+    docs = os.path.join(REPO, "docs")
+    for root, _, names in os.walk(docs):
+        files += [
+            os.path.join(root, n) for n in names if n.endswith(".md")
+        ]
+    return files
+
+
+def test_intra_repo_markdown_links_resolve():
+    broken = []
+    for path in _doc_files():
+        with open(path) as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:           # pure in-page anchor
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel)
+            )
+            if not os.path.exists(resolved):
+                broken.append(
+                    f"{os.path.relpath(path, REPO)} -> {target}"
+                )
+    assert not broken, "dead intra-repo links:\n  " + "\n  ".join(broken)
+
+
+def test_docs_tree_exists_and_is_linked_from_readme():
+    for name in ("ARCHITECTURE.md", "KNOBS.md"):
+        assert os.path.exists(os.path.join(REPO, "docs", name)), (
+            f"docs/{name} missing"
+        )
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/KNOBS.md" in readme
