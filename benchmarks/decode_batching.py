@@ -1,0 +1,216 @@
+"""Continuous-batching decode: packed batched steps vs the
+one-lease-per-step sequential baseline, identical requests and bytes.
+
+Replays one deterministic trace (shared system prefix, per-request
+suffixes, open-loop arrivals) through three ``DisaggOrchestrator`` arms
+on the same topology and store configuration:
+
+  * **baseline**  — ``continuous_batching=False``: the decode batch
+    holds the same page leases but serves exactly one sequence per step
+    round-robin, paying the full weight read per *token*;
+  * **batched**   — packed continuous batching: every resident sequence
+    is served every step, the weight read amortizes across the batch
+    and only the packed per-sequence KV reads scale;
+  * **chunked**   — batched decode plus chunked prefill
+    (``disagg_prefill_chunk_tokens``): long prompts stream through the
+    prefill compute lane in fair-interleaved chunks whose writebacks
+    ride THROUGHPUT only while the decode batches have slack.
+
+The baseline and batched arms move **identical bytes** (asserted
+exactly): the same prefix fetches, publish writebacks, and full-path
+leased handoff fetches — only the decode step schedule differs, and
+decode steps never touch the wire. Tokens/sec is decode throughput over
+the batch's busy span; p95 inter-token latency is reported for both
+arms from per-request token timestamps. The chunked arm additionally
+asserts no decode-batch starvation: no sequence's inter-token gap
+exceeds ``DecodeBatch.starvation_bound_s`` while prefill chunks churn.
+
+Writes ``BENCH_decode.json`` (path override: ``MMA_BENCH_DECODE_PATH``)
+for the CI bench gate; the >=1.3x tokens/sec acceptance bar is asserted
+after the artifacts are written.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs import PAPER_MODELS
+from repro.core.config import GB
+from repro.serving import DisaggOrchestrator, DisaggRequest
+
+from .common import CSV
+
+SEED = 31
+MODEL = "qwen-7b-chat"
+KV_DTYPE_SIZE = 1               # fp8 KV (LMCache setting, §5.2.1)
+PAGE_TOKENS = 256
+SYSTEM_TOKENS = 256             # shared prefix (one page, hits for free)
+N_REQUESTS = 24
+CONTEXT_STEPS = (256, 512, 768, 1024)   # unique suffix sizes, cycled
+ARRIVAL_SPACING_S = 0.040
+NEW_TOKENS = 96
+DECODE_BATCH = 8
+PREFILL_CHUNK_TOKENS = 256      # chunked arm only
+PINNED_BYTES = 8 * GB           # generous: zero eviction, so the
+PAGEABLE_BYTES = 16 * GB        # baseline/batched byte ledgers match
+VOCAB = 32_000
+
+
+def make_requests() -> List[DisaggRequest]:
+    """Deterministic open-loop trace: every prompt shares one system
+    page, then diverges; contexts cycle 512..1280 tokens."""
+    rng = np.random.default_rng(SEED)
+    system = rng.integers(0, VOCAB, size=SYSTEM_TOKENS, dtype=np.int64)
+    out: List[DisaggRequest] = []
+    for i in range(N_REQUESTS):
+        suffix = rng.integers(
+            0, VOCAB, size=CONTEXT_STEPS[i % len(CONTEXT_STEPS)],
+            dtype=np.int64,
+        )
+        out.append(DisaggRequest(
+            tokens=np.concatenate([system, suffix]).astype(np.int32),
+            arrival=i * ARRIVAL_SPACING_S,
+            tenant=f"tenant{i % 3}",
+            new_tokens=NEW_TOKENS,
+        ))
+    return out
+
+
+def replay(continuous_batching: bool, chunk_tokens: int) -> Dict:
+    cfg = PAPER_MODELS[MODEL]
+    orch = DisaggOrchestrator(
+        cfg,
+        kv_dtype_size=KV_DTYPE_SIZE,
+        page_tokens=PAGE_TOKENS,
+        pinned_bytes=PINNED_BYTES,
+        pageable_bytes=PAGEABLE_BYTES,
+        decode_slots=DECODE_BATCH,
+        continuous_batching=continuous_batching,
+        prefill_chunk_tokens=chunk_tokens,
+    )
+    requests = make_requests()
+    orch.serve(requests)
+    done = [r for r in requests if r.state == "done"]
+    assert len(done) == len(requests), (
+        f"all requests must finish (no deadlines in the bench trace): "
+        f"{len(done)}/{len(requests)}"
+    )
+    batches = [orch.batches[e.name] for e in orch.decode_engines]
+    tokens = sum(b.tokens_emitted for b in batches)
+    span = max(b.last_step_end for b in batches) - min(
+        b.first_step_start or 0.0 for b in batches
+    )
+    gaps = [g for r in done
+            for g in np.diff(np.asarray(r.token_times))]
+    max_ctx = max(len(r.tokens) + r.new_tokens for r in requests)
+    rep = orch.report()
+    return {
+        "requests": len(done),
+        "tokens": tokens,
+        "decode_span_s": span,
+        "tokens_per_sec": tokens / span,
+        "itl_p50_ms": float(np.percentile(gaps, 50)) * 1e3,
+        "itl_p95_ms": float(np.percentile(gaps, 95)) * 1e3,
+        "max_token_gap_ms": max(
+            r.max_token_gap_s() for r in done
+        ) * 1e3,
+        "starvation_bound_ms": max(
+            b.starvation_bound_s(max_ctx) for b in batches
+        ) * 1e3,
+        "prefill_chunks_max": max(r.prefill_chunks for r in done),
+        "delivered_bytes": orch.delivered_bytes(),
+        "delivered_gb": orch.delivered_bytes() / GB,
+        "batching": rep.batching,
+        "rejections": rep.rejections,
+    }
+
+
+def run(csv: CSV) -> None:
+    print("# Continuous-batching decode — packed batched steps vs "
+          "one-lease-per-step baseline, identical requests and bytes")
+    base = replay(continuous_batching=False, chunk_tokens=0)
+    batched = replay(continuous_batching=True, chunk_tokens=0)
+    chunked = replay(
+        continuous_batching=True, chunk_tokens=PREFILL_CHUNK_TOKENS
+    )
+    speedup = batched["tokens_per_sec"] / base["tokens_per_sec"]
+
+    print(f"{'arm':10s} {'tok/s':>8s} {'ITL p50':>9s} {'ITL p95':>9s} "
+          f"{'max gap':>9s} {'delivered':>10s}")
+    for name, r in (("baseline", base), ("batched", batched),
+                    ("chunked", chunked)):
+        print(f"{name:10s} {r['tokens_per_sec']:8.0f} "
+              f"{r['itl_p50_ms']:7.2f}ms {r['itl_p95_ms']:7.2f}ms "
+              f"{r['max_token_gap_ms']:7.2f}ms "
+              f"{r['delivered_gb']:8.2f} GB")
+    occ = batched["batching"]
+    mean_occ = np.mean([b["mean_occupancy"] for b in occ.values()])
+    print(f"batched decode speedup {speedup:.2f}x at mean occupancy "
+          f"{mean_occ:.1f}/{DECODE_BATCH}; chunked max gap "
+          f"{chunked['max_token_gap_ms']:.2f} ms vs starvation bound "
+          f"{chunked['starvation_bound_ms']:.2f} ms "
+          f"({chunked['prefill_chunks_max']} chunks max)")
+
+    csv.add("decode.tokens_per_sec.baseline", 0.0,
+            f"{base['tokens_per_sec']:.1f}")
+    csv.add("decode.tokens_per_sec.batched", 0.0,
+            f"{batched['tokens_per_sec']:.1f}")
+    csv.add("decode.speedup", 0.0, f"{speedup:.3f}")
+    csv.add("decode.itl_p95_ms.baseline", 0.0,
+            f"{base['itl_p95_ms']:.3f}")
+    csv.add("decode.itl_p95_ms.batched", 0.0,
+            f"{batched['itl_p95_ms']:.3f}")
+    csv.add("decode.chunked.max_gap_ms", 0.0,
+            f"{chunked['max_token_gap_ms']:.3f}")
+    csv.add("decode.delivered_gb", 0.0, f"{batched['delivered_gb']:.2f}")
+
+    out = {
+        "baseline": base,
+        "batched": batched,
+        "chunked": chunked,
+        "speedup": speedup,
+        "trace": {
+            "model": MODEL, "page_tokens": PAGE_TOKENS,
+            "requests": N_REQUESTS,
+            "arrival_spacing_s": ARRIVAL_SPACING_S,
+            "new_tokens": NEW_TOKENS, "decode_batch": DECODE_BATCH,
+            "prefill_chunk_tokens": PREFILL_CHUNK_TOKENS,
+            "pinned_gb": PINNED_BYTES / GB,
+            "pageable_gb": PAGEABLE_BYTES / GB,
+        },
+    }
+    path = os.environ.get("MMA_BENCH_DECODE_PATH", "BENCH_decode.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+
+    # Equal-work invariant first, acceptance bars second — all AFTER the
+    # artifacts are written so a failing run still uploads its evidence.
+    assert batched["delivered_bytes"] == base["delivered_bytes"], (
+        "baseline and batched arms must deliver identical bytes: "
+        f"{base['delivered_bytes']} (baseline) vs "
+        f"{batched['delivered_bytes']} (batched)"
+    )
+    assert speedup >= 1.3, (
+        f"continuous batching below the 1.3x acceptance bar: "
+        f"{speedup:.2f}x ({base['tokens_per_sec']:.0f} tok/s baseline "
+        f"vs {batched['tokens_per_sec']:.0f} tok/s batched)"
+    )
+    assert chunked["prefill_chunks_max"] > 1, (
+        "chunked arm did not actually chunk any prefill"
+    )
+    assert chunked["max_token_gap_ms"] <= \
+        chunked["starvation_bound_ms"] * (1 + 1e-9), (
+        "chunked prefill starved the decode batch: max inter-token gap "
+        f"{chunked['max_token_gap_ms']:.2f} ms exceeds the "
+        f"{chunked['starvation_bound_ms']:.2f} ms starvation bound"
+    )
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

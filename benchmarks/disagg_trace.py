@@ -101,7 +101,7 @@ def replay(multipath: bool) -> Tuple[Dict, "DisaggOrchestrator"]:
         "handoff_gb": sum(r.handoff_bytes for r in done) / GB,
         "delivered_gb": orch.delivered_bytes() / GB,
         "delivered_bytes": orch.delivered_bytes(),
-        "report": orch.report(),
+        "report": orch.report().as_dict(),
     }
     return out, orch
 
@@ -122,7 +122,7 @@ def run(csv: CSV) -> None:
               f"{r['ttft_p95_s'] * 1e3:8.1f} ms "
               f"{r['handoff_fetch_mean_s'] * 1e3:7.1f} ms "
               f"{r['delivered_gb']:8.1f} GB")
-    owners = mp["report"]["store"]["bytes_by_owner"]
+    owners = mp["report"]["kv"]["bytes_by_owner"]
     print("wire ownership (multipath): "
           + ", ".join(f"{k} {v / GB:.1f} GB"
                       for k, v in sorted(owners.items())))

@@ -11,8 +11,17 @@ import argparse
 import json
 import sys
 import time
+import warnings
 
 from .common import CSV
+
+# A bench that regresses onto a deprecated repro API must FAIL, not
+# warn: our own deprecation messages all start with "repro." (see
+# repro.serving.report.warn_deprecated), so exactly those become errors
+# — third-party DeprecationWarnings stay warnings.
+warnings.filterwarnings(
+    "error", category=DeprecationWarning, message=r"^repro\."
+)
 
 MODULES = [
     ("fig7", "fig7_bandwidth_vs_size"),
@@ -31,6 +40,7 @@ MODULES = [
     ("kvstore", "kvstore_trace"),
     ("tenant", "tenant_isolation"),
     ("disagg", "disagg_trace"),
+    ("decode", "decode_batching"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),

@@ -75,7 +75,7 @@ def run(csv: CSV) -> None:
               f"makespan {orch.clock:7.1f}s  wake-ups {wakes}")
         csv.add(f"trace.{tag}.ttft_p95_s",
                 float(np.percentile(ttfts, 95)) * 1e6, f"wakes={wakes}")
-        for tenant, rep in Orchestrator.slo_report(served).items():
+        for tenant, rep in orch.report(served).slo.items():
             hr = rep["hit_rate"]
             print(f"    {tenant:12s} n={rep['n']:2d} "
                   f"ttft p95 {rep['ttft_p95_s']:6.3f}s  "

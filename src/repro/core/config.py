@@ -252,6 +252,24 @@ class MMAConfig:
     # capacity allows — the regime where the decode-side admission
     # check (staging floor vs deadline) starts rejecting handoffs.
     disagg_publish_pinned: bool = True
+    # ---- Continuous-batching decode + chunked prefill -------------------
+    # Max concurrent sequences per decode batch (the batch capacity of
+    # each decode engine's DecodeBatch). Sequences join and leave at step
+    # boundaries; admission rejects with "batch_full" when a full batch
+    # cannot drain a slot before the request's deadline.
+    disagg_decode_batch: int = 8
+    # Continuous batching on (packed steps: one parameter read amortized
+    # over every active sequence per step) vs the one-lease-per-step
+    # sequential baseline (each token pays a full parameter read) — the
+    # benchmark control arm.
+    disagg_continuous_batching: bool = True
+    # Chunked prefill: split each prompt's prefill into chunks of this
+    # many tokens, interleaved fairly across queued requests, with each
+    # chunk published incrementally as a THROUGHPUT-class transfer
+    # (demoted to BACKGROUND while the decode batches have no slack).
+    # 0 = whole-prompt prefill (one request monopolizes the prefill
+    # engine until its prompt completes).
+    disagg_prefill_chunk_tokens: int = 0
 
     def class_only(self) -> "MMAConfig":
         """Copy with the deadline machinery disabled (PR-1 class-only
@@ -421,6 +439,23 @@ class MMAConfig:
             _env_int("MMA_DISAGG_PUBLISH_PINNED",
                      int(cfg.disagg_publish_pinned))
         )
+        cfg.disagg_decode_batch = _env_int(
+            "MMA_DISAGG_DECODE_BATCH", cfg.disagg_decode_batch
+        )
+        if cfg.disagg_decode_batch <= 0:
+            raise ValueError("MMA_DISAGG_DECODE_BATCH must be positive")
+        cfg.disagg_continuous_batching = bool(
+            _env_int("MMA_DISAGG_CONT_BATCH",
+                     int(cfg.disagg_continuous_batching))
+        )
+        cfg.disagg_prefill_chunk_tokens = _env_int(
+            "MMA_DISAGG_PREFILL_CHUNK_TOKENS",
+            cfg.disagg_prefill_chunk_tokens,
+        )
+        if cfg.disagg_prefill_chunk_tokens < 0:
+            raise ValueError(
+                "MMA_DISAGG_PREFILL_CHUNK_TOKENS must be >= 0 (0 = off)"
+            )
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:
@@ -472,6 +507,9 @@ ENV_VARS: Dict[str, str] = {
     "disagg_decode_devices": "MMA_DISAGG_DECODE_GPUS",
     "disagg_handoff_budget_s": "MMA_DISAGG_HANDOFF_BUDGET_S",
     "disagg_publish_pinned": "MMA_DISAGG_PUBLISH_PINNED",
+    "disagg_decode_batch": "MMA_DISAGG_DECODE_BATCH",
+    "disagg_continuous_batching": "MMA_DISAGG_CONT_BATCH",
+    "disagg_prefill_chunk_tokens": "MMA_DISAGG_PREFILL_CHUNK_TOKENS",
 }
 
 # One-line meaning per field (every dataclass field must appear; the
@@ -530,6 +568,12 @@ KNOB_DOCS: Dict[str, str] = {
         "default decode-side TTFT budget for the KV handoff fetch (s)",
     "disagg_publish_pinned":
         "force published pages into the pinned tier when writeback lands",
+    "disagg_decode_batch":
+        "max concurrent sequences per decode batch (join/leave per step)",
+    "disagg_continuous_batching":
+        "packed decode steps vs one-lease-per-step sequential baseline",
+    "disagg_prefill_chunk_tokens":
+        "prefill chunk size in tokens, interleaved fairly; 0 = whole-prompt",
 }
 
 

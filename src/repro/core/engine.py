@@ -103,6 +103,12 @@ class MMAEngine:
             self.workers[dev] = w
         self.stats = EngineStats()
         self._completion_listeners: List[Callable[[TransferTask], None]] = []
+        # Per-step wake attribution: decode-batch step tag -> landed
+        # transfer count + bytes (tasks without a ``step`` tag are not
+        # tracked here). Fed by both completion paths — multipath
+        # (``_on_task_complete``) and fallback/zero-byte
+        # (``_complete_now``), which bypasses the task manager.
+        self.step_ledger: Dict[int, Dict[str, int]] = {}
         self.task_manager.add_completion_listener(self._on_task_complete)
 
     def _check_target(self, device: int) -> None:
@@ -116,9 +122,24 @@ class MMAEngine:
     def add_completion_listener(self, cb: Callable[[TransferTask], None]) -> None:
         self._completion_listeners.append(cb)
 
+    def _record_step(self, task: TransferTask) -> None:
+        if task.step is None:
+            return
+        rec = self.step_ledger.setdefault(
+            task.step, {"transfers": 0, "bytes": 0}
+        )
+        rec["transfers"] += 1
+        rec["bytes"] += task.nbytes
+
     def _on_task_complete(self, task: TransferTask) -> None:
+        self._record_step(task)
         for cb in self._completion_listeners:
             cb(task)
+
+    def step_attribution(self) -> Dict[int, Dict[str, int]]:
+        """Landed transfers and bytes grouped by decode-batch step tag
+        (see ``TransferTask.step``)."""
+        return {s: dict(rec) for s, rec in sorted(self.step_ledger.items())}
 
     # ------------------------------------------------------------------
     # Interception points (paper §3.2)
@@ -134,6 +155,7 @@ class MMAEngine:
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
         deadline: Optional[float] = None,
         tenant: str = "default",
+        step: Optional[int] = None,
     ) -> DummyTask:
         """Intercept an asynchronous copy: record a Transfer Task, return
         the Dummy Task to be enqueued on the caller's stream. Dispatch
@@ -146,6 +168,7 @@ class MMAEngine:
             nbytes=nbytes, target=device, direction=direction,
             sync=False, src=src, dst=dst, on_complete=on_complete,
             traffic_class=traffic_class, deadline=deadline, tenant=tenant,
+            step=step,
         )
         dummy = DummyTask(task=task, on_activate=self._activate)
         self.sync_engine.register(dummy)
@@ -161,6 +184,7 @@ class MMAEngine:
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
         deadline: Optional[float] = None,
         tenant: str = "default",
+        step: Optional[int] = None,
     ) -> TransferTask:
         """Intercept a synchronous copy: same Transfer-Task machinery, but
         the transfer is activated immediately; the caller is expected to
@@ -170,7 +194,7 @@ class MMAEngine:
         task = TransferTask(
             nbytes=nbytes, target=device, direction=direction,
             sync=True, src=src, dst=dst, traffic_class=traffic_class,
-            deadline=deadline, tenant=tenant,
+            deadline=deadline, tenant=tenant, step=step,
         )
         self._activate(task)
         return task
@@ -179,6 +203,7 @@ class MMAEngine:
     def _complete_now(self, task: TransferTask) -> None:
         task.state = TaskState.COMPLETE
         task.complete_time = self.backend.now()
+        self._record_step(task)
         self.sync_engine.transfer_complete(task)
         for cb in self._completion_listeners:
             cb(task)

@@ -109,6 +109,10 @@ class TransferTask:
     # Set by TaskManager.promote when slack-based escalation reclasses the
     # flow mid-flight; ``traffic_class`` keeps the caller-declared class.
     effective_class: Optional[TrafficClass] = None
+    # Decode-batch step index this transfer serves (per-step batched wake
+    # attribution: the engine's step ledger groups landed transfers and
+    # bytes by this tag). None = not tied to a decode step.
+    step: Optional[int] = None
     task_id: int = dataclasses.field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.RECORDED
     # Host/device payload handles — opaque to the scheduler; the functional

@@ -26,12 +26,12 @@ orchestrator that drives them.
 """
 from .hashing import chain_keys, legacy_prefix_key
 from .radix import Page, RadixPrefixIndex
-from .store import KVHandle, PageLease, TierManager, TieredKVStore
+from .store import FetchSpec, KVHandle, PageLease, TierManager, TieredKVStore
 from .tiers import PinnedSlabPool, Tier, TierCounters
 
 __all__ = [
     "chain_keys", "legacy_prefix_key",
     "Page", "RadixPrefixIndex",
-    "KVHandle", "PageLease", "TierManager", "TieredKVStore",
+    "FetchSpec", "KVHandle", "PageLease", "TierManager", "TieredKVStore",
     "PinnedSlabPool", "Tier", "TierCounters",
 ]

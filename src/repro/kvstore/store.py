@@ -60,6 +60,57 @@ from .radix import Page, RadixPrefixIndex
 from .tiers import GB, PinnedSlabPool, Tier, TierCounters
 
 
+_UNSET: Any = object()     # sentinel: keyword not explicitly passed
+
+
+@dataclasses.dataclass(frozen=True)
+class FetchSpec:
+    """Routing/QoS bundle for one fetch — the one object a batching loop
+    threads per sequence instead of five loose kwargs.
+
+    ``TieredKVStore.fetch`` and ``fetch_leased`` accept either a
+    ``spec=`` or the individual keyword-only parameters, never both:
+    passing a loose kwarg alongside a spec raises a ``TypeError`` naming
+    the offending kwarg. ``engine``/``target`` override the store's
+    bound (producer) engine and device — the cross-engine handoff path;
+    ``step`` tags the transfer for the engine's per-step wake ledger
+    (``MMAEngine.step_attribution``)."""
+
+    engine: Any = None
+    target: Optional[int] = None
+    traffic_class: TrafficClass = TrafficClass.LATENCY
+    deadline: Optional[float] = None
+    tenant: Optional[str] = None
+    step: Optional[int] = None
+
+
+def _merge_spec(
+    method: str, spec: Optional[FetchSpec], **loose: Any
+) -> Dict[str, Any]:
+    """Resolve ``spec`` vs loose keyword parameters for ``method``.
+
+    Exactly one source may supply routing/QoS fields: with a spec, every
+    loose kwarg must stay unset — violations raise a ``TypeError`` that
+    names the offending kwarg (loud misuse beats silent precedence).
+    Returns a field->value dict with ``None`` for unset loose fields
+    (callers apply their own defaults)."""
+    if spec is not None:
+        if not isinstance(spec, FetchSpec):
+            raise TypeError(
+                f"{method}() spec= must be a FetchSpec, "
+                f"got {type(spec).__name__}"
+            )
+        offending = [k for k, v in loose.items() if v is not _UNSET]
+        if offending:
+            raise TypeError(
+                f"{method}() got both spec= and loose keyword "
+                f"'{offending[0]}'; set '{offending[0]}' on the FetchSpec "
+                f"instead"
+            )
+        return {k: getattr(spec, k) for k in loose}
+    return {k: (None if v is _UNSET else v) for k, v in loose.items()}
+
+
 def _when_done(task, cb: Callable[[], None]) -> None:
     """Run ``cb`` when ``task`` completes (now, if it already has —
     zero-byte transfers complete inline during ``memcpy``)."""
@@ -248,6 +299,7 @@ class TierManager:
         unpin: Optional[Callable[[List[Page]], None]] = None,
         engine=None,
         target: Optional[int] = None,
+        step: Optional[int] = None,
     ) -> Tuple[object, float]:
         """Host -> GPU promotion of a prefix hit. Pageable pages are
         staged into pinned slabs first (returned ``staged_s``, charged at
@@ -303,7 +355,7 @@ class TierManager:
             dma_bytes, device=target, direction=Direction.H2D,
             traffic_class=traffic_class,
             deadline=None if deadline is None else deadline - staged_s,
-            tenant=tenant,
+            tenant=tenant, step=step,
         )
         self._charge_owner(engine, dma_bytes)
         # callers that only see the task (KVCacheManager.fetch keeps its
@@ -341,6 +393,11 @@ class PageLease:
     pages: List[Page]
     hit_tokens: int
     released: bool = False
+    # Per-lease byte attribution: wire bytes and transfer count actually
+    # moved through ``fetch_leased`` against this lease (a sequence that
+    # re-fetches — e.g. after preemption — accrues more than ``nbytes``).
+    bytes_fetched: int = 0
+    fetches: int = 0
 
     @property
     def nbytes(self) -> int:
@@ -463,23 +520,43 @@ class TieredKVStore:
     def fetch(
         self,
         tokens: np.ndarray,
-        tenant: str = "default",
+        *,
+        spec: Optional[FetchSpec] = None,
+        tenant: Any = _UNSET,
         exact_only: bool = False,
-        traffic_class: TrafficClass = TrafficClass.LATENCY,
-        deadline: Optional[float] = None,
+        traffic_class: Any = _UNSET,
+        deadline: Any = _UNSET,
+        engine: Any = _UNSET,
+        target: Any = _UNSET,
+        step: Any = _UNSET,
     ) -> Tuple[int, Optional[object], Any, float]:
         """Fetch the longest prefix hit back to the device. Returns
         ``(hit_tokens, task, payload, staged_s)``; the payload rides only
-        on a full terminal hit (exact round trip)."""
+        on a full terminal hit (exact round trip).
+
+        Routing/QoS parameters are keyword-only and may come bundled as
+        ``spec=FetchSpec(...)`` — mixing a spec with a loose kwarg is a
+        ``TypeError`` naming the offending kwarg."""
+        p = _merge_spec(
+            "fetch", spec, tenant=tenant, traffic_class=traffic_class,
+            deadline=deadline, engine=engine, target=target, step=step,
+        )
+        tenant_v = p["tenant"] if p["tenant"] is not None else "default"
         hit, pages = self.match(tokens, exact_only=exact_only)
         if hit == 0:
             return 0, None, None, 0.0
-        for p in pages:
-            p.tenants.add(tenant)
+        for pg in pages:
+            pg.tenants.add(tenant_v)
         task, staged_s = self.tiers.fetch(
-            pages, traffic_class=traffic_class, deadline=deadline,
-            tenant=tenant,
+            pages,
+            traffic_class=(
+                p["traffic_class"] if p["traffic_class"] is not None
+                else TrafficClass.LATENCY
+            ),
+            deadline=p["deadline"],
+            tenant=tenant_v,
             pin=self.index.pin, unpin=self.index.unpin,
+            engine=p["engine"], target=p["target"], step=p["step"],
         )
         last = pages[-1]
         payload = last.payload if last.terminal else None
@@ -522,6 +599,7 @@ class TieredKVStore:
 
     def acquire_lease(
         self,
+        *,
         tokens: Optional[np.ndarray] = None,
         key: Optional[str] = None,
         owner: str = "default",
@@ -531,7 +609,9 @@ class TieredKVStore:
         stored prefix) or by a published handle ``key`` (exact path —
         the cross-engine exchange). Returns ``None`` on a miss. The
         pages hold one ref each until ``release_lease``: no eviction can
-        touch them while the lease is live."""
+        touch them while the lease is live. All parameters are
+        keyword-only — ``tokens`` vs ``key`` is a semantic choice the
+        call site must spell out."""
         if (tokens is None) == (key is None):
             raise ValueError("acquire_lease needs tokens XOR key")
         if key is not None:
@@ -553,7 +633,7 @@ class TieredKVStore:
         return lease
 
     def acquire_lease_by_key(
-        self, key: str, owner: str = "default"
+        self, key: str, *, owner: str = "default"
     ) -> Optional[PageLease]:
         """Handle exchange: published ``KVHandle.key`` -> live lease."""
         return self.acquire_lease(key=key, owner=owner)
@@ -573,14 +653,23 @@ class TieredKVStore:
             return list(self._leases)
         return [ls for ls in self._leases if ls.owner == owner]
 
+    def lease_bytes(self, owner: Optional[str] = None) -> int:
+        """Outstanding leased bytes (optionally one owner's) — the
+        decode router's load metric: a 1M-token sequence weighs its true
+        byte footprint, not one lease-count unit."""
+        return sum(ls.nbytes for ls in self.live_leases(owner))
+
     def fetch_leased(
         self,
         lease: PageLease,
-        engine=None,
-        target: Optional[int] = None,
-        traffic_class: TrafficClass = TrafficClass.LATENCY,
-        deadline: Optional[float] = None,
-        tenant: Optional[str] = None,
+        *,
+        spec: Optional[FetchSpec] = None,
+        engine: Any = _UNSET,
+        target: Any = _UNSET,
+        traffic_class: Any = _UNSET,
+        deadline: Any = _UNSET,
+        tenant: Any = _UNSET,
+        step: Any = _UNSET,
     ) -> Tuple[object, float]:
         """Consumer-side half of the handoff: move the leased pages to
         ``target`` through ``engine`` (defaults: the store's own — the
@@ -588,17 +677,35 @@ class TieredKVStore:
         the handoff contends in the consumer's arbitration hierarchy
         exactly like a prefix-cache hit. The lease itself keeps the
         pages pinned, so no per-transfer pin/unpin is needed. Returns
-        ``(task, staging seconds)``."""
+        ``(task, staging seconds)``.
+
+        Routing/QoS parameters are keyword-only and may come bundled as
+        ``spec=FetchSpec(...)`` — the batching loop builds one spec per
+        sequence; mixing a spec with a loose kwarg is a ``TypeError``
+        naming the offending kwarg. Every wire byte moved is attributed
+        to the lease (``lease.bytes_fetched``/``lease.fetches``)."""
         if lease.released:
             raise ValueError("fetch on a released lease")
-        return self.tiers.fetch(
-            lease.pages,
-            traffic_class=traffic_class,
-            deadline=deadline,
-            tenant=lease.owner if tenant is None else tenant,
-            engine=engine,
-            target=target,
+        p = _merge_spec(
+            "fetch_leased", spec, engine=engine, target=target,
+            traffic_class=traffic_class, deadline=deadline, tenant=tenant,
+            step=step,
         )
+        task, staged_s = self.tiers.fetch(
+            lease.pages,
+            traffic_class=(
+                p["traffic_class"] if p["traffic_class"] is not None
+                else TrafficClass.LATENCY
+            ),
+            deadline=p["deadline"],
+            tenant=lease.owner if p["tenant"] is None else p["tenant"],
+            engine=p["engine"],
+            target=p["target"],
+            step=p["step"],
+        )
+        lease.bytes_fetched += task.nbytes
+        lease.fetches += 1
+        return task, staged_s
 
     def estimate_lease_floor_seconds(self, lease: PageLease) -> float:
         """Backlog-independent staging floor for fetching the leased
@@ -719,6 +826,13 @@ class TieredKVStore:
                 "frees": self.tiers.pinned.frees,
             },
             "live_leases": len(self._leases),
+            "lease_bytes_by_owner": self._lease_bytes_map(),
             "bytes_by_owner": dict(self.tiers.bytes_by_owner),
             **c.as_dict(),
         }
+
+    def _lease_bytes_map(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for ls in self._leases:
+            out[ls.owner] = out.get(ls.owner, 0) + ls.nbytes
+        return out

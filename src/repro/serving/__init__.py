@@ -1,7 +1,9 @@
 """Serving substrate: tiered KV cache + radix prefix store with host
 offload, weight sleep/wake, latency model, functional server, scheduler,
-and prefill/decode disaggregation over the shared store."""
-from ..kvstore import KVHandle, PageLease, TieredKVStore
+continuous-batching decode, and prefill/decode disaggregation over the
+shared store."""
+from ..kvstore import FetchSpec, KVHandle, PageLease, TieredKVStore
+from .batching import BatchSeq, DecodeBatch
 from .disagg import DisaggOrchestrator, DisaggRequest
 from .engine import (
     FunctionalServer,
@@ -17,5 +19,6 @@ from .kv_cache import (
     ssm_state_bytes,
 )
 from .orchestrator import ModelInstance, Orchestrator, ServedRequest
-from .scheduler import DecodeRouter, Request, Scheduler
+from .report import ServingReport, slo_summary
+from .scheduler import ChunkedPrefillPlanner, DecodeRouter, Request, Scheduler
 from .weight_manager import TransferReport, WeightManager

@@ -10,29 +10,35 @@ stages even though their PCIe links are disjoint), wired to one
     out of the shared store through the prefill engine's own links) and
     **publishes** the pages — a THROUGHPUT, deadline-carrying writeback
     through the prefill slice that lands the pages in the pinned tier
-    (``disagg_publish_pinned``), returning a ``KVHandle``;
+    (``disagg_publish_pinned``), returning a ``KVHandle``. With
+    ``disagg_prefill_chunk_tokens > 0`` the suffix is cut into chunks
+    that interleave *fairly* across requests (``ChunkedPrefillPlanner``)
+    and publish incrementally — radix dedup makes republishing the
+    already-landed prefix free — demoted to BACKGROUND whenever the
+    decode batches have no slack to absorb the writeback;
   * a ``DecodeRouter`` (``repro.serving.scheduler``) routes the
-    prefill-complete request to the least-loaded decode engine, after
-    decode-side admission control: a handoff whose *staging floor*
-    (pageable-tier lease bytes at ``kvstore_pageable_gbps``) provably
-    blows the TTFT deadline is rejected before it wastes decode
-    bandwidth;
+    prefill-complete request to the decode engine with the fewest
+    outstanding lease bytes, after decode-side admission control:
+    expired deadlines, a full decode batch whose earliest slot opens too
+    late, and a *staging floor* (pageable-tier lease bytes at
+    ``kvstore_pageable_gbps``) that provably blows the TTFT deadline are
+    all rejected before they waste decode bandwidth;
   * the decode engine exchanges the handle for a ``PageLease``
-    (ref-counted: the pages cannot be evicted while the lease is live,
-    however hard capacity pressure gets) and fetches them as a
-    LATENCY-class, deadline-carrying transfer through **its own**
-    ``PathSelector`` — so KV handoff traffic, prefix-cache promotion,
-    writeback, and everything else in the arbitration hierarchy contend
-    end to end, with tenant attribution on every byte
-    (``TierManager.bytes_by_owner`` splits the wire bill between the
-    prefill and decode engines).
+    (ref-counted: the pages cannot be evicted while the lease is live)
+    and fetches them as a LATENCY-class, deadline-carrying transfer
+    through **its own** ``PathSelector``, tagged with the decode step it
+    feeds (``FetchSpec.step`` -> ``MMAEngine.step_attribution``). The
+    sequence then joins the engine's **continuous decode batch**
+    (``DecodeBatch``): many concurrent sequences per engine, each
+    holding its own lease, joining and leaving at step boundaries with
+    packed token/byte accounting.
 
 This is the serving scenario "Mind the Memory Gap" (arXiv:2503.08311)
 and LIMINAL (arXiv:2507.14397) motivate: decode is bandwidth-bound, so
 the prefill->decode KV handoff must be a first-class, QoS-arbitrated
 flow rather than an implicit cache hit. ``benchmarks/disagg_trace.py``
-replays the kvstore conversation trace through this orchestrator in
-multipath vs single-path mode and gates the TTFT win in CI.
+gates the multipath TTFT win; ``benchmarks/decode_batching.py`` gates
+the continuous-batching tokens/sec win at equal delivered bytes.
 """
 from __future__ import annotations
 
@@ -47,12 +53,13 @@ from ..core import MMAConfig, SimWorld, TrafficClass
 from ..core.engine import MMAEngine
 from ..core.task_launcher import SimBackend
 from ..core.topology import Topology, h20_server
-from ..kvstore import KVHandle, PageLease, TieredKVStore
+from ..kvstore import FetchSpec, KVHandle, PageLease, TieredKVStore
 from ..kvstore.store import _when_done as _after
+from .batching import BatchSeq, DecodeBatch
 from .engine import LatencyModel
 from .kv_cache import kv_bytes_per_token
-from .orchestrator import Orchestrator
-from .scheduler import DecodeRouter
+from .report import ServingReport, slo_summary
+from .scheduler import ChunkedPrefillPlanner, DecodeRouter
 
 OVERHEAD_S = 0.030          # tokenizer/scheduler/sampling constant
 
@@ -76,12 +83,14 @@ class DisaggRequest:
     prefill_start: float = 0.0
     prefill_fetch_s: float = 0.0
     prefix_hit_tokens: int = 0
-    prefill_done: float = 0.0        # publish issued, lane freed
+    prefill_chunks: int = 0          # chunks the suffix was cut into
+    prefill_done: float = 0.0        # final chunk computed, publish issued
     publish_landed: float = 0.0      # all writeback batches on host
     decode_engine: str = ""
     handoff_bytes: int = 0
     handoff_fetch_s: float = 0.0
     first_token_time: float = 0.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
     finish: float = 0.0
 
     @property
@@ -96,21 +105,10 @@ class DisaggRequest:
             return False
         return self.first_token_time <= self.deadline
 
-
-class _DecodeLane:
-    """One decode engine's serving lane: FIFO over admitted handoffs,
-    ``slots`` concurrent requests (fetch + decode both occupy a slot)."""
-
-    def __init__(self, engine: MMAEngine, target: int, slots: int) -> None:
-        self.engine = engine
-        self.target = target
-        self.slots = slots
-        self.busy = 0
-        self.queue: Deque[Tuple[DisaggRequest, PageLease]] = deque()
-
-    @property
-    def load(self) -> int:
-        return self.busy + len(self.queue)
+    def max_token_gap_s(self) -> float:
+        """Largest inter-token decode gap (0 with <2 tokens)."""
+        ts = self.token_times
+        return max((b - a for a, b in zip(ts, ts[1:])), default=0.0)
 
 
 class DisaggOrchestrator:
@@ -120,6 +118,10 @@ class DisaggOrchestrator:
     to direct paths only (``relay_devices=()``), so a handoff fetch uses
     exactly one PCIe link — the same requests, bytes, and store state,
     timed without the paper's multipath aggregation.
+
+    ``continuous_batching=False`` is the decode control arm: the batch
+    holds the same leases but serves exactly one sequence per step
+    round-robin (the one-lease-per-step baseline).
     """
 
     def __init__(
@@ -132,7 +134,9 @@ class DisaggOrchestrator:
         page_tokens: int = 256,
         pinned_bytes: Optional[int] = None,
         pageable_bytes: Optional[int] = None,
-        decode_slots: int = 1,
+        decode_slots: Optional[int] = None,
+        continuous_batching: Optional[bool] = None,
+        prefill_chunk_tokens: Optional[int] = None,
     ) -> None:
         self.model_cfg = model_cfg
         topo = topology or h20_server()
@@ -141,6 +145,19 @@ class DisaggOrchestrator:
             cfg = dataclasses.replace(cfg, relay_devices=())
         self.config = cfg
         self.multipath = multipath
+        # constructor args override the MMAConfig knobs (None = knob)
+        capacity = (
+            decode_slots if decode_slots is not None
+            else cfg.disagg_decode_batch
+        )
+        packed = (
+            continuous_batching if continuous_batching is not None
+            else cfg.disagg_continuous_batching
+        )
+        chunk_tokens = (
+            prefill_chunk_tokens if prefill_chunk_tokens is not None
+            else cfg.disagg_prefill_chunk_tokens
+        )
 
         prefill_devs, decode_devs = self._resolve_slices(topo, cfg)
         self.world = SimWorld()
@@ -170,16 +187,6 @@ class DisaggOrchestrator:
             pinned_bytes=pinned_bytes,
             pageable_bytes=pageable_bytes,
         )
-        self.lanes: Dict[str, _DecodeLane] = {}
-        self.router = DecodeRouter(
-            self.store,
-            load_fn=lambda eng: self.lanes[eng.name].load,
-        )
-        for eng in self.decode_engines:
-            self.lanes[eng.name] = _DecodeLane(
-                eng, eng.devices[0], decode_slots
-            )
-            self.router.add_engine(eng, eng.devices[0])
         # Each slice hosts one tensor-parallel replica of the model: the
         # prefill replica spans the whole prefill slice, each decode
         # replica spans its engine's slice — compute scales with the
@@ -192,8 +199,36 @@ class DisaggOrchestrator:
             model_cfg, use_mma=multipath, kv_dtype_size=kv_dtype_size,
             tp_degree=len(self.decode_engines[0].devices),
         )
+        # One continuous decode batch per decode engine; the router's
+        # default load metric is outstanding lease *bytes* (plus LATENCY
+        # backlog), so a long context weighs its true KV cost.
+        self.batches: Dict[str, DecodeBatch] = {}
+        self._targets: Dict[str, int] = {}
+        self.router = DecodeRouter(self.store)
+        for eng in self.decode_engines:
+            self.batches[eng.name] = DecodeBatch(
+                self.world,
+                step_seconds_fn=self.lm_decode.batched_decode_step_seconds,
+                capacity=capacity, packed=packed, name=eng.name,
+            )
+            self._targets[eng.name] = eng.devices[0]
+            self.router.add_engine(eng, eng.devices[0])
+        # Chunked prefill: one fetch lane + one compute lane. With
+        # chunking off every request is a single suffix-sized chunk and
+        # the fetch lane is held through publish — the pipeline then
+        # serializes exactly like the pre-chunking flow, keeping the
+        # radix index state (and thus delivered bytes) deterministic for
+        # the equal-bytes benchmark invariants. With chunking on, the
+        # fetch lane frees as soon as the prefix fetch lands so several
+        # requests' chunks interleave through the compute lane.
+        self.planner = ChunkedPrefillPlanner(chunk_tokens)
+        self._hold_fetch_lane = chunk_tokens == 0
         self._prefill_queue: Deque[DisaggRequest] = deque()
-        self._prefill_busy = False
+        self._fetch_busy = False
+        self._compute_busy = False
+        # per-request publish bookkeeping: outstanding writeback tasks,
+        # whether the final chunk has published, and its handle
+        self._pub: Dict[DisaggRequest, Dict] = {}
         self.requests: List[DisaggRequest] = []
 
     @staticmethod
@@ -221,9 +256,10 @@ class DisaggOrchestrator:
     # -- serving loop ----------------------------------------------------
     def serve(self, requests: List[DisaggRequest]) -> List[DisaggRequest]:
         """Replay ``requests`` (event-driven on the shared world): every
-        stage — prefix fetch, prefill compute, publish writeback, handoff
-        fetch, decode — overlaps with every other request's stages, so
-        the two engines' flows genuinely contend on the shared fabric."""
+        stage — prefix fetch, chunked prefill compute, publish
+        writeback, handoff fetch, batched decode — overlaps with every
+        other request's stages, so the two engines' flows genuinely
+        contend on the shared fabric."""
         self.requests.extend(requests)
         for req in requests:
             self.world.at(req.arrival, lambda req=req: self._arrive(req))
@@ -234,11 +270,12 @@ class DisaggOrchestrator:
         self._prefill_queue.append(req)
         self._pump_prefill()
 
+    # -- prefill: fetch lane + chunked compute lane ----------------------
     def _pump_prefill(self) -> None:
-        if self._prefill_busy or not self._prefill_queue:
+        if self._fetch_busy or not self._prefill_queue:
             return
         req = self._prefill_queue.popleft()
-        self._prefill_busy = True
+        self._fetch_busy = True
         req.state = "prefill"
         req.prefill_start = self.world.now
         hit, task, _payload, staged_s = self.store.fetch(
@@ -249,45 +286,103 @@ class DisaggOrchestrator:
 
         def fetched() -> None:
             req.prefill_fetch_s = staged_s + (task.elapsed if hit else 0.0)
-            suffix = max(len(req.tokens) - hit, 1)
-            compute_s = self.lm_prefill.prefill_seconds(suffix, kv_context=hit)
-            self.world.after(staged_s + compute_s,
-                             lambda: self._publish(req))
+
+            def staged() -> None:
+                suffix = max(len(req.tokens) - hit, 1)
+                req.prefill_chunks = self.planner.add(req, suffix)
+                if not self._hold_fetch_lane:
+                    self._fetch_busy = False
+                    self._pump_prefill()
+                self._pump_chunks()
+
+            self.world.after(staged_s, staged)
 
         if task is None:
             fetched()
         else:
             _after(task, fetched)
 
-    def _publish(self, req: DisaggRequest) -> None:
-        """Prefill compute done: write the KV pages back to the shared
-        store (dedup — a shared prefix republishes for free) and free
-        the prefill lane. The handoff starts once every writeback batch
-        has landed on the host."""
-        req.prefill_done = self.world.now
+    def _pump_chunks(self) -> None:
+        if self._compute_busy:
+            return
+        chunk = self.planner.next_chunk()
+        if chunk is None:
+            return
+        self._compute_busy = True
+        req = chunk["req"]
+        # this chunk attends over the prefix hit plus every suffix token
+        # already prefilled in earlier chunks
+        compute_s = self.lm_prefill.prefill_seconds(
+            chunk["n_tokens"],
+            kv_context=req.prefix_hit_tokens + chunk["done_before"],
+        )
+        self.world.after(compute_s, lambda: self._chunk_done(req, chunk))
+
+    def _chunk_done(self, req: DisaggRequest, chunk: Dict) -> None:
+        """One chunk's KV is computed: publish it to the shared store.
+        Intermediate chunks publish their page-aligned prefix so far
+        (radix dedup makes the already-landed part free); the final
+        chunk publishes the whole prompt and releases the request toward
+        handoff once every writeback batch lands. Chunk writebacks are
+        THROUGHPUT while the decode batches have slack to absorb them,
+        BACKGROUND otherwise — streaming a long context must not starve
+        the running decode batch."""
+        is_last = chunk["is_last"]
+        n_done = req.prefix_hit_tokens + chunk["done_before"] \
+            + chunk["n_tokens"]
+        tokens = req.tokens if is_last else req.tokens[:n_done]
+        traffic_class = (
+            TrafficClass.THROUGHPUT if self._decode_slack() > 0
+            else TrafficClass.BACKGROUND
+        )
         handle, tasks = self.store.publish(
-            req.tokens, tenant=req.tenant,
-            traffic_class=TrafficClass.THROUGHPUT,
+            tokens, tenant=req.tenant,
+            traffic_class=traffic_class,
             deadline=self._handoff_deadline(req),
         )
-        self._prefill_busy = False
-        self._pump_prefill()
-        left = {"n": len(tasks)}
+        state = self._pub.setdefault(
+            req, {"left": 0, "final": False, "handle": None, "sent": False}
+        )
+        state["left"] += len(tasks)
+        if is_last:
+            req.prefill_done = self.world.now
+            state["final"] = True
+            state["handle"] = handle
+            if self._hold_fetch_lane:
+                self._fetch_busy = False
+                self._pump_prefill()
 
         def one_landed() -> None:
-            left["n"] -= 1
-            if left["n"] == 0:
-                req.publish_landed = self.world.now
-                self._handoff(req, handle)
+            state["left"] -= 1
+            self._maybe_handoff(req, state)
 
         for t in tasks:
             _after(t, one_landed)
+        self._compute_busy = False
+        self._pump_chunks()
+        if is_last and not tasks:
+            # fully deduped final publish: nothing left to land
+            self._maybe_handoff(req, state)
+
+    def _maybe_handoff(self, req: DisaggRequest, state: Dict) -> None:
+        if not state["final"] or state["left"] > 0 or state["sent"]:
+            return
+        state["sent"] = True
+        del self._pub[req]
+        req.publish_landed = self.world.now
+        self._handoff(req, state["handle"])
 
     def _handoff_deadline(self, req: DisaggRequest) -> float:
         if req.deadline is not None:
             return req.deadline
         return req.arrival + self.config.disagg_handoff_budget_s
 
+    def _decode_slack(self) -> int:
+        """Free decode-batch slots across all engines — the signal that
+        chunked-prefill writebacks may ride THROUGHPUT class."""
+        return sum(b.slack() for b in self.batches.values())
+
+    # -- decode: admission, leased fetch, batched steps -------------------
     def _handoff(self, req: DisaggRequest, handle: Optional[KVHandle]) -> None:
         """Route the prefill-complete request to a decode engine. The
         decode side reads through a lease, so from this moment until the
@@ -298,8 +393,13 @@ class DisaggOrchestrator:
             self.store.acquire_lease_by_key(handle.key, owner="")
             if handle is not None else None
         )
+        entry = self.router.route()
+        engine = entry["engine"]
+        batch = self.batches[engine.name]
         reason = self.router.admission_reason(
-            lease, self.world.now, req.deadline
+            lease, self.world.now, req.deadline,
+            occupancy=batch.occupancy,
+            wait_estimate_s=batch.estimated_wait_s(),
         )
         if reason is not None:
             if lease is not None:
@@ -307,96 +407,114 @@ class DisaggOrchestrator:
             req.state = "rejected"
             req.reject_reason = reason
             return
-        entry = self.router.route()
-        lane = self.lanes[entry["engine"].name]
-        req.decode_engine = entry["engine"].name
+        req.decode_engine = engine.name
         if lease is not None:
-            lease.owner = entry["engine"].name
-        lane.queue.append((req, lease))
-        self._pump_decode(lane)
+            lease.owner = engine.name
+        self._fetch_then_join(engine, entry["target"], batch, req, lease)
 
-    def _pump_decode(self, lane: _DecodeLane) -> None:
-        while lane.busy < lane.slots and lane.queue:
-            req, lease = lane.queue.popleft()
-            lane.busy += 1
-            self._start_decode(lane, req, lease)
-
-    def _start_decode(
-        self, lane: _DecodeLane, req: DisaggRequest,
-        lease: Optional[PageLease],
+    def _fetch_then_join(
+        self, engine: MMAEngine, target: int, batch: DecodeBatch,
+        req: DisaggRequest, lease: Optional[PageLease],
     ) -> None:
         req.state = "decoding"
-        t_fetch = self.world.now
         if lease is not None:
             task, staged_s = self.store.fetch_leased(
-                lease, engine=lane.engine, target=lane.target,
-                traffic_class=TrafficClass.LATENCY,
-                deadline=self._handoff_deadline(req),
-                tenant=req.tenant,
+                lease,
+                spec=FetchSpec(
+                    engine=engine, target=target,
+                    traffic_class=TrafficClass.LATENCY,
+                    deadline=self._handoff_deadline(req),
+                    tenant=req.tenant,
+                    step=batch.step_index,
+                ),
             )
             req.handoff_bytes = task.nbytes
         else:
             # sub-page prompt: nothing page-aligned was published; the
             # raw KV moves engine-to-engine as one direct transfer
             nbytes = len(req.tokens) * self.store.bytes_per_token
-            task = lane.engine.memcpy(
-                nbytes, device=lane.target,
+            task = engine.memcpy(
+                nbytes, device=target,
                 traffic_class=TrafficClass.LATENCY,
                 deadline=self._handoff_deadline(req), tenant=req.tenant,
+                step=batch.step_index,
             )
             staged_s = 0.0
             req.handoff_bytes = nbytes
 
         def fetched() -> None:
             req.handoff_fetch_s = task.elapsed + staged_s
-            step_s = self.lm_decode.decode_step_seconds()
-
-            def first_token() -> None:
-                req.first_token_time = self.world.now
-
-            def done() -> None:
-                req.state = "done"
-                req.finish = self.world.now
-                if lease is not None:
-                    self.store.release_lease(lease)
-                lane.busy -= 1
-                self._pump_decode(lane)
-
-            self.world.after(staged_s + step_s + OVERHEAD_S, first_token)
-            self.world.after(
-                staged_s + OVERHEAD_S + step_s * max(req.new_tokens, 1),
-                done,
+            seq = BatchSeq(
+                context_tokens=len(req.tokens),
+                new_tokens=max(req.new_tokens, 1),
+                tenant=req.tenant,
+                lease=lease,
+                on_token=lambda s: self._on_token(req, s),
+                on_done=lambda s: self._on_done(req, s),
             )
+            self.world.after(staged_s, lambda: batch.admit(seq))
 
         _after(task, fetched)
+
+    def _on_token(self, req: DisaggRequest, seq: BatchSeq) -> None:
+        now = self.world.now
+        req.token_times.append(now)
+        if seq.emitted == 1:
+            req.first_token_time = now + OVERHEAD_S
+
+    def _on_done(self, req: DisaggRequest, seq: BatchSeq) -> None:
+        # the sequence has left the batch; the request finishes (and its
+        # lease releases) after the sampling/detokenize tail, during
+        # which the KV is still resident — so the router's lease-byte
+        # load metric sees the engine as busy until the request truly
+        # lets go of its pages
+        def finish() -> None:
+            req.state = "done"
+            req.finish = self.world.now
+            if seq.lease is not None:
+                self.store.release_lease(seq.lease)
+
+        self.world.after(OVERHEAD_S, finish)
 
     # -- observability ---------------------------------------------------
     def delivered_bytes(self) -> int:
         """Bytes handed to every engine (fallback copies included) —
-        the equal-work invariant the benchmark asserts across arms."""
+        the equal-work invariant the benchmarks assert across arms."""
         engines = [self.prefill_engine] + self.decode_engines
         return sum(e.stats.bytes_total for e in engines)
 
-    def report(self) -> Dict:
-        """Cross-engine observability: per-engine wire bytes and tenant
+    def report(self) -> ServingReport:
+        """Cross-engine observability as one typed ``ServingReport``:
+        per-engine wire bytes with tenant and per-decode-step
         attribution, store tier/ownership stats, admission rejections,
-        and per-tenant SLO rows over the completed requests."""
+        per-engine continuous-batching stats, and per-tenant SLO rows
+        over the completed requests."""
         done = [r for r in self.requests if r.state == "done"]
         by_state: Dict[str, int] = {}
         for r in self.requests:
             by_state[r.state] = by_state.get(r.state, 0) + 1
-        engines = {}
+        engines: Dict[str, Dict] = {}
+        tenants: Dict[str, Dict] = {}
         for eng in [self.prefill_engine] + self.decode_engines:
             engines[eng.name] = {
                 "devices": list(eng.devices),
                 "bytes_total": eng.stats.bytes_total,
                 "transfers": eng.stats.transfers,
                 "by_tenant": eng.tenant_bytes(),
+                "by_step": eng.step_attribution(),
             }
-        return {
-            "requests": by_state,
-            "engines": engines,
-            "store": self.store.stats(),
-            "rejections": dict(self.router.rejections),
-            "slo": Orchestrator.slo_report(done) if done else {},
-        }
+            for tenant, nbytes in eng.tenant_bytes().items():
+                row = tenants.setdefault(tenant, {"engine_bytes": 0})
+                row["engine_bytes"] += nbytes
+        return ServingReport(
+            slo=slo_summary(done) if done else {},
+            kv=self.store.stats(),
+            tenants=tenants,
+            engines=engines,
+            requests=by_state,
+            rejections=dict(self.router.rejections),
+            batching={
+                name: batch.report()
+                for name, batch in self.batches.items()
+            },
+        )

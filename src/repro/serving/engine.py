@@ -123,6 +123,22 @@ class LatencyModel:
         bytes_read = 2 * self.cfg.param_count()
         return bytes_read / (H20_HBM_GBPS * DECODE_EFF * self.tp)
 
+    def batched_decode_step_seconds(
+        self, batch: int, context_tokens_total: int = 0
+    ) -> float:
+        """One packed continuous-batching step: the weight read is paid
+        once for the whole batch, the KV read scales with the *sum* of
+        the served sequences' true context lengths (packed, not
+        ``batch x max``). ``batched_decode_step_seconds(1, 0)`` equals
+        ``decode_step_seconds()``."""
+        if batch <= 0:
+            return 0.0
+        bytes_read = 2 * self.cfg.param_count() \
+            + context_tokens_total * kv_bytes_per_token(
+                self.cfg, self.kv_dtype_size
+            )
+        return bytes_read / (H20_HBM_GBPS * DECODE_EFF * self.tp)
+
     # -- end-to-end metrics -------------------------------------------------
     def ttft(self, context_tokens: int, suffix_tokens: int = 128) -> TTFTBreakdown:
         """Prefix-cache hit of ``context_tokens``: fetch the cached KV,

@@ -29,6 +29,7 @@ from ..core.topology import h20_server
 from ..kvstore import TieredKVStore
 from .engine import LatencyModel
 from .kv_cache import kv_bytes_per_token
+from .report import ServingReport, slo_summary, warn_deprecated
 
 
 @dataclasses.dataclass
@@ -284,7 +285,23 @@ class Orchestrator:
         return requests
 
     # ------------------------------------------------------------------
-    def kv_report(self) -> Dict[str, Dict]:
+    def report(
+        self, requests: Optional[List[ServedRequest]] = None
+    ) -> ServingReport:
+        """The one observability surface: a typed ``ServingReport`` with
+        per-tenant SLO rows (when a served-request list is given),
+        per-model tiered KV stats with a cross-model aggregate, the
+        tenant arbitration section (engine bytes/rates, configured
+        shares, cooperative preemptions), and per-engine wire stats when
+        ``track_kv`` keeps a persistent engine."""
+        return ServingReport(
+            slo=slo_summary(requests) if requests else {},
+            kv=self._kv_section(),
+            tenants=self._tenant_section(requests),
+            engines=self._engine_section(),
+        )
+
+    def _kv_section(self) -> Dict[str, Dict]:
         """Per-model tiered KV stats plus a cross-model aggregate of
         per-tier hits and hit bytes (the §5.2.1 observability surface:
         how much TTFT-critical traffic each residency tier absorbed)."""
@@ -301,7 +318,7 @@ class Orchestrator:
         report["aggregate"] = {"hits": agg_hits, "hit_bytes": agg_bytes}
         return report
 
-    def tenant_report(
+    def _tenant_section(
         self, requests: Optional[List[ServedRequest]] = None
     ) -> Dict[str, Dict]:
         """Per-tenant observability for hierarchical class->tenant
@@ -313,7 +330,7 @@ class Orchestrator:
         preemption count."""
         tenants: Dict[str, Dict] = {}
         if requests:
-            for tenant, row in self.slo_report(requests).items():
+            for tenant, row in slo_summary(requests).items():
                 tenants.setdefault(tenant, {}).update(row)
         preempted = 0
         shares = None
@@ -332,26 +349,39 @@ class Orchestrator:
             "preempted_chunks": preempted,
         }
 
+    def _engine_section(self) -> Dict[str, Dict]:
+        if not self.track_kv:
+            return {}
+        eng = self.kv_engine
+        return {
+            eng.name: {
+                "devices": list(eng.devices),
+                "bytes_total": eng.stats.bytes_total,
+                "transfers": eng.stats.transfers,
+                "by_tenant": eng.tenant_bytes(),
+                "by_step": eng.step_attribution(),
+            }
+        }
+
+    # -- deprecated delegates (use report()) ---------------------------
+    def kv_report(self) -> Dict[str, Dict]:
+        """Deprecated: use ``report().kv``."""
+        warn_deprecated("Orchestrator.kv_report()", "report().kv")
+        return self._kv_section()
+
+    def tenant_report(
+        self, requests: Optional[List[ServedRequest]] = None
+    ) -> Dict[str, Dict]:
+        """Deprecated: use ``report(requests).tenants``."""
+        warn_deprecated(
+            "Orchestrator.tenant_report()", "report(requests).tenants"
+        )
+        return self._tenant_section(requests)
+
     @staticmethod
     def slo_report(requests: List[ServedRequest]) -> Dict[str, Dict]:
-        """Per-tenant SLO summary over served requests: TTFT percentiles
-        and deadline hit rate (hit rate only over deadlined requests)."""
-        import numpy as np
-
-        report: Dict[str, Dict] = {}
-        by_tenant: Dict[str, List[ServedRequest]] = {}
-        for r in requests:
-            by_tenant.setdefault(r.tenant, []).append(r)
-        for tenant, reqs in sorted(by_tenant.items()):
-            ttfts = np.array([r.ttft for r in reqs])
-            deadlined = [r for r in reqs if r.deadline is not None]
-            hits = sum(1 for r in deadlined if r.met_deadline)
-            report[tenant] = {
-                "n": len(reqs),
-                "ttft_p50_s": float(np.percentile(ttfts, 50)),
-                "ttft_p95_s": float(np.percentile(ttfts, 95)),
-                "deadlined": len(deadlined),
-                "hits": hits,
-                "hit_rate": hits / len(deadlined) if deadlined else None,
-            }
-        return report
+        """Deprecated: use ``report(requests).slo``."""
+        warn_deprecated(
+            "Orchestrator.slo_report()", "report(requests).slo"
+        )
+        return slo_summary(requests)

@@ -245,7 +245,7 @@ class Scheduler:
     def tenant_summary(self) -> Dict[str, Dict[str, int]]:
         """Per-tenant request-state counts (waiting/running/preempted/
         done/rejected) — the scheduler-side half of the tenant
-        observability surface (`Orchestrator.tenant_report` is the
+        observability surface (`Orchestrator.report().tenants` is the
         engine-side half)."""
         states = (
             ("waiting", self.waiting),
@@ -270,19 +270,24 @@ class DecodeRouter:
 
     Registered engines each own a GPU slice (``target`` is the device
     leased pages are fetched onto). ``route`` picks the least-loaded
-    engine — by a caller-supplied load probe (e.g. the orchestrator's
-    lane occupancy) or, by default, the engine's queued LATENCY backlog
-    plus pending transfer count, so a handoff never lands behind another
-    engine's fetch storm when an idle slice exists.
+    engine — by a caller-supplied load probe, or by default the engine's
+    **outstanding lease bytes** (what the store is pinning on its
+    behalf: ``TieredKVStore.lease_bytes(owner=engine.name)``) plus its
+    queued LATENCY backlog. Both terms are bytes: an engine holding one
+    64k-context lease is busier than one holding ten 10-token leases,
+    which a lease *count* gets exactly backwards — decode load is KV
+    bytes read per step, not sequences.
 
     Admission mirrors the scheduler's floor-first logic one hop later:
     ``admission_reason`` rejects a handoff whose deadline has already
-    passed (``"expired"``) or whose *staging floor* — the
-    backlog-independent cost of staging the leased pages out of the
-    pageable tier (``TieredKVStore.estimate_lease_floor_seconds``) —
-    provably blows the remaining budget (``"staging_floor"``). Backlog
-    drains; source-tier bandwidth does not, so such a handoff can only
-    waste decode-lane headroom and link bandwidth on a guaranteed miss.
+    passed (``"expired"``), whose target decode batch is full and whose
+    estimated wait for a slot blows the budget (``"batch_full"``), or
+    whose *staging floor* — the backlog-independent cost of staging the
+    leased pages out of the pageable tier
+    (``TieredKVStore.estimate_lease_floor_seconds``) — provably blows
+    the remaining budget (``"staging_floor"``). Backlog drains;
+    source-tier bandwidth does not, so such a handoff can only waste
+    decode-lane headroom and link bandwidth on a guaranteed miss.
     """
 
     def __init__(
@@ -316,11 +321,10 @@ class DecodeRouter:
         backlog = getattr(eng, "backlog_bytes", lambda *a: 0)(
             TrafficClass.LATENCY
         )
-        pending = getattr(
-            getattr(eng, "task_manager", None), "pending_transfers",
-            lambda: 0,
-        )()
-        return backlog + pending
+        lease_bytes = getattr(self.store, "lease_bytes", lambda **kw: 0)(
+            owner=getattr(eng, "name", None)
+        )
+        return backlog + lease_bytes
 
     def route(self) -> Dict:
         """Least-loaded registered engine entry (``{engine, target}``).
@@ -331,20 +335,110 @@ class DecodeRouter:
         return min(self._engines, key=self._load)
 
     def admission_reason(
-        self, lease, now: float, deadline: Optional[float]
+        self,
+        lease,
+        now: float,
+        deadline: Optional[float],
+        *,
+        occupancy: Optional[float] = None,
+        wait_estimate_s: float = 0.0,
     ) -> Optional[str]:
-        """``None`` if the handoff may proceed, else why it must not."""
+        """``None`` if the handoff may proceed, else why it must not.
+
+        ``occupancy``/``wait_estimate_s`` come from the target decode
+        batch (``DecodeBatch.occupancy`` / ``estimated_wait_s``): a full
+        batch whose earliest slot opens after the deadline is rejected
+        as ``"batch_full"`` before its staging cost is even considered —
+        the slot wait is paid first, serially."""
         if deadline is None:
             return None
         reason = None
         if now > deadline:
             reason = "expired"
         elif (
+            occupancy is not None
+            and occupancy >= 1.0
+            and now + wait_estimate_s > deadline
+        ):
+            reason = "batch_full"
+        elif (
             lease is not None
-            and now + self.store.estimate_lease_floor_seconds(lease)
+            and now + wait_estimate_s
+            + self.store.estimate_lease_floor_seconds(lease)
             > deadline
         ):
             reason = "staging_floor"
         if reason is not None:
             self.rejections[reason] = self.rejections.get(reason, 0) + 1
         return reason
+
+
+class ChunkedPrefillPlanner:
+    """Splits each request's prefill suffix into fixed-size token chunks
+    and interleaves chunks *fairly* across requests: the next chunk
+    always goes to the request with the fewest completed chunks (FIFO on
+    ties), so one long context streams into the compute lane's slack
+    instead of head-of-line blocking every prompt behind it (Sarathi /
+    DeepSpeed-FastGen-style chunked prefill).
+
+    ``chunk_tokens=0`` disables chunking without a second code path:
+    every request becomes exactly one chunk of its full suffix, so the
+    unchunked orchestrator flow is the planner's degenerate case.
+    """
+
+    def __init__(self, chunk_tokens: int = 0) -> None:
+        if chunk_tokens < 0:
+            raise ValueError(
+                f"chunk_tokens must be >= 0 (0 = whole-prompt): "
+                f"{chunk_tokens}"
+            )
+        self.chunk_tokens = chunk_tokens
+        self._order = itertools.count()      # FIFO tiebreak
+        # entry: {req, total, done_tokens, done_chunks, order}
+        self._entries: List[Dict] = []
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pending_tokens(self) -> int:
+        return sum(e["total"] - e["done_tokens"] for e in self._entries)
+
+    def add(self, req, suffix_tokens: int) -> int:
+        """Register ``suffix_tokens`` of prefill compute for ``req``.
+        Returns the number of chunks it will take."""
+        if suffix_tokens <= 0:
+            raise ValueError(
+                f"suffix must be positive: {suffix_tokens}"
+            )
+        self._entries.append({
+            "req": req, "total": suffix_tokens,
+            "done_tokens": 0, "done_chunks": 0,
+            "order": next(self._order),
+        })
+        size = self.chunk_tokens or suffix_tokens
+        return -(-suffix_tokens // size)      # ceil div
+
+    def next_chunk(self) -> Optional[Dict]:
+        """Pop the fairest next chunk: ``{req, n_tokens, done_before,
+        is_last}`` where ``done_before`` is the suffix tokens this
+        request already prefilled (its extra attention context on top of
+        the prefix hit). ``None`` when nothing is pending."""
+        if not self._entries:
+            return None
+        entry = min(
+            self._entries,
+            key=lambda e: (e["done_chunks"], e["order"]),
+        )
+        size = self.chunk_tokens or entry["total"]
+        done_before = entry["done_tokens"]
+        n = min(size, entry["total"] - done_before)
+        entry["done_tokens"] += n
+        entry["done_chunks"] += 1
+        is_last = entry["done_tokens"] >= entry["total"]
+        if is_last:
+            self._entries.remove(entry)
+        return {
+            "req": entry["req"], "n_tokens": n,
+            "done_before": done_before, "is_last": is_last,
+        }

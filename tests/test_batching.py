@@ -1,0 +1,569 @@
+"""Continuous-batching decode: DecodeBatch join/leave semantics, packed
+vs padded vs sequential accounting, starvation bounds, byte-based
+DecodeRouter load, the FetchSpec keyword-only store surface, the
+ServingReport migration shims, and chunked prefill end to end."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import MMAConfig, SimWorld, TrafficClass, make_sim_engine
+from repro.kvstore import FetchSpec, TieredKVStore
+from repro.serving import (
+    BatchSeq,
+    ChunkedPrefillPlanner,
+    DecodeBatch,
+    DecodeRouter,
+    DisaggOrchestrator,
+    DisaggRequest,
+    LatencyModel,
+    ServingReport,
+)
+from repro.serving.report import slo_summary
+
+
+def arange(n: int, start: int = 0) -> np.ndarray:
+    return np.arange(start, start + n, dtype=np.int32)
+
+
+def step_fn(batch: int, ctx_total: int) -> float:
+    """Monotone toy step price: fixed weight read + per-KV-token term."""
+    if batch <= 0:
+        return 0.0
+    return 1e-3 + ctx_total * 1e-6
+
+
+def make_batch(capacity=4, packed=True, **kw):
+    world = SimWorld()
+    batch = DecodeBatch(world, step_fn, capacity=capacity, packed=packed,
+                        **kw)
+    return world, batch
+
+
+# ---------------------------------------------------------------------------
+# DecodeBatch: join/leave, packed accounting, conservation
+# ---------------------------------------------------------------------------
+def test_packed_batch_amortizes_the_weight_read():
+    world, batch = make_batch(capacity=4)
+    seqs = [BatchSeq(context_tokens=100, new_tokens=5) for _ in range(4)]
+    for s in seqs:
+        batch.admit(s)
+    world.run()
+    # every sequence served every step: 5 steps total, not 20
+    assert batch.steps == 5
+    assert batch.tokens_emitted == 20
+    assert all(s.done and s.emitted == 5 for s in seqs)
+    assert all(s.joined_step == 0 and s.left_step == 4 for s in seqs)
+
+
+def test_sequential_baseline_pays_per_token():
+    world, batch = make_batch(capacity=4, packed=False)
+    seqs = [BatchSeq(context_tokens=100, new_tokens=5) for _ in range(4)]
+    for s in seqs:
+        batch.admit(s)
+    world.run()
+    # one sequence per step round-robin: a step per token
+    assert batch.steps == 20
+    assert batch.tokens_emitted == 20
+    assert all(s.done for s in seqs)
+
+
+def test_packed_kv_accounting_is_packed_not_padded():
+    world, batch = make_batch(capacity=2)
+    a = BatchSeq(context_tokens=10, new_tokens=2)
+    b = BatchSeq(context_tokens=50, new_tokens=2)
+    batch.admit(a)
+    batch.admit(b)
+    world.run()
+    # step 0 reads 10+50, step 1 reads 11+51 (each emitted token grows
+    # the context by one)
+    assert batch.packed_kv_tokens == 60 + 62
+    # padded would read 2 x max both steps
+    assert batch.padded_kv_tokens == 2 * 50 + 2 * 51
+    # conservation: batch total == sum of per-sequence attribution
+    assert batch.packed_kv_tokens == a.kv_token_steps + b.kv_token_steps
+    assert a.kv_token_steps == 10 + 11
+    assert b.kv_token_steps == 50 + 51
+
+
+def test_join_at_step_boundaries_and_capacity():
+    world, batch = make_batch(capacity=2)
+    a = BatchSeq(context_tokens=10, new_tokens=4)
+    b = BatchSeq(context_tokens=10, new_tokens=4)
+    c = BatchSeq(context_tokens=10, new_tokens=1)
+    batch.admit(a)
+    batch.admit(b)
+    batch.admit(c)          # batch full: waits for a slot
+    assert batch.occupancy == 1.0
+    assert batch.slack() == 0
+    world.run()
+    assert c.joined_step == 4           # joined after a/b left at step 3
+    assert all(s.done for s in (a, b, c))
+    assert batch.peak_active == 2
+
+
+def test_mid_flight_join_is_served_from_next_step():
+    world, batch = make_batch(capacity=4)
+    a = BatchSeq(context_tokens=10, new_tokens=10)
+    batch.admit(a)
+    late = BatchSeq(context_tokens=20, new_tokens=2)
+    world.at(step_fn(1, 10) * 2.5, lambda: batch.admit(late))
+    world.run()
+    assert late.joined_step == 3        # landed mid-step 2, joined step 3
+    assert late.done
+    # conservation still holds under churn
+    assert batch.packed_kv_tokens == a.kv_token_steps + late.kv_token_steps
+
+
+def test_estimated_wait_and_occupancy():
+    world, batch = make_batch(capacity=2)
+    batch.admit(BatchSeq(context_tokens=10, new_tokens=6))
+    assert batch.occupancy == 0.5
+    assert batch.estimated_wait_s() == 0.0      # free slot: join now
+    batch.admit(BatchSeq(context_tokens=10, new_tokens=3))
+    assert batch.occupancy == 1.0
+    assert batch.estimated_wait_s() > 0.0       # must wait for a leaver
+    world.run()
+    assert batch.occupancy == 0.0
+
+
+def test_starvation_bound_packed_vs_sequential():
+    _, packed = make_batch(capacity=4, packed=True)
+    _, seq = make_batch(capacity=4, packed=False)
+    # packed: one full-batch step; sequential: a full round-robin cycle
+    assert packed.starvation_bound_s(100) == pytest.approx(
+        step_fn(4, 400))
+    assert seq.starvation_bound_s(100) == pytest.approx(
+        4 * step_fn(1, 100))
+    assert seq.starvation_bound_s(100) > packed.starvation_bound_s(100)
+
+
+def test_batch_rejects_bad_capacity_and_empty_seq():
+    with pytest.raises(ValueError, match="capacity"):
+        DecodeBatch(SimWorld(), step_fn, capacity=0)
+    _, batch = make_batch()
+    with pytest.raises(ValueError, match="at least one token"):
+        batch.admit(BatchSeq(context_tokens=4, new_tokens=0))
+
+
+def test_batch_report_shape():
+    world, batch = make_batch(capacity=2)
+    batch.admit(BatchSeq(context_tokens=10, new_tokens=3))
+    world.run()
+    rep = batch.report()
+    assert rep["steps"] == 3 and rep["tokens_emitted"] == 3
+    assert rep["tokens_per_sec"] > 0
+    assert rep["packed"] is True and rep["capacity"] == 2
+    assert 0 < rep["mean_occupancy"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# S4: property — byte conservation and starvation bound under arbitrary
+# join/leave orders (hypothesis), plus a deterministic churn fallback
+# ---------------------------------------------------------------------------
+def _run_churn(arrivals, packed=True, capacity=3):
+    """arrivals: list of (arrival_s, context_tokens, new_tokens)."""
+    world = SimWorld()
+    batch = DecodeBatch(world, step_fn, capacity=capacity, packed=packed)
+    seqs = []
+    for at_s, ctx, new in arrivals:
+        s = BatchSeq(context_tokens=ctx, new_tokens=new)
+        seqs.append(s)
+        world.at(at_s, lambda s=s: batch.admit(s))
+    world.run()
+    return batch, seqs
+
+
+def _check_invariants(batch, seqs, arrivals):
+    assert all(s.done for s in seqs)
+    assert batch.tokens_emitted == sum(n for _, _, n in arrivals)
+    # conservation: every packed KV token the batch billed is attributed
+    # to exactly one sequence, and nothing more
+    assert batch.packed_kv_tokens == sum(s.kv_token_steps for s in seqs)
+    # each sequence's own bill: its context grew by one per emitted token
+    for (_, ctx, new), s in zip(arrivals, seqs):
+        assert s.kv_token_steps == sum(range(ctx, ctx + new))
+    # starvation: no resident sequence's inter-token gap exceeds one
+    # worst-case step (packed) while others join/leave around it
+    max_ctx = max(ctx + new for _, ctx, new in arrivals)
+    bound = batch.starvation_bound_s(max_ctx) + 1e-12
+    for s in seqs:
+        assert s.max_gap_s() <= bound
+
+
+def test_churn_conservation_deterministic():
+    arrivals = [
+        (0.0, 10, 4), (0.0005, 300, 1), (0.001, 7, 9),
+        (0.0012, 42, 2), (0.02, 5, 3), (0.02, 80, 6),
+    ]
+    batch, seqs = _run_churn(arrivals, capacity=3)
+    _check_invariants(batch, seqs, arrivals)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        arrivals=st.lists(
+            st.tuples(
+                st.floats(min_value=0.0, max_value=0.05,
+                          allow_nan=False, allow_infinity=False),
+                st.integers(min_value=1, max_value=500),
+                st.integers(min_value=1, max_value=12),
+            ),
+            min_size=1, max_size=12,
+        ),
+        capacity=st.integers(min_value=1, max_value=5),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_property_packed_conservation_and_no_starvation(
+        arrivals, capacity
+    ):
+        batch, seqs = _run_churn(arrivals, capacity=capacity)
+        _check_invariants(batch, seqs, arrivals)
+except ImportError:      # hypothesis is a dev extra; keep tier-1 green
+    pass
+
+
+# ---------------------------------------------------------------------------
+# S3: DecodeRouter load is outstanding lease BYTES, not lease count
+# ---------------------------------------------------------------------------
+def test_router_default_load_weighs_lease_bytes_not_count():
+    cfg = MMAConfig(kvstore_slab_bytes=1024)
+    pe, world, backend = make_sim_engine(
+        config=cfg, devices=[0, 1, 2, 3], name="prefill"
+    )
+    d0, _, _ = make_sim_engine(backend=backend, config=cfg,
+                               devices=[4, 5], name="d0")
+    d1, _, _ = make_sim_engine(backend=backend, config=cfg,
+                               devices=[6, 7], name="d1")
+    store = TieredKVStore(
+        pe, bytes_per_token=1024, page_size=4, config=cfg,
+        target_device=0, pinned_bytes=1 << 22, pageable_bytes=1 << 22,
+    )
+    # d0 holds ONE huge lease; d1 holds TWO tiny ones. A lease-count
+    # metric calls d0 the less-loaded engine — but its outstanding KV
+    # bytes are 100x d1's.
+    h_big, _ = store.publish(arange(1024))
+    h_s1, _ = store.publish(arange(4, start=5000))
+    h_s2, _ = store.publish(arange(4, start=9000))
+    world.run()
+    big = store.acquire_lease_by_key(h_big.key, owner="d0")
+    s1 = store.acquire_lease_by_key(h_s1.key, owner="d1")
+    s2 = store.acquire_lease_by_key(h_s2.key, owner="d1")
+    assert store.lease_bytes(owner="d0") > store.lease_bytes(owner="d1")
+
+    router = DecodeRouter(store)
+    router.add_engine(d0, 4)
+    router.add_engine(d1, 6)
+    assert router.route()["engine"] is d1      # fewest BYTES wins
+    for ls in (big, s1, s2):
+        store.release_lease(ls)
+    # all leases released: tie breaks on registration order
+    assert router.route()["engine"] is d0
+
+
+def test_router_admission_batch_full():
+    cfg = MMAConfig(kvstore_slab_bytes=1024)
+    pe, world, _ = make_sim_engine(config=cfg, devices=[0, 1], name="p")
+    store = TieredKVStore(pe, bytes_per_token=1024, page_size=4,
+                          config=cfg, target_device=0,
+                          pinned_bytes=1 << 20, pageable_bytes=1 << 20)
+    router = DecodeRouter(store)
+    # full batch whose first slot opens after the deadline: rejected
+    # before staging cost is even considered
+    assert router.admission_reason(
+        None, 0.0, deadline=1.0, occupancy=1.0, wait_estimate_s=2.0
+    ) == "batch_full"
+    # slot opens in time: admitted
+    assert router.admission_reason(
+        None, 0.0, deadline=1.0, occupancy=1.0, wait_estimate_s=0.5
+    ) is None
+    # batch not full: the wait estimate alone never rejects
+    assert router.admission_reason(
+        None, 0.0, deadline=1.0, occupancy=0.5, wait_estimate_s=2.0
+    ) is None
+    # best-effort: never rejected
+    assert router.admission_reason(
+        None, 0.0, deadline=None, occupancy=1.0, wait_estimate_s=9.9
+    ) is None
+    assert router.rejections == {"batch_full": 1}
+
+
+# ---------------------------------------------------------------------------
+# S2: FetchSpec unification — keyword-only params, loud TypeErrors
+# ---------------------------------------------------------------------------
+def make_store(**cfg_kw):
+    cfg_kw.setdefault("kvstore_slab_bytes", 1024)
+    cfg = MMAConfig(**cfg_kw)
+    eng, world, backend = make_sim_engine(
+        config=cfg, devices=[0, 1, 2, 3], name="prefill"
+    )
+    de, _, _ = make_sim_engine(backend=backend, config=cfg,
+                               devices=[4, 5, 6, 7], name="decode")
+    store = TieredKVStore(
+        eng, bytes_per_token=1024, page_size=4, config=cfg,
+        target_device=0, pinned_bytes=1 << 20, pageable_bytes=1 << 20,
+    )
+    return store, eng, de, world
+
+
+def test_fetch_is_keyword_only():
+    store, *_ , world = make_store()
+    with pytest.raises(TypeError):
+        store.fetch(arange(8), TrafficClass.LATENCY)     # positional class
+
+
+def test_fetch_spec_carries_all_routing_params():
+    store, pe, de, world = make_store()
+    handle, _ = store.publish(arange(8))
+    world.run()
+    hit, task, _payload, staged = store.fetch(
+        arange(8),
+        spec=FetchSpec(engine=de, target=4, tenant="gold",
+                       traffic_class=TrafficClass.LATENCY, step=7),
+    )
+    world.run()
+    assert hit == 8
+    assert task.tenant == "gold" and task.step == 7
+    assert de.stats.bytes_total == 8 * 1024     # rode the decode engine
+    assert de.step_attribution()[7]["bytes"] == 8 * 1024
+
+
+def test_fetch_rejects_spec_plus_loose_kwarg():
+    store, *_ = make_store()
+    with pytest.raises(TypeError, match="'tenant'"):
+        store.fetch(arange(4), spec=FetchSpec(), tenant="gold")
+    with pytest.raises(TypeError, match="'deadline'"):
+        store.fetch(arange(4), spec=FetchSpec(), deadline=1.0)
+    with pytest.raises(TypeError, match="must be a FetchSpec"):
+        store.fetch(arange(4), spec={"tenant": "gold"})
+
+
+def test_fetch_leased_spec_and_lease_byte_attribution():
+    store, pe, de, world = make_store()
+    handle, _ = store.publish(arange(8))
+    world.run()
+    lease = store.acquire_lease_by_key(handle.key, owner="decode")
+    with pytest.raises(TypeError, match="'engine'"):
+        store.fetch_leased(lease, spec=FetchSpec(engine=de), engine=de)
+    task, staged = store.fetch_leased(
+        lease, spec=FetchSpec(engine=de, target=4, step=3),
+    )
+    world.run()
+    assert lease.fetches == 1
+    assert lease.bytes_fetched == handle.nbytes
+    assert task.step == 3
+    # per-owner lease bytes surface in stats()
+    assert store.stats()["lease_bytes_by_owner"] == {
+        "decode": handle.nbytes
+    }
+    store.release_lease(lease)
+
+
+def test_acquire_lease_is_keyword_only():
+    store, *_ = make_store()
+    with pytest.raises(TypeError):
+        store.acquire_lease(arange(4))          # positional tokens
+    with pytest.raises(ValueError, match="tokens XOR key"):
+        store.acquire_lease()
+
+
+# ---------------------------------------------------------------------------
+# S1: ServingReport + deprecated delegates
+# ---------------------------------------------------------------------------
+def make_orch():
+    from repro.serving import Orchestrator, ServedRequest
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    orch = Orchestrator({"m": cfg}, gpu_budget_bytes=1 << 40,
+                        track_kv=True, kv_page_tokens=8)
+    reqs = [
+        ServedRequest(model="m", arrival=0.0, tokens=arange(32),
+                      tenant="gold", deadline=500.0),
+        ServedRequest(model="m", arrival=1.0, tokens=arange(32),
+                      tenant="bronze"),
+    ]
+    orch.serve(reqs)
+    return orch, reqs
+
+
+def test_orchestrator_report_is_typed_and_sectioned():
+    orch, reqs = make_orch()
+    rep = orch.report(reqs)
+    assert isinstance(rep, ServingReport)
+    assert set(rep.slo) == {"gold", "bronze"}
+    assert "m" in rep.kv and "aggregate" in rep.kv
+    assert set(rep.tenants["tenants"]) >= {"gold", "bronze"}
+    eng_name = orch.kv_engine.name
+    assert rep.engines[eng_name]["bytes_total"] > 0
+    # disagg-only sections stay empty on the multi-model path
+    assert rep.requests == {} and rep.batching == {}
+    d = rep.as_dict()
+    assert d["slo"] == rep.slo and d["kv"] == rep.kv
+
+
+def test_deprecated_report_shims_warn_and_delegate():
+    orch, reqs = make_orch()
+    rep = orch.report(reqs)
+    with pytest.warns(DeprecationWarning, match=r"^repro\..*report\(\)\.kv"):
+        legacy_kv = orch.kv_report()
+    assert legacy_kv == rep.kv
+    with pytest.warns(DeprecationWarning, match=r"^repro\."):
+        legacy_tenants = orch.tenant_report(reqs)
+    assert legacy_tenants == rep.tenants
+    with pytest.warns(DeprecationWarning, match=r"^repro\."):
+        legacy_slo = type(orch).slo_report(reqs)
+    assert legacy_slo == rep.slo
+    assert legacy_slo == slo_summary(reqs)
+
+
+# ---------------------------------------------------------------------------
+# ChunkedPrefillPlanner
+# ---------------------------------------------------------------------------
+def test_planner_fair_interleave_fewest_chunks_first():
+    pl = ChunkedPrefillPlanner(chunk_tokens=10)
+    assert pl.add("long", 35) == 4
+    assert pl.add("short", 12) == 2
+    order = []
+    while True:
+        c = pl.next_chunk()
+        if c is None:
+            break
+        order.append((c["req"], c["n_tokens"], c["is_last"]))
+    # strict alternation while both have chunks pending (FIFO ties),
+    # then the long one drains
+    assert order == [
+        ("long", 10, False), ("short", 10, False),
+        ("long", 10, False), ("short", 2, True),
+        ("long", 10, False), ("long", 5, True),
+    ]
+    assert len(pl) == 0 and pl.pending_tokens == 0
+
+
+def test_planner_zero_chunk_is_whole_prompt():
+    pl = ChunkedPrefillPlanner(chunk_tokens=0)
+    assert pl.add("r", 1234) == 1
+    c = pl.next_chunk()
+    assert c["n_tokens"] == 1234 and c["is_last"]
+    assert c["done_before"] == 0
+    assert pl.next_chunk() is None
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ChunkedPrefillPlanner(chunk_tokens=-1)
+    with pytest.raises(ValueError, match="suffix"):
+        pl.add("r", 0)
+
+
+# ---------------------------------------------------------------------------
+# LatencyModel: batched decode step price
+# ---------------------------------------------------------------------------
+def test_batched_step_price_amortizes_weights():
+    lm = LatencyModel(get_config("tinyllama-1.1b"), tp_degree=4)
+    one = lm.decode_step_seconds()
+    assert lm.batched_decode_step_seconds(1, 0) == pytest.approx(one)
+    assert lm.batched_decode_step_seconds(0) == 0.0
+    # a batch of 8 with KV is far cheaper than 8 single steps
+    batched = lm.batched_decode_step_seconds(8, 8 * 2048)
+    assert batched < 8 * one
+    # and monotone in total KV context
+    assert lm.batched_decode_step_seconds(8, 16 * 2048) > batched
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator end to end: continuous batching + chunked prefill
+# ---------------------------------------------------------------------------
+def small_orch(**kw):
+    cfg = get_config("tinyllama-1.1b").reduced()
+    return DisaggOrchestrator(cfg, page_tokens=8, **kw)
+
+
+def test_disagg_batched_decode_shares_steps():
+    orch = small_orch(decode_slots=4, continuous_batching=True)
+    reqs = [
+        DisaggRequest(tokens=arange(64, start=i * 100), arrival=0.0,
+                      new_tokens=64)
+        for i in range(3)
+    ]
+    orch.serve(reqs)
+    assert all(r.state == "done" for r in reqs)
+    rep = orch.report()
+    bat = rep.batching["decode0"]
+    assert bat["tokens_emitted"] == 192
+    # batching shared steps across concurrent sequences
+    assert bat["steps"] < bat["tokens_emitted"]
+    assert bat["peak_active"] >= 2
+    # every request got per-token timestamps
+    assert all(len(r.token_times) == 64 for r in reqs)
+
+
+def test_disagg_sequential_control_arm_steps_per_token():
+    orch = small_orch(decode_slots=4, continuous_batching=False)
+    reqs = [
+        DisaggRequest(tokens=arange(64, start=i * 100), arrival=0.0,
+                      new_tokens=4)
+        for i in range(2)
+    ]
+    orch.serve(reqs)
+    assert all(r.state == "done" for r in reqs)
+    bat = orch.report().batching["decode0"]
+    assert bat["tokens_emitted"] == 8
+    assert bat["steps"] == 8                # one token per step
+    assert bat["packed"] is False
+
+
+def test_disagg_chunked_prefill_end_to_end():
+    orch = small_orch(prefill_chunk_tokens=16)
+    long = DisaggRequest(tokens=arange(64), arrival=0.0, new_tokens=2)
+    short = DisaggRequest(tokens=arange(16, start=900), arrival=0.0001,
+                          new_tokens=2)
+    orch.serve([long, short])
+    assert long.state == "done" and short.state == "done"
+    assert long.prefill_chunks == 4         # 64 tokens / 16-token chunks
+    assert short.prefill_chunks == 1
+    assert long.handoff_bytes == 64 * orch.store.bytes_per_token
+    assert orch.report().kv["live_leases"] == 0
+
+
+def test_disagg_step_attribution_tags_handoff_fetches():
+    orch = small_orch()
+    reqs = [
+        DisaggRequest(tokens=arange(64, start=i * 100),
+                      arrival=0.01 * i, new_tokens=2)
+        for i in range(2)
+    ]
+    orch.serve(reqs)
+    by_step = orch.report().engines["decode0"]["by_step"]
+    assert sum(rec["bytes"] for rec in by_step.values()) == \
+        sum(r.handoff_bytes for r in reqs)
+    assert sum(rec["transfers"] for rec in by_step.values()) == 2
+
+
+def test_batching_env_knobs_round_trip(monkeypatch):
+    monkeypatch.setenv("MMA_DISAGG_DECODE_BATCH", "16")
+    monkeypatch.setenv("MMA_DISAGG_CONT_BATCH", "0")
+    monkeypatch.setenv("MMA_DISAGG_PREFILL_CHUNK_TOKENS", "512")
+    cfg = MMAConfig.from_env()
+    assert cfg.disagg_decode_batch == 16
+    assert cfg.disagg_continuous_batching is False
+    assert cfg.disagg_prefill_chunk_tokens == 512
+    monkeypatch.setenv("MMA_DISAGG_DECODE_BATCH", "0")
+    with pytest.raises(ValueError, match="MMA_DISAGG_DECODE_BATCH"):
+        MMAConfig.from_env()
+    monkeypatch.setenv("MMA_DISAGG_DECODE_BATCH", "16")
+    monkeypatch.setenv("MMA_DISAGG_PREFILL_CHUNK_TOKENS", "-1")
+    with pytest.raises(ValueError, match="MMA_DISAGG_PREFILL_CHUNK_TOKENS"):
+        MMAConfig.from_env()
+
+
+def test_batching_knobs_flow_from_config():
+    cfg = MMAConfig(disagg_decode_batch=3, disagg_continuous_batching=False,
+                    disagg_prefill_chunk_tokens=32)
+    orch = small_orch(config=cfg)
+    bat = orch.batches["decode0"]
+    assert bat.capacity == 3 and bat.packed is False
+    assert orch.planner.chunk_tokens == 32
+    # constructor args override the knobs
+    orch2 = small_orch(config=cfg, decode_slots=5,
+                       continuous_batching=True, prefill_chunk_tokens=0)
+    bat2 = orch2.batches["decode0"]
+    assert bat2.capacity == 5 and bat2.packed is True
+    assert orch2.planner.chunk_tokens == 0

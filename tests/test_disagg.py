@@ -272,17 +272,21 @@ def test_disagg_serves_and_attributes_both_engines():
     assert all(r.ttft > 0 for r in reqs)
     assert all(r.decode_engine == "decode0" for r in reqs)
     rep = orch.report()
-    assert rep["requests"] == {"done": 2}
+    assert rep.requests == {"done": 2}
     # both engines moved bytes; ownership ledger names them
-    assert rep["engines"]["prefill"]["bytes_total"] > 0
-    assert rep["engines"]["decode0"]["bytes_total"] > 0
-    owners = rep["store"]["bytes_by_owner"]
+    assert rep.engines["prefill"]["bytes_total"] > 0
+    assert rep.engines["decode0"]["bytes_total"] > 0
+    owners = rep.kv["bytes_by_owner"]
     assert set(owners) == {"prefill", "decode0"}
     # tenants attributed on the decode side too
-    assert set(rep["engines"]["decode0"]["by_tenant"]) == {"gold", "silver"}
+    assert set(rep.engines["decode0"]["by_tenant"]) == {"gold", "silver"}
     # all leases released after decode
-    assert rep["store"]["live_leases"] == 0
-    assert set(rep["slo"]) == {"gold", "silver"}
+    assert rep.kv["live_leases"] == 0
+    assert set(rep.slo) == {"gold", "silver"}
+    # every handoff fetch carries its decode-step tag
+    assert rep.engines["decode0"]["by_step"]
+    # the continuous batch served both sequences
+    assert rep.batching["decode0"]["tokens_emitted"] == 4
 
 
 def test_disagg_handoff_fetches_full_context_on_decode_links():
@@ -315,7 +319,7 @@ def test_disagg_rejects_on_decode_staging_floor():
     decode = orch.decode_engines[0]
     assert sum(w.bytes_total for w in decode.workers.values()) == 0
     # and released its lease
-    assert orch.report()["store"]["live_leases"] == 0
+    assert orch.report().kv["live_leases"] == 0
 
 
 def test_disagg_prefix_hits_come_from_shared_store():

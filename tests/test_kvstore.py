@@ -519,7 +519,7 @@ def test_orchestrator_kv_report_and_shared_hits():
     assert done[0].hit_tokens == 0
     assert done[1].hit_tokens == 32                   # cross-tenant hit
     assert done[1].fetch_s >= 0.0
-    rep = orch.kv_report()
+    rep = orch.report().kv
     assert "m" in rep and "aggregate" in rep
     assert sum(rep["aggregate"]["hits"].values()) > 0
     assert rep["m"]["tier_bytes"]["pinned"] > 0

@@ -398,7 +398,8 @@ def test_weight_manager_wake_deadline_passthrough():
 
 
 def test_orchestrator_slo_report_per_tenant():
-    from repro.serving.orchestrator import Orchestrator, ServedRequest
+    from repro.serving.orchestrator import ServedRequest
+    from repro.serving.report import slo_summary
 
     reqs = [
         ServedRequest(model="m", arrival=0.0, tenant="gold", deadline=10.0,
@@ -408,7 +409,7 @@ def test_orchestrator_slo_report_per_tenant():
         ServedRequest(model="m", arrival=0.0, tenant="batch",
                       start=0.0, compute_s=1.0),
     ]
-    rep = Orchestrator.slo_report(reqs)
+    rep = slo_summary(reqs)
     assert rep["gold"]["deadlined"] == 2 and rep["gold"]["hits"] == 1
     assert rep["gold"]["hit_rate"] == 0.5
     assert rep["batch"]["hit_rate"] is None

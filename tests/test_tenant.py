@@ -438,7 +438,7 @@ def test_orchestrator_tenant_report():
                       tenant="bronze"),
     ]
     orch.serve(reqs)
-    report = orch.tenant_report(reqs)
+    report = orch.report(reqs).tenants
     assert set(report["tenants"]) >= {"gold", "bronze"}
     gold = report["tenants"]["gold"]
     assert gold["n"] == 2
