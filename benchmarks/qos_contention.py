@@ -15,7 +15,13 @@ bytes moved either way.
 A BACKGROUND-class offload rides along to show weighted-fair sharing of
 the leftover bandwidth between THROUGHPUT and BACKGROUND.
 """
-from repro.core import Direction, MMAConfig, SimWorld, TrafficClass
+from repro.core import (
+    Direction,
+    MMAConfig,
+    SimWorld,
+    TrafficClass,
+    TransferSpec,
+)
 from repro.core.config import GB, MB
 from repro.core.engine import MMAEngine
 from repro.core.task_launcher import SimBackend
@@ -39,18 +45,18 @@ def _scenario(qos_enabled: bool):
 
     wake = eng.memcpy(
         WAKE_BYTES, device=1, direction=Direction.H2D,
-        traffic_class=TrafficClass.THROUGHPUT,
+        spec=TransferSpec(traffic_class=TrafficClass.THROUGHPUT),
     )
     offload = eng.memcpy(
         OFFLOAD_BYTES, device=2, direction=Direction.D2H,
-        traffic_class=TrafficClass.BACKGROUND,
+        spec=TransferSpec(traffic_class=TrafficClass.BACKGROUND),
     )
     holder = {}
 
     def start_fetch() -> None:
         holder["fetch"] = eng.memcpy(
             FETCH_BYTES, device=0, direction=Direction.H2D,
-            traffic_class=TrafficClass.LATENCY,
+            spec=TransferSpec(traffic_class=TrafficClass.LATENCY),
         )
 
     world.at(FETCH_ARRIVAL_S, start_fetch)

@@ -41,6 +41,7 @@ MODULES = [
     ("tenant", "tenant_isolation"),
     ("disagg", "disagg_trace"),
     ("decode", "decode_batching"),
+    ("adapt", "adaptive_paths"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),

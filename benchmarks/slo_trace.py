@@ -31,7 +31,13 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core import Direction, MMAConfig, SimWorld, TrafficClass
+from repro.core import (
+    Direction,
+    MMAConfig,
+    SimWorld,
+    TrafficClass,
+    TransferSpec,
+)
 from repro.core.config import GB, MB
 from repro.core.engine import MMAEngine
 from repro.core.task_launcher import SimBackend
@@ -139,8 +145,10 @@ def replay(events: List[TraceEvent], slo: bool) -> Dict:
         ev.submitted_at = world.now
         ev.task = eng.memcpy(
             ev.nbytes, device=ev.dest, direction=ev.direction,
-            traffic_class=ev.traffic_class,
-            deadline=deadline if slo else None,
+            spec=TransferSpec(
+                traffic_class=ev.traffic_class,
+                deadline=deadline if slo else None,
+            ),
         )
 
     def arrive(ev: TraceEvent) -> None:

@@ -28,7 +28,13 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import Direction, MMAConfig, SimWorld, TrafficClass
+from repro.core import (
+    Direction,
+    MMAConfig,
+    SimWorld,
+    TrafficClass,
+    TransferSpec,
+)
 from repro.core.config import GB, MB
 from repro.core.engine import MMAEngine
 from repro.core.task_launcher import SimBackend
@@ -117,7 +123,9 @@ def replay(events: List[TraceEvent], hierarchical: bool) -> Dict:
     def submit(ev: TraceEvent) -> None:
         ev.task = eng.memcpy(
             ev.nbytes, device=ev.dest, direction=ev.direction,
-            traffic_class=ev.traffic_class, tenant=ev.tenant,
+            spec=TransferSpec(
+                traffic_class=ev.traffic_class, tenant=ev.tenant,
+            ),
         )
 
     for ev in events:

@@ -27,6 +27,7 @@ from .transfer_task import (
     TaskState,
     TenantArbiter,
     TrafficClass,
+    TransferSpec,
     TransferTask,
     WFQTenantArbiter,
 )
@@ -43,5 +44,6 @@ __all__ = [
     "Backend", "SimBackend",
     "Device", "Topology", "h20_server", "tpu_host",
     "Direction", "MicroTask", "MicroTaskQueue", "TaskManager", "TaskState",
-    "TenantArbiter", "TrafficClass", "TransferTask", "WFQTenantArbiter",
+    "TenantArbiter", "TrafficClass", "TransferSpec", "TransferTask",
+    "WFQTenantArbiter",
 ]

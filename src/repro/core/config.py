@@ -270,6 +270,47 @@ class MMAConfig:
     # 0 = whole-prompt prefill (one request monopolizes the prefill
     # engine until its prompt completes).
     disagg_prefill_chunk_tokens: int = 0
+    # ---- Online topology adaptation -------------------------------------
+    # The per-link EWMA bandwidth/latency estimators are always on (pure
+    # observability, exposed via MMAEngine.link_estimates()); these knobs
+    # gate the *behavioral* responses. All default off so the calibrated
+    # static-weight planner stays byte-for-byte unchanged.
+    #
+    # Mid-transfer re-planning: when a link's estimated rate drifts below
+    # adapt_hysteresis x the rate it was last planned at, its queued
+    # not-yet-on-the-wire chunks are recalled and re-queued so healthier
+    # links pick them up (loss-free, same cooperative-recall machinery as
+    # tenant preemption).
+    adapt_replan: bool = False
+    # Drift band: re-plan fires when est/planned < adapt_hysteresis, and
+    # the plan anchor re-snaps on recovery when est/planned > 1/hysteresis.
+    adapt_hysteresis: float = 0.6
+    # Estimate-proportional link weighting: a link's outstanding-queue
+    # depth scales with est_rate/best_fleet_rate, so a degraded link sheds
+    # pulls entirely (it still probes — see adapt_probe_s — so the
+    # estimate can recover when the degradation lifts).
+    adapt_link_weighting: bool = False
+    # Congestion-adaptive chunk sizing: while fleet health (best observed
+    # service / EWMA service) sits below adapt_hysteresis, new transfers
+    # split into proportionally smaller chunks so slow links tie up less
+    # work per pull; clamped to [adapt_chunk_min_bytes, chunk_bytes].
+    adapt_chunk_scaling: bool = False
+    adapt_chunk_min_bytes: int = 1 * MB
+    # Deadline-aware relay placement: relays pick the destination with the
+    # earliest queued deadline, and a worker declines a steal whose
+    # predicted completion (outstanding+1 chunks at the estimated rate)
+    # blows that deadline while a faster worker has spare capacity.
+    adapt_deadline_relay: bool = False
+    # Estimator trust threshold: adaptation ignores a link's estimate
+    # until it has absorbed this many chunk samples.
+    adapt_min_samples: int = 3
+    # Probe interval: a fully shed link may still pull one chunk when its
+    # estimate is older than this, so shedding is never permanent and the
+    # selector stays live even when every link looks degraded. Kept
+    # deliberately coarse: every probe chunk rides the degraded link, so
+    # probing at the chunk cadence would re-inflict the tail latency the
+    # shed just avoided.
+    adapt_probe_s: float = 0.25
 
     def class_only(self) -> "MMAConfig":
         """Copy with the deadline machinery disabled (PR-1 class-only
@@ -279,6 +320,18 @@ class MMAConfig:
             qos_deadline_edf=False,
             qos_deadline_escalate=False,
             qos_background_pause=False,
+        )
+
+    def adaptive(self) -> "MMAConfig":
+        """Copy with every online-adaptation response enabled — the
+        adaptive arm of ``benchmarks/adaptive_paths.py`` (the default
+        config is the static-weight control arm)."""
+        return dataclasses.replace(
+            self,
+            adapt_replan=True,
+            adapt_link_weighting=True,
+            adapt_chunk_scaling=True,
+            adapt_deadline_relay=True,
         )
 
     def class_weight(self, cls) -> float:
@@ -456,6 +509,38 @@ class MMAConfig:
             raise ValueError(
                 "MMA_DISAGG_PREFILL_CHUNK_TOKENS must be >= 0 (0 = off)"
             )
+        cfg.adapt_replan = bool(
+            _env_int("MMA_ADAPT_REPLAN", int(cfg.adapt_replan))
+        )
+        cfg.adapt_hysteresis = _env_float(
+            "MMA_ADAPT_HYSTERESIS", cfg.adapt_hysteresis
+        )
+        if not 0 < cfg.adapt_hysteresis < 1:
+            raise ValueError("MMA_ADAPT_HYSTERESIS must be in (0, 1)")
+        cfg.adapt_link_weighting = bool(
+            _env_int("MMA_ADAPT_WEIGHTING", int(cfg.adapt_link_weighting))
+        )
+        cfg.adapt_chunk_scaling = bool(
+            _env_int("MMA_ADAPT_CHUNK_SCALING", int(cfg.adapt_chunk_scaling))
+        )
+        cfg.adapt_chunk_min_bytes = int(
+            _env_float(
+                "MMA_ADAPT_CHUNK_MIN_MB", cfg.adapt_chunk_min_bytes / MB
+            ) * MB
+        )
+        if cfg.adapt_chunk_min_bytes <= 0:
+            raise ValueError("MMA_ADAPT_CHUNK_MIN_MB must be positive")
+        cfg.adapt_deadline_relay = bool(
+            _env_int("MMA_ADAPT_DEADLINE_RELAY", int(cfg.adapt_deadline_relay))
+        )
+        cfg.adapt_min_samples = _env_int(
+            "MMA_ADAPT_MIN_SAMPLES", cfg.adapt_min_samples
+        )
+        if cfg.adapt_min_samples < 1:
+            raise ValueError("MMA_ADAPT_MIN_SAMPLES must be >= 1")
+        cfg.adapt_probe_s = _env_float("MMA_ADAPT_PROBE_S", cfg.adapt_probe_s)
+        if cfg.adapt_probe_s <= 0:
+            raise ValueError("MMA_ADAPT_PROBE_S must be positive")
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:
@@ -510,6 +595,14 @@ ENV_VARS: Dict[str, str] = {
     "disagg_decode_batch": "MMA_DISAGG_DECODE_BATCH",
     "disagg_continuous_batching": "MMA_DISAGG_CONT_BATCH",
     "disagg_prefill_chunk_tokens": "MMA_DISAGG_PREFILL_CHUNK_TOKENS",
+    "adapt_replan": "MMA_ADAPT_REPLAN",
+    "adapt_hysteresis": "MMA_ADAPT_HYSTERESIS",
+    "adapt_link_weighting": "MMA_ADAPT_WEIGHTING",
+    "adapt_chunk_scaling": "MMA_ADAPT_CHUNK_SCALING",
+    "adapt_chunk_min_bytes": "MMA_ADAPT_CHUNK_MIN_MB",
+    "adapt_deadline_relay": "MMA_ADAPT_DEADLINE_RELAY",
+    "adapt_min_samples": "MMA_ADAPT_MIN_SAMPLES",
+    "adapt_probe_s": "MMA_ADAPT_PROBE_S",
 }
 
 # One-line meaning per field (every dataclass field must appear; the
@@ -574,6 +667,21 @@ KNOB_DOCS: Dict[str, str] = {
         "packed decode steps vs one-lease-per-step sequential baseline",
     "disagg_prefill_chunk_tokens":
         "prefill chunk size in tokens, interleaved fairly; 0 = whole-prompt",
+    "adapt_replan":
+        "recall queued chunks when a link's estimate drifts past hysteresis",
+    "adapt_hysteresis":
+        "re-plan drift band: fire below this est/planned ratio",
+    "adapt_link_weighting":
+        "scale a link's pull depth by est_rate/best_fleet_rate",
+    "adapt_chunk_scaling":
+        "shrink chunks while fleet health sits below the hysteresis band",
+    "adapt_chunk_min_bytes":
+        "floor for adaptively scaled chunks; env value in MiB",
+    "adapt_deadline_relay":
+        "place relays by predicted completion vs deadline slack, not load",
+    "adapt_min_samples": "chunk samples before a link's estimate is trusted",
+    "adapt_probe_s":
+        "a shed link probes one chunk when its estimate is older than this",
 }
 
 

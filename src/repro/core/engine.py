@@ -27,7 +27,9 @@ from .transfer_task import (
     TaskManager,
     TaskState,
     TrafficClass,
+    TransferSpec,
     TransferTask,
+    resolve_transfer_spec,
 )
 
 
@@ -49,6 +51,7 @@ class EngineStats:
                 },
                 "by_tenant": dict(w.bytes_by_tenant),
                 "preempted": w.chunks_preempted,
+                "estimator": w.estimator_snapshot(),
             }
             for d, w in workers.items()
         }
@@ -94,6 +97,9 @@ class MMAEngine:
             self.sync_engine.transfer_complete
         )
         self.selector = PathSelector(topology, self.config, self.task_manager)
+        # Congestion-adaptive chunk sizing (adapt_chunk_scaling): split
+        # consults the selector's live fleet-health estimate.
+        self.task_manager.chunk_size_fn = self.selector.adaptive_chunk_bytes
         self.workers: Dict[int, LinkWorker] = {}
         for dev in self.devices:
             w = LinkWorker(
@@ -144,6 +150,29 @@ class MMAEngine:
     # ------------------------------------------------------------------
     # Interception points (paper §3.2)
     # ------------------------------------------------------------------
+    def _make_task(
+        self,
+        nbytes: int,
+        device: int,
+        direction: Direction,
+        sync: bool,
+        src: object,
+        dst: object,
+        spec: TransferSpec,
+        on_complete: Optional[Callable[[TransferTask], None]] = None,
+    ) -> TransferTask:
+        """Thread a resolved ``TransferSpec`` into the TransferTask — the
+        single place spec fields fan out, so a new spec field is added
+        here once instead of through every interception signature."""
+        self._check_target(device)
+        return TransferTask(
+            nbytes=nbytes, target=device, direction=direction,
+            sync=sync, src=src, dst=dst, on_complete=on_complete,
+            traffic_class=spec.traffic_class, deadline=spec.deadline,
+            tenant=spec.tenant, step=spec.step,
+            allow_replan=spec.allow_replan, chunk_bytes=spec.chunk_bytes,
+        )
+
     def memcpy_async(
         self,
         nbytes: int,
@@ -152,23 +181,24 @@ class MMAEngine:
         src: object = None,
         dst: object = None,
         on_complete: Optional[Callable[[TransferTask], None]] = None,
-        traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
-        deadline: Optional[float] = None,
-        tenant: str = "default",
-        step: Optional[int] = None,
+        spec: Optional[TransferSpec] = None,
+        **legacy,
     ) -> DummyTask:
         """Intercept an asynchronous copy: record a Transfer Task, return
         the Dummy Task to be enqueued on the caller's stream. Dispatch
         begins only when the stream reaches the Dummy Task (C1: deferred
-        path binding). ``deadline`` is an absolute backend-clock SLO
-        deadline (EDF ordering, escalation); ``tenant`` is the owning
-        tenant for hierarchical class->tenant arbitration."""
-        self._check_target(device)
-        task = TransferTask(
-            nbytes=nbytes, target=device, direction=direction,
-            sync=False, src=src, dst=dst, on_complete=on_complete,
-            traffic_class=traffic_class, deadline=deadline, tenant=tenant,
-            step=step,
+        path binding).
+
+        Submission policy (class, deadline, tenant, step, adaptation
+        hints) rides in ``spec=TransferSpec(...)``. The legacy loose
+        kwargs (``traffic_class=``/``deadline=``/``tenant=``/``step=``)
+        still work but emit a ``repro.``-prefixed DeprecationWarning;
+        unknown kwargs and spec+loose mixes raise TypeError naming the
+        kwarg (see ``resolve_transfer_spec``)."""
+        spec = resolve_transfer_spec("MMAEngine.memcpy_async", spec, legacy)
+        task = self._make_task(
+            nbytes, device, direction, sync=False, src=src, dst=dst,
+            spec=spec, on_complete=on_complete,
         )
         dummy = DummyTask(task=task, on_activate=self._activate)
         self.sync_engine.register(dummy)
@@ -181,20 +211,19 @@ class MMAEngine:
         direction: Direction = Direction.H2D,
         src: object = None,
         dst: object = None,
-        traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
-        deadline: Optional[float] = None,
-        tenant: str = "default",
-        step: Optional[int] = None,
+        spec: Optional[TransferSpec] = None,
+        **legacy,
     ) -> TransferTask:
         """Intercept a synchronous copy: same Transfer-Task machinery, but
         the transfer is activated immediately; the caller is expected to
         block on completion (virtual-time callers observe
-        ``task.complete_time``; threaded callers wait on ``on_complete``)."""
-        self._check_target(device)
-        task = TransferTask(
-            nbytes=nbytes, target=device, direction=direction,
-            sync=True, src=src, dst=dst, traffic_class=traffic_class,
-            deadline=deadline, tenant=tenant, step=step,
+        ``task.complete_time``; threaded callers wait on ``on_complete``).
+        Policy rides in ``spec=TransferSpec(...)`` — same contract as
+        ``memcpy_async``."""
+        spec = resolve_transfer_spec("MMAEngine.memcpy", spec, legacy)
+        task = self._make_task(
+            nbytes, device, direction, sync=True, src=src, dst=dst,
+            spec=spec,
         )
         self._activate(task)
         return task
@@ -280,8 +309,26 @@ class MMAEngine:
         return out
 
     def preemptions(self) -> int:
-        """Chunks cooperatively recalled in flight so far."""
+        """Chunks cooperatively recalled in flight so far (includes
+        re-plan recalls — both ride the same loss-free machinery)."""
         return sum(w.chunks_preempted for w in self.workers.values())
+
+    # ------------------------------------------------------------------
+    # Online-adaptation observability
+    # ------------------------------------------------------------------
+    def link_estimates(self) -> Dict[int, Dict[str, object]]:
+        """Per-link estimator state (estimated bandwidth, EWMA age,
+        sample and re-plan counts) — always live, independent of whether
+        any ``adapt_*`` response is enabled. Benches and tests assert
+        adaptation fired on these instead of inferring it from timing."""
+        return {
+            d: w.estimator_snapshot() for d, w in sorted(self.workers.items())
+        }
+
+    def replans(self) -> int:
+        """Re-plan events across all link workers (drift past the
+        hysteresis band that triggered a recall pass)."""
+        return sum(w.replans for w in self.workers.values())
 
     # ------------------------------------------------------------------
     # SLO admission support

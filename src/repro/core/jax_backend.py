@@ -26,7 +26,14 @@ from .engine import MMAEngine
 from .path_selector import Route
 from .task_launcher import Backend
 from .topology import Device, Topology
-from .transfer_task import Direction, MicroTask, TrafficClass, TransferTask
+from .transfer_task import (
+    Direction,
+    MicroTask,
+    TrafficClass,
+    TransferSpec,
+    TransferTask,
+    resolve_transfer_spec,
+)
 
 
 @dataclasses.dataclass
@@ -131,17 +138,21 @@ def multipath_device_put(
     arr: np.ndarray,
     target: int = 0,
     engine: Optional[MMAEngine] = None,
-    traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
-    tenant: str = "default",
+    spec: Optional[TransferSpec] = None,
+    **legacy,
 ) -> jax.Array:
-    """H2D: move a host array to ``devices[target]`` over all paths."""
+    """H2D: move a host array to ``devices[target]`` over all paths.
+
+    Policy rides in ``spec=TransferSpec(...)``; the legacy loose
+    ``traffic_class=``/``tenant=`` kwargs still work but emit a
+    ``repro.``-prefixed DeprecationWarning."""
+    spec = resolve_transfer_spec("multipath_device_put", spec, legacy)
     eng = engine or make_functional_engine()
     payload = HostPayload(
         flat=np.ascontiguousarray(arr).reshape(-1), shape=arr.shape,
         dtype=arr.dtype,
     )
     backend: JaxBackend = eng.backend  # type: ignore[assignment]
-    n_chunks = eng.config.n_chunks(arr.nbytes)
     # Element-align the chunk size.
     item = payload.itemsize
     eng.config.chunk_bytes = max(item, (eng.config.chunk_bytes // item) * item)
@@ -150,8 +161,7 @@ def multipath_device_put(
     )
     task = eng.memcpy(
         nbytes=arr.nbytes, device=target, direction=Direction.H2D,
-        src=payload, dst=assembler, traffic_class=traffic_class,
-        tenant=tenant,
+        src=payload, dst=assembler, spec=spec,
     )
     assert assembler.complete(), "functional dispatch must complete inline"
     return assembler.result(payload.shape, payload.dtype)
@@ -161,10 +171,13 @@ def multipath_device_get(
     jarr: jax.Array,
     target: int = 0,
     engine: Optional[MMAEngine] = None,
-    traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
-    tenant: str = "default",
+    spec: Optional[TransferSpec] = None,
+    **legacy,
 ) -> np.ndarray:
-    """D2H: fetch a device array back to host memory over all paths."""
+    """D2H: fetch a device array back to host memory over all paths.
+
+    Same ``spec=``/legacy-kwarg contract as ``multipath_device_put``."""
+    spec = resolve_transfer_spec("multipath_device_get", spec, legacy)
     eng = engine or make_functional_engine()
     shape, dtype = jarr.shape, np.dtype(jarr.dtype)
     out = np.empty(int(np.prod(shape)) if shape else 1, dtype=dtype)
@@ -173,7 +186,6 @@ def multipath_device_get(
     eng.config.chunk_bytes = max(item, (eng.config.chunk_bytes // item) * item)
     task = eng.memcpy(
         nbytes=out.nbytes, device=target, direction=Direction.D2H,
-        src=jarr.reshape(-1), dst=payload, traffic_class=traffic_class,
-        tenant=tenant,
+        src=jarr.reshape(-1), dst=payload, spec=spec,
     )
     return out.reshape(shape)

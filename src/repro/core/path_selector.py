@@ -34,10 +34,23 @@ capacity:
     in-share tenant under tenant WFQ) recalls lower-ranked chunks still
     waiting before their wire stage on its destination's link
     (``qos_preempt_inflight``); recalled chunks re-queue loss-free.
+  * **Online adaptation** (``adapt_*`` knobs, all default off) — every
+    worker maintains a live EWMA bandwidth/latency estimate from observed
+    chunk service times (always on; surfaced via
+    ``MMAEngine.link_estimates()``). When enabled: drift past a
+    hysteresis band re-plans the link's queued chunks onto healthier
+    links (``adapt_replan``); pull depth scales with
+    est_rate/best_fleet_rate so degraded links shed load, probing one
+    chunk per ``adapt_probe_s`` so shedding is never permanent
+    (``adapt_link_weighting``); new transfers split into smaller chunks
+    while the fleet is unhealthy (``adapt_chunk_scaling``); and relays
+    place by predicted completion vs deadline slack instead of queue
+    length alone (``adapt_deadline_relay``).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, List, Optional, TYPE_CHECKING
 
 from .config import MMAConfig
@@ -87,6 +100,17 @@ class LinkWorker:
         self.best_service: Optional[float] = None
         self.contended = False
         self.enabled = True
+        # -- online estimator state (always maintained; the adapt_* knobs
+        #    gate the behavioral responses, never the bookkeeping, so
+        #    snapshots expose estimates even on a static-weight engine) --
+        self.ewma_updated_at: Optional[float] = None  # backend time of sample
+        self.samples = 0
+        self.latency_ewma: Optional[float] = None     # per-chunk service (s)
+        # Rate snapshot this link's queued chunks were last planned at,
+        # and how many times drift past hysteresis forced a re-plan.
+        self.plan_rate: Optional[float] = None
+        self.replans = 0
+        self.chunks_replanned = 0
         # stats
         self.chunks_direct = 0
         self.chunks_relay = 0
@@ -108,11 +132,44 @@ class LinkWorker:
     def _capacity(self) -> int:
         if not self.enabled:
             return 0
+        depth = self.config.queue_depth
+        if (
+            self.config.adapt_link_weighting
+            and self.samples >= self.config.adapt_min_samples
+        ):
+            # Estimate-proportional weighting: scale this link's pull
+            # depth by est_rate/best_fleet_rate. A heavily degraded link
+            # rounds to zero and sheds pulls entirely — except for a
+            # probe chunk once its estimate goes stale, so the estimate
+            # (and the link) can recover when the degradation lifts.
+            best = self.selector.best_fleet_rate()
+            if best > 0:
+                ratio = min(1.0, self.estimate_rate() / best)
+                scaled = depth * ratio
+                if scaled < 0.5:
+                    # Far gone (>4x slower at depth 2): shed entirely.
+                    if self.outstanding == 0 and self._probe_due():
+                        return 1
+                    return 0
+                # Ceil, not round: a relay path's per-chunk latency is
+                # intrinsically ~1.5x a direct path's (extra NVLink
+                # hops), and halving its depth for that would throw away
+                # real aggregate bandwidth. Only genuinely slow links
+                # (2x+ behind the best estimate) lose pull depth.
+                depth = max(1, math.ceil(scaled))
         if self.contended and self.config.backoff_enabled:
             # Back off: only pull when the queue fully drains (paper §3.4.2,
             # "waits until the queue depth drops below a threshold").
             return 1 if self.outstanding == 0 else 0
-        return self.config.queue_depth - self.outstanding
+        return depth - self.outstanding
+
+    def _probe_due(self) -> bool:
+        """A shed link may pull one probe chunk when its estimate is older
+        than ``adapt_probe_s`` — shedding must never be permanent."""
+        if self.ewma_updated_at is None:
+            return True
+        now = self.backend.now()
+        return (now - self.ewma_updated_at) >= self.config.adapt_probe_s
 
     def maybe_pull(self, direct_only: bool = False) -> None:
         while self._capacity() > 0:
@@ -171,6 +228,12 @@ class LinkWorker:
                 self.ewma_service
                 > self.config.backoff_factor * self.best_service
             )
+            self.samples += 1
+            self.ewma_updated_at = self.backend.now()
+            self.latency_ewma = (
+                dt if self.latency_ewma is None
+                else a * dt + (1 - a) * self.latency_ewma
+            )
         self.selector.task_manager.micro_task_done(mt, self.backend.now())
         self.maybe_pull()
         # A completed chunk may have freed shared-link capacity others wait
@@ -181,6 +244,43 @@ class LinkWorker:
         if not self.ewma_service:
             return self.nominal_rate / (1 << 30)
         return 1.0 / self.ewma_service / (1 << 30)
+
+    # -- online estimator surface ----------------------------------------
+    def estimate_rate(self) -> float:
+        """Estimated per-chunk service rate in bytes/s: the EWMA of
+        observed end-to-end chunk service (including queueing on shared
+        stages — exactly the signal adaptation should react to); the
+        nominal link rate until the first sample lands."""
+        if self.ewma_service:
+            return 1.0 / self.ewma_service
+        return self.nominal_rate
+
+    def estimate_age(self) -> Optional[float]:
+        """Seconds since the estimate last absorbed a sample (None before
+        the first sample)."""
+        if self.ewma_updated_at is None:
+            return None
+        return self.backend.now() - self.ewma_updated_at
+
+    def estimator_snapshot(self) -> Dict[str, object]:
+        """Estimator state for reports: estimated bandwidth, EWMA age,
+        sample/re-plan counts — what benches assert adaptation on."""
+        gb = 1 << 30
+        return {
+            "est_gbps": self.estimate_rate() / gb,
+            "ewma_age_s": self.estimate_age(),
+            "samples": self.samples,
+            "replans": self.replans,
+            "chunks_replanned": self.chunks_replanned,
+            "plan_gbps": (
+                self.plan_rate / gb if self.plan_rate is not None else None
+            ),
+            "latency_ms": (
+                self.latency_ewma * 1e3
+                if self.latency_ewma is not None else None
+            ),
+            "contended": self.contended,
+        }
 
 
 class PathSelector:
@@ -200,6 +300,7 @@ class PathSelector:
         self.workers: Dict[int, LinkWorker] = {}
         self.backend: Optional["Backend"] = None   # shared by all workers
         self._kicking = False
+        self._probe_scheduled = False
 
     def register_worker(self, worker: LinkWorker) -> None:
         self.workers[worker.dev] = worker
@@ -278,6 +379,105 @@ class PathSelector:
                 self.queue.requeue(mt, cls_at_pull=cls_at_pull)
                 n += 1
         return n
+
+    # -- online adaptation (tentpole: live estimates drive the plan) -----
+    def best_fleet_rate(self) -> float:
+        """Highest estimated rate among enabled workers whose estimates
+        are trusted (``adapt_min_samples`` absorbed); 0.0 when none
+        qualify yet — weighting stays inert until the fleet has data."""
+        best = 0.0
+        for w in self.workers.values():
+            if w.enabled and w.samples >= self.config.adapt_min_samples:
+                best = max(best, w.estimate_rate())
+        return best
+
+    def _adapt_worker(self, worker: LinkWorker) -> int:
+        """Mid-transfer re-planning (``adapt_replan``): when ``worker``'s
+        estimated rate drifts below ``adapt_hysteresis`` x the rate its
+        queued chunks were planned at, recall every chunk still waiting
+        before its wire stage (the loss-free cooperative-recall machinery
+        preemption already uses) so the pull passes below re-place them
+        on healthier links. On recovery past 1/hysteresis the plan anchor
+        re-snaps without recalling anything. Returns chunks recalled."""
+        cfg = self.config
+        if worker.samples < cfg.adapt_min_samples:
+            return 0
+        est = worker.estimate_rate()
+        if worker.plan_rate is None:
+            worker.plan_rate = est
+            return 0
+        ratio = est / worker.plan_rate
+        if ratio > 1.0 / cfg.adapt_hysteresis:
+            worker.plan_rate = est      # recovered — re-anchor only
+            return 0
+        if ratio >= cfg.adapt_hysteresis:
+            return 0                    # inside the hysteresis band
+        worker.plan_rate = est
+        worker.replans += 1
+        n = 0
+        for mt, route, cls_at_pull, handle in list(
+            worker._inflight.values()
+        ):
+            if not mt.allow_replan:
+                continue
+            if handle.try_cancel():
+                worker.preempt_inflight(mt, route, cls_at_pull)
+                self.queue.requeue(mt, cls_at_pull=cls_at_pull)
+                n += 1
+        worker.chunks_replanned += n
+        return n
+
+    def adaptive_chunk_bytes(self, task) -> Optional[int]:
+        """Congestion-adaptive chunk size (``adapt_chunk_scaling``), wired
+        into ``TaskManager.split`` by the engine: while fleet health (mean
+        best-observed/EWMA service ratio over trusted links) sits below
+        the hysteresis band, new transfers split into proportionally
+        smaller chunks — a degraded link that wins a pull ties up less
+        work per mistake, and re-planning recalls at finer granularity.
+        None = keep the configured size."""
+        cfg = self.config
+        if not cfg.adapt_chunk_scaling:
+            return None
+        ratios = [
+            w.best_service / w.ewma_service
+            for w in self.workers.values()
+            if (
+                w.enabled and w.samples >= cfg.adapt_min_samples
+                and w.ewma_service and w.best_service
+            )
+        ]
+        if not ratios:
+            return None
+        health = sum(ratios) / len(ratios)
+        if health >= cfg.adapt_hysteresis:
+            return None
+        scaled = int(cfg.chunk_bytes * health)
+        return max(cfg.adapt_chunk_min_bytes, min(cfg.chunk_bytes, scaled))
+
+    def _schedule_probe_wakeup(self) -> None:
+        """Liveness under full shed (``adapt_link_weighting``): when
+        queued work remains but every worker declined to pull and nothing
+        is in flight anywhere, no completion event will ever re-trigger
+        dispatch — so schedule one wake-up a probe interval out, by which
+        time the shed links' estimates are stale and ``_capacity`` grants
+        the probe pull. Sim-only (the functional backend launches
+        synchronously and can never idle with queued work)."""
+        if not self.config.adapt_link_weighting or self._probe_scheduled:
+            return
+        if self.queue.is_empty():
+            return
+        if any(w.outstanding > 0 for w in self.workers.values()):
+            return
+        world = getattr(self.backend, "world", None)
+        if world is None:
+            return
+        self._probe_scheduled = True
+
+        def fire() -> None:
+            self._probe_scheduled = False
+            self.kick_all()
+
+        world.after(self.config.adapt_probe_s, fire)
 
     def refresh_deadlines(self) -> None:
         """Re-evaluate deadline state before dispatching: escalate at-risk
@@ -370,10 +570,64 @@ class PathSelector:
                         return mt, Route(link_dev=dev, dest=dest)
         return None
 
+    def _deadline_relay_dest(
+        self, worker: LinkWorker, cls: TrafficClass
+    ) -> Optional[int]:
+        """Deadline-aware relay placement (``adapt_deadline_relay``):
+        among destinations this link may serve, prefer the one with the
+        earliest queued deadline — but decline a steal whose predicted
+        completion on this link (wait behind its outstanding queue, then
+        one service at the estimated rate) blows that deadline while a
+        faster worker with spare capacity could carry it instead. None =
+        no deadlined work here; the caller falls back to
+        longest-remaining stealing."""
+        dev = worker.dev
+        candidates = []
+        for dest in self.queue.pending_dests(cls):
+            if dest == dev or not self._may_relay_for(dev, dest):
+                continue
+            d = self.queue.head_deadline(cls, dest)
+            if d is not None:
+                candidates.append((d, dest))
+        if not candidates:
+            return None
+        candidates.sort()
+        now = self.backend.now() if self.backend is not None else 0.0
+        chunk_s = self.config.chunk_bytes / max(worker.estimate_rate(), 1.0)
+        for deadline, dest in candidates:
+            predicted = now + (worker.outstanding + 1) * chunk_s
+            if predicted <= deadline:
+                return dest
+            if not self._faster_worker_available(worker, dest):
+                return dest     # nobody better — late beats never
+        return None
+
+    def _faster_worker_available(
+        self, worker: LinkWorker, dest: int
+    ) -> bool:
+        """Is some other enabled worker that may serve ``dest`` both
+        faster (by estimate) and not saturated?"""
+        my_rate = worker.estimate_rate()
+        for w in self.workers.values():
+            if w is worker or not w.enabled:
+                continue
+            if w.dev != dest and not self._may_relay_for(w.dev, dest):
+                continue
+            if (
+                w.estimate_rate() > my_rate
+                and w.outstanding < self.config.queue_depth
+            ):
+                return True
+        return False
+
     def _pick_relay_dest(
         self, worker: LinkWorker, cls: Optional[TrafficClass] = None
     ) -> Optional[int]:
         dev = worker.dev
+        if self.config.adapt_deadline_relay and cls is not None:
+            dest = self._deadline_relay_dest(worker, cls)
+            if dest is not None:
+                return dest
         if self.config.lrd_stealing:
             # Longest-remaining-destination among destinations we may serve
             # (within one traffic class when QoS arbitration is on).
@@ -413,6 +667,12 @@ class PathSelector:
         self._kicking = True
         try:
             self.refresh_deadlines()
+            # Adaptation pass: links whose estimate drifted past the
+            # hysteresis band recall their queued chunks before anyone
+            # pulls, so the recalled work re-places this same round.
+            if self.config.adapt_replan:
+                for w in self.workers.values():
+                    self._adapt_worker(w)
             # Preemption pass: every dispatch round is a micro-task
             # boundary — in-flight chunks that queued work now outranks
             # yield here (their recalled slots are pulled again below).
@@ -429,5 +689,6 @@ class PathSelector:
                     w.maybe_pull(direct_only=True)
             for w in order:
                 w.maybe_pull()
+            self._schedule_probe_wakeup()
         finally:
             self._kicking = False

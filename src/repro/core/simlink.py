@@ -144,6 +144,10 @@ class SimLink:
         self.world = world
         self.name = name
         self.rate = rate_gbps * GB  # bytes/s
+        # Time-varying degradation: effective rate is rate * rate_multiplier.
+        # Changed cooperatively — services already on the wire finish at the
+        # rate they started with; the multiplier applies to subsequent starts.
+        self.rate_multiplier = 1.0
         self.slots = slots
         self._busy = 0
         self._queue: Deque[
@@ -172,6 +176,22 @@ class SimLink:
     def queue_depth(self) -> int:
         return len(self._queue) + self._busy
 
+    def set_rate_multiplier(self, multiplier: float) -> None:
+        """Degrade (or restore) this link's effective rate.
+
+        ``multiplier`` scales the nominal rate for every *subsequently
+        started* service — in-flight services finish at the rate they
+        started with (degradation is cooperative at chunk granularity,
+        like everything else in the sim). Must be > 0: a dead link would
+        strand its queued services forever, which no test could observe
+        finishing."""
+        if multiplier <= 0:
+            raise ValueError(
+                f"rate multiplier must be > 0, got {multiplier!r} "
+                f"(use a small value like 0.01 for a near-dead link)"
+            )
+        self.rate_multiplier = multiplier
+
     def _try_start(self) -> None:
         while self._busy < self.slots and self._queue:
             nbytes, eff, on_done, hold, tag, token = self._queue.popleft()
@@ -180,8 +200,9 @@ class SimLink:
             if token is not None:
                 token["started"] = True
             self._busy += 1
-            per_slot_rate = self.rate / self.slots
-            dt = nbytes / (per_slot_rate * eff) if self.rate > 0 else 0.0
+            rate = self.rate * self.rate_multiplier
+            per_slot_rate = rate / self.slots
+            dt = nbytes / (per_slot_rate * eff) if rate > 0 else 0.0
             grant = Grant(self)
 
             def finish(nbytes=nbytes, dt=dt, on_done=on_done, hold=hold,

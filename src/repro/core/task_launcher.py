@@ -93,6 +93,63 @@ class SimBackend(Backend):
         return out
 
     # ------------------------------------------------------------------
+    # Link-degradation injection (online-adaptation test surface): look up
+    # simulated links by kind and schedule time-varying rate multipliers,
+    # so benches and tests can make the fabric churn underneath a replay.
+    _LINK_KINDS = (
+        "pcie_h2d", "pcie_d2h", "nvl_in", "nvl_out",
+        "dram", "xgmi_h2d", "xgmi_d2h",
+    )
+
+    def link(self, kind: str, dev: Optional[int] = None) -> SimLink:
+        """Resolve a simulated link by kind.
+
+        ``kind`` is one of ``pcie_h2d``/``pcie_d2h``/``nvl_in``/``nvl_out``
+        (``dev`` = GPU index), ``dram`` (``dev`` = NUMA node), or
+        ``xgmi_h2d``/``xgmi_d2h`` (no ``dev``). Unknown kinds and missing
+        devices fail loudly."""
+        if kind not in self._LINK_KINDS:
+            raise ValueError(
+                f"unknown link kind {kind!r}; expected one of "
+                f"{', '.join(self._LINK_KINDS)}"
+            )
+        if kind in ("xgmi_h2d", "xgmi_d2h"):
+            return self.xgmi_h2d if kind == "xgmi_h2d" else self.xgmi_d2h
+        if dev is None:
+            raise ValueError(f"link kind {kind!r} needs a device index")
+        table: Dict[int, SimLink] = getattr(self, kind)
+        if dev not in table:
+            raise ValueError(
+                f"no {kind} link for device {dev} "
+                f"(topology has {sorted(table)})"
+            )
+        return table[dev]
+
+    def set_link_degradation(
+        self, kind: str, dev: Optional[int] = None, multiplier: float = 1.0
+    ) -> None:
+        """Immediately scale a link's effective rate (1.0 restores it)."""
+        self.link(kind, dev).set_rate_multiplier(multiplier)
+
+    def inject_degradation(
+        self,
+        schedule: List[Tuple[float, str, Optional[int], float]],
+    ) -> None:
+        """Schedule time-varying degradation: each ``(t, kind, dev,
+        multiplier)`` entry applies at virtual time ``t``. Links are
+        resolved eagerly so a bad entry fails at injection time, not
+        mid-replay."""
+        for t, kind, dev, multiplier in schedule:
+            lk = self.link(kind, dev)
+            if multiplier <= 0:
+                raise ValueError(
+                    f"degradation multiplier must be > 0, got {multiplier!r} "
+                    f"for {lk.name} at t={t}"
+                )
+            self.world.at(t, lambda lk=lk, m=multiplier:
+                          lk.set_rate_multiplier(m))
+
+    # ------------------------------------------------------------------
     def now(self) -> float:
         return self.world.now
 

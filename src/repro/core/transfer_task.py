@@ -57,6 +57,7 @@ import dataclasses
 import enum
 import heapq
 import itertools
+import warnings
 from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from .config import GB, MMAConfig
@@ -89,6 +90,91 @@ class TaskState(enum.Enum):
 _task_ids = itertools.count()
 
 
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class TransferSpec:
+    """The submission-time policy of one transfer, as a single value.
+
+    ``memcpy``/``memcpy_async``/``multipath_device_put``/
+    ``multipath_device_get`` accept ``spec=TransferSpec(...)`` instead of
+    the loose ``traffic_class=``/``deadline=``/``tenant=``/``step=``
+    kwargs that previously had to be threaded through every call layer
+    (the loose form still works but emits a ``repro.``-prefixed
+    ``DeprecationWarning``; ``benchmarks/run.py`` errors on those).
+    Frozen and keyword-only so a spec can be built once and safely shared
+    across many submissions, and so new policy fields — like the
+    adaptation hints below — never widen the call surface again.
+    """
+
+    traffic_class: TrafficClass = TrafficClass.THROUGHPUT
+    # Absolute completion deadline in the backend's clock domain.
+    deadline: Optional[float] = None
+    tenant: str = "default"
+    # Decode-batch step attribution tag.
+    step: Optional[int] = None
+    # ---- online-adaptation hints ----
+    # Opt this transfer's queued chunks out of mid-transfer re-planning
+    # (they stay where first planned even when a link's estimate drifts).
+    allow_replan: bool = True
+    # Per-transfer chunk-size override; None = the engine's (possibly
+    # congestion-adaptive) chunk size.
+    chunk_bytes: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if self.chunk_bytes is not None and self.chunk_bytes <= 0:
+            raise ValueError(
+                f"TransferSpec.chunk_bytes must be positive, "
+                f"got {self.chunk_bytes!r}"
+            )
+
+
+_SPEC_LOOSE_FIELDS = ("traffic_class", "deadline", "tenant", "step")
+
+
+def resolve_transfer_spec(
+    method: str, spec: Optional[TransferSpec], loose: Dict[str, object]
+) -> TransferSpec:
+    """Resolve a submission's ``spec=`` against legacy loose kwargs.
+
+    Exactly the ``FetchSpec`` contract on the store side: unknown kwargs
+    raise a ``TypeError`` naming the kwarg; mixing ``spec=`` with a loose
+    kwarg raises a ``TypeError`` naming the loose one; the pure loose form
+    still works but emits a ``repro.``-prefixed ``DeprecationWarning``
+    (``benchmarks/run.py`` turns exactly those into errors).
+    ``stacklevel=3`` points the warning at the caller of the public
+    method, not at this helper."""
+    unknown = [k for k in loose if k not in _SPEC_LOOSE_FIELDS]
+    if unknown:
+        raise TypeError(
+            f"{method}() got an unexpected keyword argument "
+            f"{unknown[0]!r} (TransferSpec fields: "
+            f"{', '.join(f.name for f in dataclasses.fields(TransferSpec))})"
+        )
+    if spec is not None:
+        if not isinstance(spec, TransferSpec):
+            raise TypeError(
+                f"{method}() spec= must be a TransferSpec, "
+                f"got {type(spec).__name__}"
+            )
+        if loose:
+            offending = sorted(loose)
+            raise TypeError(
+                f"{method}() got both spec= and loose keyword "
+                f"'{offending[0]}'; set '{offending[0]}' on the "
+                f"TransferSpec instead"
+            )
+        return spec
+    if loose:
+        warnings.warn(
+            f"repro.core.{method}() loose QoS kwargs "
+            f"({', '.join(sorted(loose))}) are deprecated; "
+            f"pass spec=TransferSpec(...)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return TransferSpec(**loose)  # type: ignore[arg-type]
+    return TransferSpec()
+
+
 @dataclasses.dataclass
 class TransferTask:
     """One logical host<->device copy intercepted by MMA."""
@@ -113,6 +199,11 @@ class TransferTask:
     # attribution: the engine's step ledger groups landed transfers and
     # bytes by this tag). None = not tied to a decode step.
     step: Optional[int] = None
+    # Adaptation hints (from TransferSpec): whether queued chunks may be
+    # recalled by mid-transfer re-planning, and an optional per-transfer
+    # chunk-size override consumed by TaskManager.split.
+    allow_replan: bool = True
+    chunk_bytes: Optional[int] = None
     task_id: int = dataclasses.field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.RECORDED
     # Host/device payload handles — opaque to the scheduler; the functional
@@ -182,6 +273,10 @@ class MicroTask:
     @property
     def deadline(self) -> Optional[float]:
         return self.parent.deadline
+
+    @property
+    def allow_replan(self) -> bool:
+        return self.parent.allow_replan
 
 
 class TenantArbiter:
@@ -628,6 +723,18 @@ class MicroTaskQueue:
                 best, best_bytes = dest, b
         return best
 
+    def head_deadline(
+        self, cls: TrafficClass, dest: int
+    ) -> Optional[float]:
+        """Earliest queued deadline of ``cls`` work for ``dest`` (None when
+        nothing queued there is deadlined). Deadline-aware relay placement
+        ranks candidate destinations by this."""
+        q = self._by_class_dest[cls].get(dest)
+        if not q:
+            return None
+        best = min(heap[0][0] for heap in q.values() if heap)
+        return None if best == float("inf") else best
+
     def pending_dests(self, cls: Optional[TrafficClass] = None) -> List[int]:
         out = []
         classes = TrafficClass if cls is None else (cls,)
@@ -692,13 +799,27 @@ class TaskManager:
             Tuple[TrafficClass, int, Direction], int
         ] = {}
         self.escalations = 0                     # flows promoted so far
+        # Congestion-adaptive chunk sizing hook: the engine points this at
+        # PathSelector.adaptive_chunk_bytes. Returns None to keep the
+        # configured size; a task's own chunk_bytes hint wins over both.
+        self.chunk_size_fn: Optional[
+            Callable[[TransferTask], Optional[int]]
+        ] = None
 
     def add_completion_listener(self, cb: Callable[[TransferTask], None]) -> None:
         self._completion_cbs.append(cb)
 
     def split(self, task: TransferTask) -> List[MicroTask]:
-        """Divide ``task`` into chunk-sized micro-tasks and enqueue them."""
-        chunk = self.config.chunk_bytes
+        """Divide ``task`` into chunk-sized micro-tasks and enqueue them.
+
+        Chunk size resolution: the task's own ``chunk_bytes`` hint, else
+        the selector's congestion-adaptive size (``chunk_size_fn``), else
+        ``config.chunk_bytes``."""
+        chunk = task.chunk_bytes
+        if chunk is None and self.chunk_size_fn is not None:
+            chunk = self.chunk_size_fn(task)
+        if chunk is None:
+            chunk = self.config.chunk_bytes
         micro: List[MicroTask] = []
         off = 0
         seq = 0

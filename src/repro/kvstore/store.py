@@ -54,7 +54,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core import Direction, TrafficClass
+from ..core import Direction, TrafficClass, TransferSpec
 from ..core.config import MMAConfig
 from .radix import Page, RadixPrefixIndex
 from .tiers import GB, PinnedSlabPool, Tier, TierCounters
@@ -271,8 +271,10 @@ class TierManager:
                 pin(batch)
             task = self.engine.memcpy(
                 nbytes, device=self.target, direction=Direction.D2H,
-                traffic_class=traffic_class, deadline=deadline,
-                tenant=tenant,
+                spec=TransferSpec(
+                    traffic_class=traffic_class, deadline=deadline,
+                    tenant=tenant,
+                ),
             )
             self.counters.writebacks += 1
             self.counters.writeback_bytes += nbytes
@@ -353,9 +355,11 @@ class TierManager:
         # TTFT deadline to hold (EDF/escalation see the true urgency)
         task = engine.memcpy(
             dma_bytes, device=target, direction=Direction.H2D,
-            traffic_class=traffic_class,
-            deadline=None if deadline is None else deadline - staged_s,
-            tenant=tenant, step=step,
+            spec=TransferSpec(
+                traffic_class=traffic_class,
+                deadline=None if deadline is None else deadline - staged_s,
+                tenant=tenant, step=step,
+            ),
         )
         self._charge_owner(engine, dma_bytes)
         # callers that only see the task (KVCacheManager.fetch keeps its
@@ -465,8 +469,10 @@ class TieredKVStore:
             task = self.engine.memcpy(
                 extra_bytes, device=self.tiers.target,
                 direction=Direction.D2H,
-                traffic_class=traffic_class, deadline=deadline,
-                tenant=tenant,
+                spec=TransferSpec(
+                    traffic_class=traffic_class, deadline=deadline,
+                    tenant=tenant,
+                ),
             )
             return "", [task]
         for p in fresh:

@@ -49,7 +49,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import MMAConfig, SimWorld, TrafficClass
+from ..core import MMAConfig, SimWorld, TrafficClass, TransferSpec
 from ..core.engine import MMAEngine
 from ..core.task_launcher import SimBackend
 from ..core.topology import Topology, h20_server
@@ -435,9 +435,12 @@ class DisaggOrchestrator:
             nbytes = len(req.tokens) * self.store.bytes_per_token
             task = engine.memcpy(
                 nbytes, device=target,
-                traffic_class=TrafficClass.LATENCY,
-                deadline=self._handoff_deadline(req), tenant=req.tenant,
-                step=batch.step_index,
+                spec=TransferSpec(
+                    traffic_class=TrafficClass.LATENCY,
+                    deadline=self._handoff_deadline(req),
+                    tenant=req.tenant,
+                    step=batch.step_index,
+                ),
             )
             staged_s = 0.0
             req.handoff_bytes = nbytes
@@ -502,6 +505,8 @@ class DisaggOrchestrator:
                 "transfers": eng.stats.transfers,
                 "by_tenant": eng.tenant_bytes(),
                 "by_step": eng.step_attribution(),
+                "links": eng.link_estimates(),
+                "replans": eng.replans(),
             }
             for tenant, nbytes in eng.tenant_bytes().items():
                 row = tenants.setdefault(tenant, {"engine_bytes": 0})

@@ -22,7 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import Direction, MMAEngine, TrafficClass, make_sim_engine
+from ..core import (
+    Direction,
+    MMAEngine,
+    TrafficClass,
+    TransferSpec,
+    make_sim_engine,
+)
 from ..core.config import GB, MMAConfig
 from ..models import decode_step, init_params, prefill
 from .kv_cache import KVCacheManager, kv_bytes_per_token
@@ -101,8 +107,10 @@ class LatencyModel:
             eng.set_relay_devices(list(range(self.tp, 8)))
         task = eng.memcpy(
             nbytes, device=0, direction=direction,
-            traffic_class=traffic_class, deadline=deadline_s,
-            tenant=tenant,
+            spec=TransferSpec(
+                traffic_class=traffic_class, deadline=deadline_s,
+                tenant=tenant,
+            ),
         )
         world.run()
         return task.elapsed

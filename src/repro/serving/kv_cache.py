@@ -25,7 +25,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from ..core import Direction, MMAEngine, TrafficClass
+from ..core import Direction, MMAEngine, TrafficClass, TransferSpec
 from ..core.config import GB, MMAConfig
 from ..kvstore import TieredKVStore, chain_keys, legacy_prefix_key
 
@@ -251,8 +251,10 @@ class KVCacheManager:
             nbytes = len(tokens) * self.bytes_per_token + ssm_bytes
             task = self.engine.memcpy(
                 nbytes, device=self.target, direction=Direction.D2H,
-                traffic_class=traffic_class, deadline=deadline,
-                tenant=tenant,
+                spec=TransferSpec(
+                    traffic_class=traffic_class, deadline=deadline,
+                    tenant=tenant,
+                ),
             )
             key = self.prefix.store(
                 tokens, nbytes, payload=payload,
@@ -291,9 +293,11 @@ class KVCacheManager:
         staged_s = nbytes / (self.mma_config.kvstore_pageable_gbps * GB)
         task = self.engine.memcpy(
             nbytes, device=self.target, direction=Direction.H2D,
-            traffic_class=traffic_class,
-            deadline=None if deadline is None else deadline - staged_s,
-            tenant=tenant,
+            spec=TransferSpec(
+                traffic_class=traffic_class,
+                deadline=None if deadline is None else deadline - staged_s,
+                tenant=tenant,
+            ),
         )
         task.staged_s = staged_s
         self.admit(hit)

@@ -360,6 +360,8 @@ class Orchestrator:
                 "transfers": eng.stats.transfers,
                 "by_tenant": eng.tenant_bytes(),
                 "by_step": eng.step_attribution(),
+                "links": eng.link_estimates(),
+                "replans": eng.replans(),
             }
         }
 

@@ -14,7 +14,10 @@ core sections are shared by every orchestrator:
   * ``tenants``  — per-tenant engine bytes/rates, configured shares,
                    cooperative preemption count;
   * ``engines``  — per-engine wire accounting (devices, bytes,
-                   transfers, per-tenant split, per-step attribution).
+                   transfers, per-tenant split, per-step attribution,
+                   per-link estimator state under ``links`` — estimated
+                   bandwidth, EWMA age, sample/re-plan counters — plus
+                   the engine-wide ``replans`` total).
 
 Disaggregated serving adds ``requests`` (state counts), ``rejections``
 (admission outcomes) and ``batching`` (per-decode-engine continuous-

@@ -15,7 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from ..core import Direction, MMAEngine, TrafficClass
+from ..core import Direction, MMAEngine, TrafficClass, TransferSpec
 from ..core.jax_backend import JaxBackend, multipath_device_get, multipath_device_put
 
 
@@ -71,8 +71,10 @@ class WeightManager:
     ) -> TransferReport:
         task = self.engine.memcpy(
             self.nbytes, device=self.target, direction=direction,
-            traffic_class=self.TRANSFER_CLASS, deadline=deadline,
-            tenant=self.tenant,
+            spec=TransferSpec(
+                traffic_class=self.TRANSFER_CLASS, deadline=deadline,
+                tenant=self.tenant,
+            ),
         )
         world = self.engine.backend.world  # type: ignore[attr-defined]
         world.run()
@@ -90,8 +92,10 @@ class WeightManager:
             self._host_copy = jax.tree.map(
                 lambda l: multipath_device_get(
                     l, engine=self.engine,
-                    traffic_class=self.TRANSFER_CLASS,
-                    tenant=self.tenant,
+                    spec=TransferSpec(
+                        traffic_class=self.TRANSFER_CLASS,
+                        tenant=self.tenant,
+                    ),
                 ),
                 self.params,
             )
@@ -112,8 +116,10 @@ class WeightManager:
             self.params = jax.tree.map(
                 lambda l: multipath_device_put(
                     np.asarray(l), target=self.target, engine=self.engine,
-                    traffic_class=self.TRANSFER_CLASS,
-                    tenant=self.tenant,
+                    spec=TransferSpec(
+                        traffic_class=self.TRANSFER_CLASS,
+                        tenant=self.tenant,
+                    ),
                 ),
                 self._host_copy,
             )
