@@ -1,0 +1,145 @@
+"""Flight-recorder overhead gate: tracing disabled vs enabled-but-
+discarding, identical disagg decode replay.
+
+The observability bargain in ``repro.obs`` is that the *disabled* path
+costs one attribute load and a predicate (``if tracer.enabled``) per
+instrumentation site, and the *enabled* path costs dict packing plus a
+bounded-deque append. This bench measures both ends on the decode
+bench's replay (``benchmarks/decode_batching.py`` trace, batched arm):
+
+  * **off** — the null tracer (the default for every ``SimWorld``):
+    every instrumentation site short-circuits on ``enabled == False``;
+  * **on**  — a real ``Tracer`` with ``max_spans=0``: every site runs
+    its full span-construction path, and the ring (a
+    ``deque(maxlen=0)``) discards the span immediately — the honest
+    upper bound on per-span CPU cost without unbounded memory.
+
+The statistic is **min per arm over interleaved pairs**, collected
+*sequentially*: pairs keep accumulating until the bar is met or
+``MAX_PAIRS`` is exhausted. Min is the right floor estimator because
+the noise is one-sided — identical replays on a shared CI box sit
+near a quiet floor with occasional large positive bursts (container
+neighbors; +30% epochs lasting whole seconds were observed), so
+medians and means are contaminated upward while the per-arm minimum
+converges on the undisturbed cost. A fixed repeat count flakes
+whenever one arm never lands in a quiet window (observed at 5, 10,
+*and* 25 repeats during a noisy epoch); the sequential design instead
+exits as soon as both arms have one quiet sample — a handful of pairs
+on an idle box — while a genuine regression must hold the on-arm
+floor above the bar across every one of ``MAX_PAIRS`` pairs to fail.
+The cyclic collector is paused around each timed replay (exactly what
+``timeit`` does, and for the same reason: GC cadence depends on
+allocation *history*, so the extra span allocations shift collection
+points between arms and the delta measures scheduling luck, not
+tracer cost — a full collection runs between repeats instead). A
+small absolute epsilon keeps scheduler jitter on a ~200 ms replay
+from manufacturing a ratio failure. Writes ``BENCH_obs_overhead.json`` (path override:
+``MMA_BENCH_OBS_PATH``); the bar is asserted after the artifact is
+written so a failing run still uploads its evidence.
+"""
+from __future__ import annotations
+
+import gc
+import json
+import os
+import time
+from typing import Dict, List
+
+from repro.obs import Tracer, install, uninstall
+
+from .common import CSV
+from .decode_batching import make_requests, replay
+
+MIN_PAIRS = 5                   # always collect at least this many
+MAX_PAIRS = 60                  # give a noisy box ~30s of chances
+OVERHEAD_BAR = 0.02             # <2% tracing overhead, ISSUE acceptance
+ABS_EPS_S = 0.005               # scheduler-jitter floor
+
+
+def _one_replay() -> None:
+    replay(continuous_batching=True, chunk_tokens=0)
+
+
+def _timed(fn) -> float:
+    gc.collect()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+    finally:
+        if was_enabled:
+            gc.enable()
+
+
+def run(csv: CSV) -> None:
+    print("# Flight-recorder overhead — tracing off vs enabled-but-"
+          "discarding, identical decode replay")
+    # touch the trace once so numpy/model warmup is out of both arms
+    make_requests()
+    _one_replay()
+
+    off: List[float] = []
+    on: List[float] = []
+    spans_seen = 0
+
+    def passes() -> bool:
+        return min(on) <= min(off) * (1.0 + OVERHEAD_BAR) + ABS_EPS_S
+
+    for i in range(MAX_PAIRS):
+        # alternate within-pair order so warmup trends stay arm-fair
+        if i % 2 == 0:
+            off.append(_timed(_one_replay))
+        tracer = install(Tracer(max_spans=0))
+        try:
+            on.append(_timed(_one_replay))
+        finally:
+            uninstall()
+        if i % 2 == 1:
+            off.append(_timed(_one_replay))
+        spans_seen = max(spans_seen, tracer.dropped)
+        if i + 1 >= MIN_PAIRS and passes():
+            break
+
+    off_s, on_s = min(off), min(on)
+    overhead = on_s / off_s - 1.0
+    print(f"off {off_s * 1e3:8.1f} ms   on {on_s * 1e3:8.1f} ms   "
+          f"overhead {overhead * 100:+.2f}%   "
+          f"({spans_seen} spans/replay discarded)")
+
+    csv.add("obs.overhead.off_ms", 0.0, f"{off_s * 1e3:.2f}")
+    csv.add("obs.overhead.on_ms", 0.0, f"{on_s * 1e3:.2f}")
+    csv.add("obs.overhead.pct", 0.0, f"{overhead * 100:.3f}")
+    csv.add("obs.overhead.spans", 0.0, str(spans_seen))
+
+    out: Dict = {
+        "off_s": off_s,
+        "on_s": on_s,
+        "off_all_s": off,
+        "on_all_s": on,
+        "overhead": overhead,
+        "spans_per_replay": spans_seen,
+        "pairs": len(on),
+        "bar": OVERHEAD_BAR,
+    }
+    path = os.environ.get("MMA_BENCH_OBS_PATH", "BENCH_obs_overhead.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+
+    assert spans_seen > 0, (
+        "the enabled arm recorded no spans — the instrumentation gate "
+        "is not exercising the tracer, so the overhead number is vacuous"
+    )
+    assert on_s <= off_s * (1.0 + OVERHEAD_BAR) + ABS_EPS_S, (
+        f"tracing overhead above the {OVERHEAD_BAR:.0%} bar: "
+        f"{off_s * 1e3:.1f} ms off vs {on_s * 1e3:.1f} ms on "
+        f"({overhead * 100:+.2f}%)"
+    )
+
+
+if __name__ == "__main__":
+    c = CSV()
+    run(c)
+    c.emit()

@@ -4,6 +4,13 @@ additionally writes the rows as JSON for the CI bench-regression gate
 (see benchmarks/bench_gate.py and the README "CI bench gate" section).
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7,fig12] [--json out.json]
+
+``--trace out.json`` turns the flight recorder on for every benchmark in
+the run (every ``SimWorld`` constructed while it is installed records
+causal spans) and writes one Chrome-trace/Perfetto JSON at the end —
+load it at https://ui.perfetto.dev. Trace one module at a time
+(``--only disagg --trace TRACE_disagg.json``) to keep the span ring
+within bounds; drops are reported, never silent.
 """
 from __future__ import annotations
 
@@ -42,6 +49,7 @@ MODULES = [
     ("disagg", "disagg_trace"),
     ("decode", "decode_batching"),
     ("adapt", "adaptive_paths"),
+    ("obs", "obs_overhead"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
     ("tpu_wakeup", "tpu_wakeup"),
@@ -55,8 +63,17 @@ def main() -> None:
                     help="comma-separated figure keys (e.g. fig7,fig12)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (CI bench gate input)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record flight-recorder spans across the run and "
+                         "write a Chrome-trace/Perfetto JSON")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer, install
+
+        tracer = install(Tracer())
 
     csv = CSV()
     t0 = time.monotonic()
@@ -81,6 +98,14 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(csv.to_dict(), f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")
+    if tracer is not None:
+        from repro.obs import uninstall
+        from repro.obs.export import write_chrome_trace
+
+        uninstall()
+        n = write_chrome_trace(tracer.all_spans(), args.trace)
+        dropped = f" ({tracer.dropped} dropped)" if tracer.dropped else ""
+        print(f"# wrote {args.trace}: {n} trace events{dropped}")
 
 
 if __name__ == "__main__":

@@ -311,6 +311,19 @@ class MMAConfig:
     # probing at the chunk cadence would re-inflict the tail latency the
     # shed just avoided.
     adapt_probe_s: float = 0.25
+    # ---- Observability (repro.obs) --------------------------------------
+    # Flight-recorder tracing: orchestrators that own a SimWorld install
+    # a recording tracer on it when set (benchmarks/run.py --trace
+    # installs one globally instead). Off = the null tracer: every
+    # instrumentation site is one attribute load + branch, overhead
+    # gated <2% by benchmarks/obs_overhead.py.
+    obs_trace: bool = False
+    # Span ring-buffer capacity per tracer; the oldest spans are dropped
+    # (and counted) beyond this, bounding trace memory on long replays.
+    obs_trace_max_spans: int = 1_000_000
+    # Per-SimLink completion-record window (entries): the running window
+    # throughput_gbps() sums over. Completions beyond it age out.
+    obs_link_completions: int = 65536
 
     def class_only(self) -> "MMAConfig":
         """Copy with the deadline machinery disabled (PR-1 class-only
@@ -541,6 +554,17 @@ class MMAConfig:
         cfg.adapt_probe_s = _env_float("MMA_ADAPT_PROBE_S", cfg.adapt_probe_s)
         if cfg.adapt_probe_s <= 0:
             raise ValueError("MMA_ADAPT_PROBE_S must be positive")
+        cfg.obs_trace = bool(_env_int("MMA_OBS_TRACE", int(cfg.obs_trace)))
+        cfg.obs_trace_max_spans = _env_int(
+            "MMA_OBS_TRACE_MAX_SPANS", cfg.obs_trace_max_spans
+        )
+        if cfg.obs_trace_max_spans <= 0:
+            raise ValueError("MMA_OBS_TRACE_MAX_SPANS must be positive")
+        cfg.obs_link_completions = _env_int(
+            "MMA_OBS_LINK_COMPLETIONS", cfg.obs_link_completions
+        )
+        if cfg.obs_link_completions <= 0:
+            raise ValueError("MMA_OBS_LINK_COMPLETIONS must be positive")
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:
@@ -603,6 +627,9 @@ ENV_VARS: Dict[str, str] = {
     "adapt_deadline_relay": "MMA_ADAPT_DEADLINE_RELAY",
     "adapt_min_samples": "MMA_ADAPT_MIN_SAMPLES",
     "adapt_probe_s": "MMA_ADAPT_PROBE_S",
+    "obs_trace": "MMA_OBS_TRACE",
+    "obs_trace_max_spans": "MMA_OBS_TRACE_MAX_SPANS",
+    "obs_link_completions": "MMA_OBS_LINK_COMPLETIONS",
 }
 
 # One-line meaning per field (every dataclass field must appear; the
@@ -682,6 +709,11 @@ KNOB_DOCS: Dict[str, str] = {
     "adapt_min_samples": "chunk samples before a link's estimate is trusted",
     "adapt_probe_s":
         "a shed link probes one chunk when its estimate is older than this",
+    "obs_trace":
+        "record flight-recorder spans on orchestrator-owned sim worlds",
+    "obs_trace_max_spans": "span ring-buffer capacity; oldest spans drop",
+    "obs_link_completions":
+        "per-link completion window throughput_gbps() sums over (entries)",
 }
 
 

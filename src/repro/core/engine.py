@@ -14,9 +14,9 @@ two engine instances can share one backend to model concurrent MMA flows
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence
 
+from ..obs import MetricsRegistry
 from .config import MMAConfig
 from .path_selector import LinkWorker, PathSelector, Route
 from .sync_engine import DummyTask, SyncEngine
@@ -33,11 +33,41 @@ from .transfer_task import (
 )
 
 
-@dataclasses.dataclass
 class EngineStats:
-    transfers: int = 0
-    fallback_transfers: int = 0
-    bytes_total: int = 0
+    """Engine-level transfer counters, backed by the engine's metrics
+    registry (``engine.transfers`` / ``engine.fallback_transfers`` /
+    ``engine.bytes``) while keeping the historical attribute surface
+    (``stats.transfers`` etc.) that tests and reports read."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._transfers = self.registry.counter("engine.transfers")
+        self._fallback = self.registry.counter("engine.fallback_transfers")
+        self._bytes = self.registry.counter("engine.bytes")
+
+    @property
+    def transfers(self) -> int:
+        return int(self._transfers.get())
+
+    @transfers.setter
+    def transfers(self, v: int) -> None:
+        self._transfers.set(v)
+
+    @property
+    def fallback_transfers(self) -> int:
+        return int(self._fallback.get())
+
+    @fallback_transfers.setter
+    def fallback_transfers(self, v: int) -> None:
+        self._fallback.set(v)
+
+    @property
+    def bytes_total(self) -> int:
+        return int(self._bytes.get())
+
+    @bytes_total.setter
+    def bytes_total(self, v: int) -> None:
+        self._bytes.set(v)
 
     def snapshot_workers(self, workers) -> Dict[int, Dict[str, float]]:
         return {
@@ -107,14 +137,19 @@ class MMAEngine:
             )
             self.selector.register_worker(w)
             self.workers[dev] = w
-        self.stats = EngineStats()
+        # Unified metrics registry: EngineStats counters, the per-step
+        # ledger, and (at sync_metrics time) the per-worker byte gauges
+        # all live here under ``engine.*`` names.
+        self.metrics = MetricsRegistry()
+        self.stats = EngineStats(self.metrics)
         self._completion_listeners: List[Callable[[TransferTask], None]] = []
         # Per-step wake attribution: decode-batch step tag -> landed
         # transfer count + bytes (tasks without a ``step`` tag are not
         # tracked here). Fed by both completion paths — multipath
         # (``_on_task_complete``) and fallback/zero-byte
         # (``_complete_now``), which bypasses the task manager.
-        self.step_ledger: Dict[int, Dict[str, int]] = {}
+        self._step_transfers = self.metrics.counter("engine.step.transfers")
+        self._step_bytes = self.metrics.counter("engine.step.bytes")
         self.task_manager.add_completion_listener(self._on_task_complete)
 
     def _check_target(self, device: int) -> None:
@@ -131,21 +166,50 @@ class MMAEngine:
     def _record_step(self, task: TransferTask) -> None:
         if task.step is None:
             return
-        rec = self.step_ledger.setdefault(
-            task.step, {"transfers": 0, "bytes": 0}
-        )
-        rec["transfers"] += 1
-        rec["bytes"] += task.nbytes
+        self._step_transfers.inc(step=task.step)
+        self._step_bytes.inc(task.nbytes, step=task.step)
+
+    def _end_task_span(self, task: TransferTask) -> None:
+        if task.span_id:
+            self.backend.tracer.end(task.span_id, self.backend.now())
+            task.span_id = 0
 
     def _on_task_complete(self, task: TransferTask) -> None:
         self._record_step(task)
+        self._end_task_span(task)
         for cb in self._completion_listeners:
             cb(task)
 
     def step_attribution(self) -> Dict[int, Dict[str, int]]:
         """Landed transfers and bytes grouped by decode-batch step tag
-        (see ``TransferTask.step``)."""
-        return {s: dict(rec) for s, rec in sorted(self.step_ledger.items())}
+        (see ``TransferTask.step``), read off the metrics registry."""
+        out: Dict[int, Dict[str, int]] = {}
+        for labels, v in self._step_transfers.items():
+            s = labels["step"]
+            out[s] = {
+                "transfers": int(v),
+                "bytes": int(self._step_bytes.get(step=s)),
+            }
+        return dict(sorted(out.items()))
+
+    def sync_metrics(self) -> MetricsRegistry:
+        """Pull-sync the hot-path worker ledgers (plain attributes, never
+        registry lookups per chunk) into ``engine.worker.*`` gauges, then
+        return the registry — the snapshot surface reports embed."""
+        g = self.metrics.gauge
+        for d, w in self.workers.items():
+            g("engine.worker.bytes").set(w.bytes_total, dev=d)
+            g("engine.worker.chunks").set(w.chunks_direct, dev=d, kind="direct")
+            g("engine.worker.chunks").set(w.chunks_relay, dev=d, kind="relay")
+            g("engine.worker.preempted").set(w.chunks_preempted, dev=d)
+            g("engine.worker.replans").set(w.replans, dev=d)
+            for c, b in w.bytes_by_class.items():
+                g("engine.worker.bytes_by_class").set(
+                    b, dev=d, cls=c.name.lower()
+                )
+            for t, b in w.bytes_by_tenant.items():
+                g("engine.worker.bytes_by_tenant").set(b, dev=d, tenant=t)
+        return self.metrics
 
     # ------------------------------------------------------------------
     # Interception points (paper §3.2)
@@ -171,6 +235,7 @@ class MMAEngine:
             traffic_class=spec.traffic_class, deadline=spec.deadline,
             tenant=spec.tenant, step=spec.step,
             allow_replan=spec.allow_replan, chunk_bytes=spec.chunk_bytes,
+            parent_span=spec.parent_span,
         )
 
     def memcpy_async(
@@ -233,6 +298,7 @@ class MMAEngine:
         task.state = TaskState.COMPLETE
         task.complete_time = self.backend.now()
         self._record_step(task)
+        self._end_task_span(task)
         self.sync_engine.transfer_complete(task)
         for cb in self._completion_listeners:
             cb(task)
@@ -246,6 +312,14 @@ class MMAEngine:
         task.submit_time = self.backend.now()
         self.stats.transfers += 1
         self.stats.bytes_total += task.nbytes
+        tr = self.backend.tracer
+        if tr.enabled:
+            task.span_id = tr.begin(
+                f"task{task.task_id}", "transfer", f"engine:{self.name}",
+                task.submit_time, parent=task.parent_span,
+                nbytes=task.nbytes, direction=task.direction.name,
+                cls=task.traffic_class.name, tenant=task.tenant,
+            )
 
         if task.nbytes == 0:
             # Zero-byte copies split into zero micro-tasks and would never

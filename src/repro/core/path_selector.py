@@ -51,7 +51,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, TYPE_CHECKING
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, TYPE_CHECKING
 
 from .config import MMAConfig
 from .topology import Topology
@@ -92,6 +93,22 @@ class LinkWorker:
         self.backend = backend
         self.config = config
         self.outstanding = 0
+        self._track = f"worker:{dev}"   # flight-recorder timeline row
+        # Snapshot the backend's tracer: workers are built after the
+        # backend, whose tracer is fixed at construction — caching it
+        # saves a property dispatch on the per-chunk completion path.
+        # Chunk completions are the hottest traced event after link
+        # occupancy, so they use the same raw-ring span-source scheme
+        # as ``SimLink``: the hot path appends one tuple, spans
+        # materialize at collection time.
+        self._tracer = backend.tracer
+        if self._tracer.enabled:
+            self._chunk_ring: Optional[Deque[tuple]] = deque(
+                maxlen=config.obs_link_completions
+            )
+            self._tracer.add_source(self._chunk_spans)
+        else:
+            self._chunk_ring = None
         self.nominal_rate = nominal_rate_gbps * (1 << 30)
         self.ewma_service: Optional[float] = None   # sec/byte
         # Best (fastest) observed per-byte service time — the worker's
@@ -210,10 +227,29 @@ class LinkWorker:
         self.chunks_preempted += 1
         self._inflight.pop(id(mt), None)
 
+    def _chunk_spans(self, tracer) -> List:
+        """Materialize the chunk-completion ring into ``chunk`` spans
+        (parented on the owning transfer-task span). Called lazily by
+        the tracer at ``all_spans()`` time."""
+        from ..obs import Span
+
+        track = self._track
+        return [
+            Span(tracer.next_id(), parent, "chunk", "chunk", track,
+                 t0, t1, {"nbytes": nbytes, "seq": seq})
+            for (t0, t1, parent, nbytes, seq) in (self._chunk_ring or ())
+        ]
+
     def _on_chunk_done(self, mt: MicroTask, t0: float) -> None:
         self._inflight.pop(id(mt), None)
         self.outstanding -= 1
-        dt = self.backend.now() - t0
+        now = self.backend.now()
+        ring = self._chunk_ring
+        if ring is not None:
+            ring.append(
+                (t0, now, mt.parent.span_id or None, mt.nbytes, mt.seq)
+            )
+        dt = now - t0
         if dt > 0 and mt.nbytes > 0:
             per_byte = dt / mt.nbytes
             a = self.config.ewma_alpha
@@ -378,6 +414,15 @@ class PathSelector:
                 worker.preempt_inflight(mt, route, cls_at_pull)
                 self.queue.requeue(mt, cls_at_pull=cls_at_pull)
                 n += 1
+                tr = worker.backend.tracer
+                if tr.enabled:
+                    tr.instant(
+                        "preempt", "preempt", f"worker:{dev}",
+                        worker.backend.now(),
+                        parent=mt.parent.span_id or None,
+                        chunk=mt.seq, task=mt.parent.task_id,
+                        cls=cls.name, tenant=mt.tenant,
+                    )
         return n
 
     # -- online adaptation (tentpole: live estimates drive the plan) -----
@@ -425,6 +470,13 @@ class PathSelector:
                 self.queue.requeue(mt, cls_at_pull=cls_at_pull)
                 n += 1
         worker.chunks_replanned += n
+        tr = worker.backend.tracer
+        if tr.enabled:
+            tr.instant(
+                "replan", "replan", f"worker:{worker.dev}",
+                worker.backend.now(),
+                est_gbps=est / (1 << 30), chunks_recalled=n,
+            )
         return n
 
     def adaptive_chunk_bytes(self, task) -> Optional[int]:
@@ -485,7 +537,16 @@ class PathSelector:
         if not self.config.qos_enabled or self.backend is None:
             return
         now = self.backend.now()
-        self.task_manager.escalate_at_risk(now)
+        promoted = self.task_manager.escalate_at_risk(now)
+        if promoted:
+            tr = self.backend.tracer
+            if tr.enabled:
+                for task in promoted:
+                    tr.instant(
+                        "escalate", "escalate", "engine:qos", now,
+                        parent=task.span_id or None,
+                        task=task.task_id, tenant=task.tenant,
+                    )
         if (
             self.config.qos_background_pause
             and self.task_manager.deadline_pressure(now)

@@ -17,16 +17,24 @@ import itertools
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple
 
+from ..obs import BinnedTimeline, current_tracer
+
 GB = 1 << 30
 
 
 class SimWorld:
-    """Virtual clock + event heap."""
+    """Virtual clock + event heap.
+
+    Every world snapshots the default flight-recorder tracer
+    (``repro.obs.current_tracer()``) at construction; components on the
+    world's clock read ``world.tracer`` to emit spans (the default is
+    the null tracer — one attribute load and a dead branch)."""
 
     def __init__(self) -> None:
         self.now: float = 0.0
         self._heap: List[Tuple[float, int, Callable[[], None]]] = []
         self._seq = itertools.count()
+        self.tracer = current_tracer()
 
     def at(self, t: float, fn: Callable[[], None]) -> None:
         heapq.heappush(self._heap, (t, next(self._seq), fn))
@@ -140,6 +148,7 @@ class SimLink:
         name: str,
         rate_gbps: float,
         slots: int = 1,
+        completions_window: int = 65536,
     ) -> None:
         self.world = world
         self.name = name
@@ -157,8 +166,26 @@ class SimLink:
         # stats
         self.bytes_done = 0
         self.busy_time = 0.0
-        self.completions: List[Completion] = []
+        # Bounded running window of recent completions (oldest age out),
+        # plus a binned flow timeline — so a million-request trace can
+        # keep per-link bandwidth observability at O(window) memory
+        # instead of one record per chunk forever.
+        self.completions: Deque[Completion] = deque(maxlen=completions_window)
         self.record_completions = False
+        self.flow = BinnedTimeline()
+        # Flight-recorder occupancy intervals: when the world's tracer
+        # records, each chunk service appends one raw (t0, t1, nbytes,
+        # tag) tuple to a bounded ring that materializes into "link"
+        # spans at collection time (a Tracer span source) — the hot
+        # path never pays a per-event tracer call.
+        tr = world.tracer
+        if tr.enabled:
+            self._occ: Optional[Deque[tuple]] = deque(
+                maxlen=completions_window
+            )
+            tr.add_source(self._occupancy_spans)
+        else:
+            self._occ = None
 
     # ------------------------------------------------------------------
     def submit(
@@ -207,12 +234,15 @@ class SimLink:
 
             def finish(nbytes=nbytes, dt=dt, on_done=on_done, hold=hold,
                        grant=grant, tag=tag) -> None:
+                now = self.world.now
                 self.bytes_done += nbytes
                 self.busy_time += dt
                 if self.record_completions:
-                    self.completions.append(
-                        Completion(self.world.now, nbytes, tag)
-                    )
+                    self.completions.append(Completion(now, nbytes, tag))
+                    self.flow.add(now, nbytes)
+                occ = self._occ
+                if occ is not None:
+                    occ.append((now - dt, now, nbytes, tag))
                 if not hold:
                     grant.release()
                 on_done(grant)
@@ -223,9 +253,26 @@ class SimLink:
         self._busy -= 1
         self._try_start()
 
+    def _occupancy_spans(self, tracer) -> List:
+        """Materialize the occupancy ring into ``link`` spans (one per
+        chunk service, covering exactly [service start, completion] so
+        the link's track renders its true utilization). Called lazily
+        by the tracer at ``all_spans()`` time."""
+        from ..obs import Span
+
+        track = f"link:{self.name}"
+        return [
+            Span(tracer.next_id(), None, tag or "chunk", "link", track,
+                 t0, t1, {"nbytes": nbytes})
+            for (t0, t1, nbytes, tag) in (self._occ or ())
+        ]
+
     # ------------------------------------------------------------------
     def throughput_gbps(self, t0: float, t1: float) -> float:
-        """Observed throughput over [t0, t1] from recorded completions."""
+        """Observed throughput over [t0, t1] from the bounded completion
+        window (completions older than ``completions_window`` entries
+        have aged out; use ``flow`` — the binned timeline — for
+        whole-run series)."""
         b = sum(c.nbytes for c in self.completions if t0 <= c.time < t1)
         return b / max(t1 - t0, 1e-12) / GB
 
@@ -293,33 +340,44 @@ def submit_path(
 
 
 class FlowRecorder:
-    """Windowed bandwidth timeline for one logical flow (Fig 9)."""
+    """Windowed bandwidth timeline for one logical flow (Fig 9).
+
+    Incremental: ``total_bytes`` is a running O(1) counter, and
+    ``timeline`` bins events into a ``repro.obs.BinnedTimeline`` as
+    they arrive (one timeline per requested window width, fed only the
+    events recorded since that window's last call) — neither re-walks
+    the full event list per call."""
 
     def __init__(self, world: SimWorld) -> None:
         self.world = world
         self.events: List[Tuple[float, int]] = []
+        self._total = 0
+        # window width -> (timeline, number of events already binned)
+        self._timelines: Dict[float, Tuple[BinnedTimeline, int]] = {}
 
     def record(self, nbytes: int) -> None:
         self.events.append((self.world.now, nbytes))
+        self._total += nbytes
 
     def total_bytes(self) -> int:
-        return sum(n for _, n in self.events)
+        return self._total
 
     def timeline(self, window: float, t_end: Optional[float] = None):
-        """Return [(t_mid, GB/s), ...] over fixed windows."""
+        """Return [(t_mid, GB/s), ...] over fixed windows from t=0."""
         if not self.events:
             return []
+        tl, done = self._timelines.get(window) or (BinnedTimeline(window), 0)
+        for t, n in self.events[done:]:
+            tl.add(t, n)
+        self._timelines[window] = (tl, len(self.events))
         end = t_end if t_end is not None else self.events[-1][0]
         out = []
         t = 0.0
-        i = 0
+        b = 0
         while t < end:
-            b = 0
-            while i < len(self.events) and self.events[i][0] < t + window:
-                b += self.events[i][1]
-                i += 1
-            out.append((t + window / 2, b / window / GB))
+            out.append((t + window / 2, tl.bin(b) / window / GB))
             t += window
+            b += 1
         return out
 
 

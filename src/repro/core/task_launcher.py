@@ -22,6 +22,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..obs import NULL_TRACER
 from .config import MMAConfig
 from .path_selector import Route
 from .simlink import PreemptHandle, SimLink, SimWorld, submit_path
@@ -34,6 +35,13 @@ class Backend:
 
     def now(self) -> float:
         raise NotImplementedError
+
+    @property
+    def tracer(self):
+        """Flight-recorder tracer for this backend's clock domain (the
+        null tracer unless the backend carries one — the simulator
+        exposes its world's)."""
+        return NULL_TRACER
 
     def launch(
         self, mt: MicroTask, route: Route, on_done: Callable[[], None]
@@ -60,7 +68,10 @@ class SimBackend(Backend):
         self.topology = topology
         self.config = config
         t = topology
-        mk = lambda name, rate, slots=1: SimLink(world, name, rate, slots)
+        mk = lambda name, rate, slots=1: SimLink(
+            world, name, rate, slots,
+            completions_window=config.obs_link_completions,
+        )
         self.dram: Dict[int, SimLink] = {
             s: mk(f"dram{s}", t.dram_gbps, slots=4) for s in t.numa_nodes()
         }
@@ -152,6 +163,10 @@ class SimBackend(Backend):
     # ------------------------------------------------------------------
     def now(self) -> float:
         return self.world.now
+
+    @property
+    def tracer(self):
+        return self.world.tracer
 
     def stages_for(
         self, route: Route, direction: Direction

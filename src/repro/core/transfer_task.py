@@ -118,6 +118,11 @@ class TransferSpec:
     # Per-transfer chunk-size override; None = the engine's (possibly
     # congestion-adaptive) chunk size.
     chunk_bytes: Optional[int] = None
+    # ---- observability ----
+    # Causal parent for flight-recorder tracing: the span id this
+    # transfer's own span (and its chunk spans) nest under — e.g. a
+    # serving request's root span. None = a root-level transfer.
+    parent_span: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.chunk_bytes is not None and self.chunk_bytes <= 0:
@@ -204,6 +209,12 @@ class TransferTask:
     # chunk-size override consumed by TaskManager.split.
     allow_replan: bool = True
     chunk_bytes: Optional[int] = None
+    # Flight-recorder causality: ``parent_span`` is the caller-supplied
+    # span this transfer nests under (from TransferSpec.parent_span);
+    # ``span_id`` is the transfer's own open span, stamped by the engine
+    # at activation (0 = untraced).
+    parent_span: Optional[int] = None
+    span_id: int = 0
     task_id: int = dataclasses.field(default_factory=lambda: next(_task_ids))
     state: TaskState = TaskState.RECORDED
     # Host/device payload handles — opaque to the scheduler; the functional

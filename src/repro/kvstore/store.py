@@ -56,6 +56,7 @@ import numpy as np
 
 from ..core import Direction, TrafficClass, TransferSpec
 from ..core.config import MMAConfig
+from ..obs import NULL_TRACER, MetricsRegistry
 from .radix import Page, RadixPrefixIndex
 from .tiers import GB, PinnedSlabPool, Tier, TierCounters
 
@@ -82,6 +83,9 @@ class FetchSpec:
     deadline: Optional[float] = None
     tenant: Optional[str] = None
     step: Optional[int] = None
+    # Flight-recorder causality: span the resulting transfer task should
+    # parent under (e.g. a serving request's root span).
+    parent_span: Optional[int] = None
 
 
 def _merge_spec(
@@ -150,12 +154,20 @@ class TierManager:
             if pageable_bytes is None else pageable_bytes
         )
         self.tier_bytes: Dict[Tier, int] = {t: 0 for t in Tier}
-        self.counters = TierCounters()
+        # Unified metrics registry: all TierCounters cells live here
+        # under ``kvstore.*`` names.
+        self.metrics = MetricsRegistry()
+        self.counters = TierCounters(self.metrics)
         # Transfer-ownership ledger: DMA bytes this store moved, keyed by
         # the *engine* that carried them (cross-engine reads go through
         # the consumer's own links and must not be billed to the
         # producer).
         self.bytes_by_owner: Dict[str, int] = {}
+
+    def _tracer(self, engine=None):
+        be = getattr(engine if engine is not None else self.engine,
+                     "backend", None)
+        return be.tracer if be is not None else NULL_TRACER
 
     def _owner_of(self, engine) -> str:
         return getattr(engine, "name", None) or "engine"
@@ -251,6 +263,7 @@ class TierManager:
         pin: Optional[Callable[[List[Page]], None]] = None,
         unpin: Optional[Callable[[List[Page]], None]] = None,
         prefer_pinned: bool = True,
+        parent_span: Optional[int] = None,
     ) -> List[object]:
         """GPU -> host demotion, batched: up to
         ``kvstore_writeback_batch_pages`` pages coalesce into one
@@ -269,23 +282,31 @@ class TierManager:
                 nbytes += extra_bytes     # e.g. an SSM state snapshot
             if pin is not None:
                 pin(batch)
+            t0 = self.engine.backend.now()
             task = self.engine.memcpy(
                 nbytes, device=self.target, direction=Direction.D2H,
                 spec=TransferSpec(
                     traffic_class=traffic_class, deadline=deadline,
-                    tenant=tenant,
+                    tenant=tenant, parent_span=parent_span,
                 ),
             )
             self.counters.writebacks += 1
             self.counters.writeback_bytes += nbytes
             self._charge_owner(self.engine, nbytes)
 
-            def landed(batch=batch) -> None:
+            def landed(batch=batch, t0=t0, nbytes=nbytes) -> None:
                 protect = {id(p) for p in batch}
                 for p in batch:
                     self.land(p, protect, prefer_pinned=prefer_pinned)
                 if unpin is not None:
                     unpin(batch)
+                tr = self._tracer()
+                if tr.enabled:
+                    tr.complete(
+                        "writeback", "kvstore", "kvstore",
+                        t0, self.engine.backend.now(),
+                        parent=parent_span, nbytes=nbytes, pages=len(batch),
+                    )
 
             _when_done(task, landed)
             tasks.append(task)
@@ -302,6 +323,7 @@ class TierManager:
         engine=None,
         target: Optional[int] = None,
         step: Optional[int] = None,
+        parent_span: Optional[int] = None,
     ) -> Tuple[object, float]:
         """Host -> GPU promotion of a prefix hit. Pageable pages are
         staged into pinned slabs first (returned ``staged_s``, charged at
@@ -327,8 +349,15 @@ class TierManager:
 
         staged = by_tier[Tier.PAGEABLE]
         staged_s = staged / (self.config.kvstore_pageable_gbps * GB)
+        tr = self._tracer(engine)
         if staged:
             self.counters.staged_bytes += staged
+            if tr.enabled:
+                tr.instant(
+                    "stage", "kvstore", "kvstore", engine.backend.now(),
+                    parent=parent_span, nbytes=staged, staged_s=staged_s,
+                )
+            promoted = 0
             if self.config.kvstore_promote_on_hit:
                 protect = {id(p) for p in pages}
                 for p in pages:
@@ -340,6 +369,12 @@ class TierManager:
                         self._set_tier(p, Tier.PINNED)
                         self.counters.promotions += 1
                         self.counters.promoted_bytes += p.nbytes
+                        promoted += p.nbytes
+            if promoted and tr.enabled:
+                tr.instant(
+                    "promote", "kvstore", "kvstore", engine.backend.now(),
+                    parent=parent_span, nbytes=promoted,
+                )
 
         # GPU-tier pages (writeback still in flight) are already on the
         # device — they cost no wire time at all. That shortcut only
@@ -358,7 +393,7 @@ class TierManager:
             spec=TransferSpec(
                 traffic_class=traffic_class,
                 deadline=None if deadline is None else deadline - staged_s,
-                tenant=tenant, step=step,
+                tenant=tenant, step=step, parent_span=parent_span,
             ),
         )
         self._charge_owner(engine, dma_bytes)
@@ -454,6 +489,7 @@ class TieredKVStore:
         traffic_class: TrafficClass = TrafficClass.BACKGROUND,
         deadline: Optional[float] = None,
         prefer_pinned: bool = True,
+        parent_span: Optional[int] = None,
     ) -> Tuple[str, List[object]]:
         """Store every complete page of ``tokens``; only pages not already
         host-resident move (dedup is the radix win — a re-offloaded shared
@@ -471,7 +507,7 @@ class TieredKVStore:
                 direction=Direction.D2H,
                 spec=TransferSpec(
                     traffic_class=traffic_class, deadline=deadline,
-                    tenant=tenant,
+                    tenant=tenant, parent_span=parent_span,
                 ),
             )
             return "", [task]
@@ -495,7 +531,7 @@ class TieredKVStore:
             fresh, extra_bytes=extra_bytes,
             traffic_class=traffic_class, deadline=deadline, tenant=tenant,
             pin=self.index.pin, unpin=self.index.unpin,
-            prefer_pinned=prefer_pinned,
+            prefer_pinned=prefer_pinned, parent_span=parent_span,
         )
         return last.key, tasks
 
@@ -535,6 +571,7 @@ class TieredKVStore:
         engine: Any = _UNSET,
         target: Any = _UNSET,
         step: Any = _UNSET,
+        parent_span: Any = _UNSET,
     ) -> Tuple[int, Optional[object], Any, float]:
         """Fetch the longest prefix hit back to the device. Returns
         ``(hit_tokens, task, payload, staged_s)``; the payload rides only
@@ -546,6 +583,7 @@ class TieredKVStore:
         p = _merge_spec(
             "fetch", spec, tenant=tenant, traffic_class=traffic_class,
             deadline=deadline, engine=engine, target=target, step=step,
+            parent_span=parent_span,
         )
         tenant_v = p["tenant"] if p["tenant"] is not None else "default"
         hit, pages = self.match(tokens, exact_only=exact_only)
@@ -563,6 +601,7 @@ class TieredKVStore:
             tenant=tenant_v,
             pin=self.index.pin, unpin=self.index.unpin,
             engine=p["engine"], target=p["target"], step=p["step"],
+            parent_span=p["parent_span"],
         )
         last = pages[-1]
         payload = last.payload if last.terminal else None
@@ -576,6 +615,7 @@ class TieredKVStore:
         payload: Any = None,
         traffic_class: TrafficClass = TrafficClass.THROUGHPUT,
         deadline: Optional[float] = None,
+        parent_span: Optional[int] = None,
     ) -> Tuple[Optional[KVHandle], List[object]]:
         """Producer-side half of a KV handoff: store ``tokens``' pages
         (dedup applies — shared prefixes cost zero wire bytes) and
@@ -591,6 +631,7 @@ class TieredKVStore:
             tokens, tenant=tenant, payload=payload,
             traffic_class=traffic_class, deadline=deadline,
             prefer_pinned=self.config.disagg_publish_pinned,
+            parent_span=parent_span,
         )
         if not key:
             return None, tasks          # sub-page sequence: nothing to hand off
@@ -676,6 +717,7 @@ class TieredKVStore:
         deadline: Any = _UNSET,
         tenant: Any = _UNSET,
         step: Any = _UNSET,
+        parent_span: Any = _UNSET,
     ) -> Tuple[object, float]:
         """Consumer-side half of the handoff: move the leased pages to
         ``target`` through ``engine`` (defaults: the store's own — the
@@ -695,7 +737,7 @@ class TieredKVStore:
         p = _merge_spec(
             "fetch_leased", spec, engine=engine, target=target,
             traffic_class=traffic_class, deadline=deadline, tenant=tenant,
-            step=step,
+            step=step, parent_span=parent_span,
         )
         task, staged_s = self.tiers.fetch(
             lease.pages,
@@ -708,6 +750,7 @@ class TieredKVStore:
             engine=p["engine"],
             target=p["target"],
             step=p["step"],
+            parent_span=p["parent_span"],
         )
         lease.bytes_fetched += task.nbytes
         lease.fetches += 1
@@ -810,6 +853,13 @@ class TieredKVStore:
             self.tiers.counters.evictions += 1
             self.tiers.counters.evicted_bytes += victim.nbytes
             freed += victim.nbytes
+        if freed:
+            tr = self.tiers._tracer()
+            if tr.enabled:
+                tr.instant(
+                    "evict", "kvstore", "kvstore",
+                    self.engine.backend.now(), nbytes=freed, tenant=tenant,
+                )
         return freed
 
     # -- stats ----------------------------------------------------------

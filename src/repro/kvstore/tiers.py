@@ -25,9 +25,10 @@ Accounting invariants (property-tested in ``tests/test_kvstore.py``):
 """
 from __future__ import annotations
 
-import dataclasses
 import enum
-from typing import Dict
+from typing import Dict, Iterator, Optional, Tuple
+
+from ..obs import Counter, MetricsRegistry
 
 GB = 1 << 30
 
@@ -100,41 +101,76 @@ class PinnedSlabPool:
         assert self.allocated_bytes >= 0, "pinned double-free"
 
 
-@dataclasses.dataclass
-class TierCounters:
-    """Per-tier hit/byte accounting surfaced through the orchestrator."""
+class _TierCells:
+    """Dict-like view over one labeled counter's per-tier cells, keeping
+    the historical ``counters.hits[tier] += 1`` mutation idiom while the
+    storage lives in the metrics registry."""
 
-    hits: Dict[Tier, int] = dataclasses.field(
-        default_factory=lambda: {t: 0 for t in Tier}
+    def __init__(self, counter: Counter) -> None:
+        self._c = counter
+
+    def __getitem__(self, tier: Tier) -> int:
+        return int(self._c.get(tier=tier.name.lower()))
+
+    def __setitem__(self, tier: Tier, value: int) -> None:
+        self._c.set(value, tier=tier.name.lower())
+
+    def items(self) -> Iterator[Tuple[Tier, int]]:
+        for t in Tier:
+            yield t, self[t]
+
+
+class TierCounters:
+    """Per-tier hit/byte accounting surfaced through the orchestrator —
+    registry-backed (``kvstore.*`` names) behind the historical attribute
+    surface (``counters.misses += 1``, ``counters.hits[tier] += 1``)."""
+
+    _SCALARS = (
+        "misses",
+        "promotions",           # pageable -> pinned
+        "promoted_bytes",
+        "spills",               # pinned -> pageable (capacity pressure)
+        "spilled_bytes",
+        "writebacks",           # GPU -> host transfers issued
+        "writeback_bytes",
+        "staged_bytes",         # pageable bytes staged before DMA
+        "evictions",
+        "evicted_bytes",
     )
-    hit_bytes: Dict[Tier, int] = dataclasses.field(
-        default_factory=lambda: {t: 0 for t in Tier}
-    )
-    misses: int = 0
-    promotions: int = 0          # pageable -> pinned
-    promoted_bytes: int = 0
-    spills: int = 0              # pinned -> pageable (capacity pressure)
-    spilled_bytes: int = 0
-    writebacks: int = 0          # GPU -> host transfers issued
-    writeback_bytes: int = 0
-    staged_bytes: int = 0        # pageable bytes staged before DMA
-    evictions: int = 0
-    evicted_bytes: int = 0
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:
+        reg = registry if registry is not None else MetricsRegistry()
+        object.__setattr__(self, "registry", reg)
+        object.__setattr__(
+            self, "_cells",
+            {name: reg.counter(f"kvstore.{name}") for name in self._SCALARS},
+        )
+        object.__setattr__(
+            self, "hits", _TierCells(reg.counter("kvstore.hits"))
+        )
+        object.__setattr__(
+            self, "hit_bytes", _TierCells(reg.counter("kvstore.hit_bytes"))
+        )
+
+    def __getattr__(self, name: str):
+        cells = object.__getattribute__(self, "_cells")
+        if name in cells:
+            return int(cells[name].get())
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in self._SCALARS:
+            self._cells[name].set(value)
+        else:
+            object.__setattr__(self, name, value)
 
     def as_dict(self) -> Dict:
-        return {
+        out: Dict = {
             "hits": {t.name.lower(): n for t, n in self.hits.items()},
             "hit_bytes": {
                 t.name.lower(): n for t, n in self.hit_bytes.items()
             },
-            "misses": self.misses,
-            "promotions": self.promotions,
-            "promoted_bytes": self.promoted_bytes,
-            "spills": self.spills,
-            "spilled_bytes": self.spilled_bytes,
-            "writebacks": self.writebacks,
-            "writeback_bytes": self.writeback_bytes,
-            "staged_bytes": self.staged_bytes,
-            "evictions": self.evictions,
-            "evicted_bytes": self.evicted_bytes,
         }
+        for name in self._SCALARS:
+            out[name] = getattr(self, name)
+        return out

@@ -20,5 +20,11 @@ from .kv_cache import (
 )
 from .orchestrator import ModelInstance, Orchestrator, ServedRequest
 from .report import ServingReport, slo_summary
-from .scheduler import ChunkedPrefillPlanner, DecodeRouter, Request, Scheduler
+from .scheduler import (
+    ChunkedPrefillPlanner,
+    DecodeRouter,
+    RejectReason,
+    Request,
+    Scheduler,
+)
 from .weight_manager import TransferReport, WeightManager

@@ -68,6 +68,10 @@ class BatchSeq:
     # sequences — no byte is attributed to two sequences or to none.
     kv_token_steps: int = 0
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # Sim time the first step that served this sequence began — the
+    # boundary between batch-join wait and decode compute in the TTFT
+    # critical-path decomposition.
+    first_served_at: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -124,6 +128,16 @@ class DecodeBatch:
         self.peak_active = 0
         self.first_step_start: Optional[float] = None
         self.last_step_end = 0.0
+        # Flight-recorder step intervals: raw (t0, t1, step, served)
+        # tuples in a bounded ring, materialized into "decode" spans at
+        # collection time (a Tracer span source) — same cheap-hot-path
+        # scheme as SimLink occupancy.
+        tr = world.tracer
+        if tr.enabled:
+            self._step_ring: Optional[Deque[tuple]] = deque(maxlen=65536)
+            tr.add_source(self._step_spans)
+        else:
+            self._step_ring = None
 
     # -- occupancy / slack -------------------------------------------------
     @property
@@ -214,6 +228,8 @@ class DecodeBatch:
         for seq in served:
             ctx_total += seq.context_tokens
             seq.kv_token_steps += seq.context_tokens
+            if seq.first_served_at is None:
+                seq.first_served_at = self.world.now
         self.packed_kv_tokens += ctx_total
         self.padded_kv_tokens += len(served) * max(
             s.context_tokens for s in served
@@ -223,8 +239,23 @@ class DecodeBatch:
         self._last_step_s = step_s
         self.world.after(step_s, lambda: self._end_step(served, step_s))
 
+    def _step_spans(self, tracer) -> List:
+        """Materialize the step ring into ``decode`` spans. Called
+        lazily by the tracer at ``all_spans()`` time."""
+        from ..obs import Span
+
+        track = f"batch:{self.name}"
+        return [
+            Span(tracer.next_id(), None, "step", "decode", track, t0, t1,
+                 {"step": step, "served": served, "packed": self.packed})
+            for (t0, t1, step, served) in (self._step_ring or ())
+        ]
+
     def _end_step(self, served: List[BatchSeq], step_s: float) -> None:
         now = self.world.now
+        ring = self._step_ring
+        if ring is not None:
+            ring.append((now - step_s, now, self.step_index, len(served)))
         self.steps += 1
         self.busy_s += step_s
         self.max_step_s = max(self.max_step_s, step_s)

@@ -43,6 +43,7 @@ the continuous-batching tokens/sec win at equal delivered bytes.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -55,13 +56,16 @@ from ..core.task_launcher import SimBackend
 from ..core.topology import Topology, h20_server
 from ..kvstore import FetchSpec, KVHandle, PageLease, TieredKVStore
 from ..kvstore.store import _when_done as _after
+from ..obs import Tracer, aggregate_attribution
 from .batching import BatchSeq, DecodeBatch
 from .engine import LatencyModel
 from .kv_cache import kv_bytes_per_token
 from .report import ServingReport, slo_summary
-from .scheduler import ChunkedPrefillPlanner, DecodeRouter
+from .scheduler import ChunkedPrefillPlanner, DecodeRouter, RejectReason
 
 OVERHEAD_S = 0.030          # tokenizer/scheduler/sampling constant
+
+_disagg_req_ids = itertools.count()
 
 
 @dataclasses.dataclass(eq=False)
@@ -72,6 +76,9 @@ class DisaggRequest:
     arrival: float
     tenant: str = "default"
     new_tokens: int = 64
+    req_id: int = dataclasses.field(
+        default_factory=lambda: next(_disagg_req_ids)
+    )
     # Absolute TTFT deadline (shared world clock). None = best-effort:
     # the handoff then carries arrival + disagg_handoff_budget_s as its
     # engine deadline so EDF still orders it, but admission never
@@ -79,7 +86,7 @@ class DisaggRequest:
     deadline: Optional[float] = None
     # filled by the orchestrator
     state: str = "waiting"   # waiting|prefill|handoff|decoding|done|rejected
-    reject_reason: Optional[str] = None
+    reject_reason: Optional[RejectReason] = None
     prefill_start: float = 0.0
     prefill_fetch_s: float = 0.0
     prefix_hit_tokens: int = 0
@@ -92,6 +99,14 @@ class DisaggRequest:
     first_token_time: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)
     finish: float = 0.0
+    # TTFT critical-path bookkeeping: lifecycle boundary timestamps (each
+    # recorded once, when its event fires — consecutive marks share the
+    # exact float, so phase durations telescope to measured TTFT) and
+    # the derived per-phase decomposition (``repro.obs.attribution``
+    # phase names -> seconds), filled at first-token time.
+    marks: Dict[str, float] = dataclasses.field(default_factory=dict)
+    attribution: Dict[str, float] = dataclasses.field(default_factory=dict)
+    span_id: int = 0                  # root "request" span (0 = untraced)
 
     @property
     def ttft(self) -> float:
@@ -161,6 +176,10 @@ class DisaggOrchestrator:
 
         prefill_devs, decode_devs = self._resolve_slices(topo, cfg)
         self.world = SimWorld()
+        if cfg.obs_trace:
+            # orchestrator-owned world: turn the flight recorder on for
+            # every component built on it (links, engines, batches)
+            self.world.tracer = Tracer(max_spans=cfg.obs_trace_max_spans)
         self.backend = SimBackend(self.world, topo, cfg)
         self.prefill_engine = MMAEngine(
             topo, self.backend, cfg, devices=prefill_devs, name="prefill"
@@ -267,6 +286,15 @@ class DisaggOrchestrator:
         return requests
 
     def _arrive(self, req: DisaggRequest) -> None:
+        req.marks["arrival"] = self.world.now
+        tr = self.world.tracer
+        if tr.enabled:
+            req.span_id = tr.begin(
+                f"req{req.req_id}", "request", f"req:{req.req_id}",
+                self.world.now,
+                tenant=req.tenant, n_tokens=len(req.tokens),
+                new_tokens=req.new_tokens,
+            )
         self._prefill_queue.append(req)
         self._pump_prefill()
 
@@ -278,16 +306,20 @@ class DisaggOrchestrator:
         self._fetch_busy = True
         req.state = "prefill"
         req.prefill_start = self.world.now
+        req.marks["fetch_start"] = self.world.now
         hit, task, _payload, staged_s = self.store.fetch(
             req.tokens, tenant=req.tenant,
             traffic_class=TrafficClass.LATENCY, deadline=req.deadline,
+            parent_span=req.span_id or None,
         )
         req.prefix_hit_tokens = hit
 
         def fetched() -> None:
             req.prefill_fetch_s = staged_s + (task.elapsed if hit else 0.0)
+            req.marks["wire_done"] = self.world.now
 
             def staged() -> None:
+                req.marks["staged"] = self.world.now
                 suffix = max(len(req.tokens) - hit, 1)
                 req.prefill_chunks = self.planner.add(req, suffix)
                 if not self._hold_fetch_lane:
@@ -316,7 +348,19 @@ class DisaggOrchestrator:
             chunk["n_tokens"],
             kv_context=req.prefix_hit_tokens + chunk["done_before"],
         )
-        self.world.after(compute_s, lambda: self._chunk_done(req, chunk))
+        t0 = self.world.now
+
+        def done() -> None:
+            tr = self.world.tracer
+            if tr.enabled:
+                tr.complete(
+                    "prefill_chunk", "prefill", "engine:prefill",
+                    t0, self.world.now, parent=req.span_id or None,
+                    n_tokens=chunk["n_tokens"], req=req.req_id,
+                )
+            self._chunk_done(req, chunk)
+
+        self.world.after(compute_s, done)
 
     def _chunk_done(self, req: DisaggRequest, chunk: Dict) -> None:
         """One chunk's KV is computed: publish it to the shared store.
@@ -339,6 +383,7 @@ class DisaggOrchestrator:
             tokens, tenant=req.tenant,
             traffic_class=traffic_class,
             deadline=self._handoff_deadline(req),
+            parent_span=req.span_id or None,
         )
         state = self._pub.setdefault(
             req, {"left": 0, "final": False, "handle": None, "sent": False}
@@ -346,6 +391,7 @@ class DisaggOrchestrator:
         state["left"] += len(tasks)
         if is_last:
             req.prefill_done = self.world.now
+            req.marks["prefill_done"] = self.world.now
             state["final"] = True
             state["handle"] = handle
             if self._hold_fetch_lane:
@@ -370,6 +416,7 @@ class DisaggOrchestrator:
         state["sent"] = True
         del self._pub[req]
         req.publish_landed = self.world.now
+        req.marks["publish_landed"] = self.world.now
         self._handoff(req, state["handle"])
 
     def _handoff_deadline(self, req: DisaggRequest) -> float:
@@ -401,12 +448,30 @@ class DisaggOrchestrator:
             occupancy=batch.occupancy,
             wait_estimate_s=batch.estimated_wait_s(),
         )
+        tr = self.world.tracer
         if reason is not None:
             if lease is not None:
                 self.store.release_lease(lease)
             req.state = "rejected"
             req.reject_reason = reason
+            if tr.enabled:
+                tr.instant(
+                    "reject", "admission", f"req:{req.req_id}",
+                    self.world.now, parent=req.span_id or None,
+                    reason=reason.value, engine=engine.name,
+                )
+                if req.span_id:
+                    tr.end(
+                        req.span_id, self.world.now,
+                        state="rejected", reject_reason=reason.value,
+                    )
+                    req.span_id = 0
             return
+        if tr.enabled:
+            tr.instant(
+                "admit", "admission", f"req:{req.req_id}", self.world.now,
+                parent=req.span_id or None, engine=engine.name,
+            )
         req.decode_engine = engine.name
         if lease is not None:
             lease.owner = engine.name
@@ -426,6 +491,7 @@ class DisaggOrchestrator:
                     deadline=self._handoff_deadline(req),
                     tenant=req.tenant,
                     step=batch.step_index,
+                    parent_span=req.span_id or None,
                 ),
             )
             req.handoff_bytes = task.nbytes
@@ -440,6 +506,7 @@ class DisaggOrchestrator:
                     deadline=self._handoff_deadline(req),
                     tenant=req.tenant,
                     step=batch.step_index,
+                    parent_span=req.span_id or None,
                 ),
             )
             staged_s = 0.0
@@ -447,6 +514,7 @@ class DisaggOrchestrator:
 
         def fetched() -> None:
             req.handoff_fetch_s = task.elapsed + staged_s
+            req.marks["handoff_wire_done"] = self.world.now
             seq = BatchSeq(
                 context_tokens=len(req.tokens),
                 new_tokens=max(req.new_tokens, 1),
@@ -455,7 +523,12 @@ class DisaggOrchestrator:
                 on_token=lambda s: self._on_token(req, s),
                 on_done=lambda s: self._on_done(req, s),
             )
-            self.world.after(staged_s, lambda: batch.admit(seq))
+
+            def admit_seq() -> None:
+                req.marks["handoff_staged"] = self.world.now
+                batch.admit(seq)
+
+            self.world.after(staged_s, admit_seq)
 
         _after(task, fetched)
 
@@ -464,6 +537,62 @@ class DisaggOrchestrator:
         req.token_times.append(now)
         if seq.emitted == 1:
             req.first_token_time = now + OVERHEAD_S
+            m = req.marks
+            m["first_step_start"] = (
+                seq.first_served_at
+                if seq.first_served_at is not None else now
+            )
+            m["first_token_emit"] = now
+            m["first_token"] = req.first_token_time
+            req.attribution = self._ttft_phases(req)
+            if self.world.tracer.enabled and req.span_id:
+                self._emit_request_spans(req)
+
+    # Lifecycle marks in order; each phase runs from the previous mark to
+    # its own (a missing mark contributes a zero-length phase). Because
+    # consecutive phases share the exact float, the durations telescope
+    # to ``first_token - arrival`` — measured TTFT — with no residue.
+    _PHASE_MARKS = (
+        ("queue_wait", "fetch_start"),
+        ("prefix_fetch", "wire_done"),
+        ("staging", "staged"),
+        ("prefill", "prefill_done"),
+        ("publish_wait", "publish_landed"),
+        ("handoff_fetch", "handoff_wire_done"),
+        ("handoff_staging", "handoff_staged"),
+        ("join_wait", "first_step_start"),
+        ("decode_step", "first_token_emit"),
+        ("overhead", "first_token"),
+    )
+
+    def _ttft_phases(self, req: DisaggRequest) -> Dict[str, float]:
+        """Telescoping TTFT decomposition from the lifecycle marks."""
+        m = req.marks
+        cursor = m["arrival"]
+        out: Dict[str, float] = {}
+        for phase, end_key in self._PHASE_MARKS:
+            end = m.get(end_key, cursor)
+            out[phase] = end - cursor
+            cursor = end
+        return out
+
+    def _emit_request_spans(self, req: DisaggRequest) -> None:
+        """Close out the request's span tree at first-token time: one
+        ``phase`` child per lifecycle segment, tiling the root span
+        contiguously (``validate_span_tree`` asserts the tiling), then
+        the root itself ending at ``first_token_time``."""
+        tr = self.world.tracer
+        m = req.marks
+        track = f"req:{req.req_id}"
+        cursor = m["arrival"]
+        for phase, end_key in self._PHASE_MARKS:
+            end = m.get(end_key, cursor)
+            tr.complete(
+                phase, "phase", track, cursor, end, parent=req.span_id,
+            )
+            cursor = end
+        tr.end(req.span_id, m["first_token"], state="decoding")
+        req.span_id = 0
 
     def _on_done(self, req: DisaggRequest, seq: BatchSeq) -> None:
         # the sequence has left the batch; the request finishes (and its
@@ -490,8 +619,9 @@ class DisaggOrchestrator:
         """Cross-engine observability as one typed ``ServingReport``:
         per-engine wire bytes with tenant and per-decode-step
         attribution, store tier/ownership stats, admission rejections,
-        per-engine continuous-batching stats, and per-tenant SLO rows
-        over the completed requests."""
+        per-engine continuous-batching stats, per-tenant SLO rows over
+        the completed requests, and the per-request TTFT critical-path
+        decomposition with its aggregate."""
         done = [r for r in self.requests if r.state == "done"]
         by_state: Dict[str, int] = {}
         for r in self.requests:
@@ -511,6 +641,14 @@ class DisaggOrchestrator:
             for tenant, nbytes in eng.tenant_bytes().items():
                 row = tenants.setdefault(tenant, {"engine_bytes": 0})
                 row["engine_bytes"] += nbytes
+        per_request = {
+            f"req{r.req_id}": {
+                **r.attribution,
+                "ttft_s": r.ttft,
+                "tenant": r.tenant,
+            }
+            for r in self.requests if r.attribution
+        }
         return ServingReport(
             slo=slo_summary(done) if done else {},
             kv=self.store.stats(),
@@ -521,5 +659,9 @@ class DisaggOrchestrator:
             batching={
                 name: batch.report()
                 for name, batch in self.batches.items()
+            },
+            attribution={
+                "per_request": per_request,
+                "aggregate": aggregate_attribution(per_request),
             },
         )

@@ -89,6 +89,11 @@ class ServingReport:
     requests: Dict[str, int] = dataclasses.field(default_factory=dict)
     rejections: Dict[str, int] = dataclasses.field(default_factory=dict)
     batching: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    # TTFT critical-path attribution (``repro.obs.attribution``):
+    # ``per_request`` maps "req<N>" to its phase decomposition (sums to
+    # that request's measured TTFT exactly), ``aggregate`` folds the
+    # rows into per-phase totals/means/shares.
+    attribution: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, Any]:
         """JSON-ready plain-dict form (what benches serialize)."""

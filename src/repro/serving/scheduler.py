@@ -34,6 +34,7 @@ bandwidth is spent on it.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import itertools
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
@@ -44,6 +45,23 @@ from ..core import TrafficClass
 from .kv_cache import KVCacheManager
 
 _req_ids = itertools.count()
+
+
+class RejectReason(str, enum.Enum):
+    """Unified rejection-reason taxonomy across both admission points
+    (scheduler SLO admission and decode-router handoff admission).
+
+    A ``str`` subclass so existing string comparisons
+    (``reason == "expired"``) keep working; ledgers key on ``.value`` so
+    report dicts stay plain-string-keyed and JSON-clean."""
+
+    EXPIRED = "expired"             # deadline already passed at decision
+    STAGING_FLOOR = "staging_floor"  # source-tier staging alone blows it
+    UNMEETABLE = "unmeetable"       # idle engine, provably never feasible
+    BATCH_FULL = "batch_full"       # no decode slot before the deadline
+
+    def __str__(self) -> str:       # noqa: D105 — report formatting
+        return self.value
 
 
 @dataclasses.dataclass(eq=False)     # identity equality (numpy fields)
@@ -64,6 +82,7 @@ class Request:
     first_token_at: Optional[float] = None   # absolute, scheduler clock
     hit_tokens: int = 0
     resumed: bool = False              # re-admitted after preemption
+    reject_reason: Optional[RejectReason] = None   # set iff rejected
 
     @property
     def met_deadline(self) -> Optional[bool]:
@@ -111,13 +130,33 @@ class Scheduler:
         self.preempted: Deque[Request] = deque()
         self.done: List[Request] = []
         self.rejected: List[Request] = []
+        # Rejection ledger keyed by RejectReason.value (plain strings, so
+        # report dicts compare/serialize cleanly).
+        self.rejections: Dict[str, int] = {}
 
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
-    def _reject(self, req: Request) -> None:
+    def _reject(
+        self,
+        req: Request,
+        reason: RejectReason,
+        now: Optional[float] = None,
+    ) -> None:
         req.state = "rejected"
+        req.reject_reason = reason
         self.rejected.append(req)
+        self.rejections[reason.value] = (
+            self.rejections.get(reason.value, 0) + 1
+        )
+        be = getattr(getattr(self.kv, "engine", None), "backend", None)
+        tr = getattr(be, "tracer", None)
+        if tr is not None and tr.enabled:
+            tr.instant(
+                "reject", "admission", "sched",
+                be.now() if now is None else now,
+                req=req.req_id, reason=reason.value, tenant=req.tenant,
+            )
 
     def _engine_deadline(self, req: Request, now: float) -> Optional[float]:
         """Translate the request's deadline (scheduler clock) into the KV
@@ -182,14 +221,14 @@ class Scheduler:
             if self.admission_control and req.deadline is not None:
                 if now > req.deadline:
                     self.waiting.popleft()
-                    self._reject(req)
+                    self._reject(req, RejectReason.EXPIRED, now)
                     continue
                 if not self.deadline_feasible(req, now):
                     if self.deadline_floor_exceeded(req, now):
                         # staging cost alone (source tier too slow) blows
                         # the budget — no amount of backlog drain helps
                         self.waiting.popleft()
-                        self._reject(req)
+                        self._reject(req, RejectReason.STAGING_FLOOR, now)
                         continue
                     if self._engine_busy():
                         break       # backlog may drain; hold the queue
@@ -198,7 +237,7 @@ class Scheduler:
                     # amount — provably never feasible, reject rather
                     # than livelock the serving loop
                     self.waiting.popleft()
-                    self._reject(req)
+                    self._reject(req, RejectReason.UNMEETABLE, now)
                     continue
             if not self._admit(req):
                 break
@@ -342,7 +381,7 @@ class DecodeRouter:
         *,
         occupancy: Optional[float] = None,
         wait_estimate_s: float = 0.0,
-    ) -> Optional[str]:
+    ) -> Optional[RejectReason]:
         """``None`` if the handoff may proceed, else why it must not.
 
         ``occupancy``/``wait_estimate_s`` come from the target decode
@@ -352,24 +391,26 @@ class DecodeRouter:
         the slot wait is paid first, serially."""
         if deadline is None:
             return None
-        reason = None
+        reason: Optional[RejectReason] = None
         if now > deadline:
-            reason = "expired"
+            reason = RejectReason.EXPIRED
         elif (
             occupancy is not None
             and occupancy >= 1.0
             and now + wait_estimate_s > deadline
         ):
-            reason = "batch_full"
+            reason = RejectReason.BATCH_FULL
         elif (
             lease is not None
             and now + wait_estimate_s
             + self.store.estimate_lease_floor_seconds(lease)
             > deadline
         ):
-            reason = "staging_floor"
+            reason = RejectReason.STAGING_FLOOR
         if reason is not None:
-            self.rejections[reason] = self.rejections.get(reason, 0) + 1
+            self.rejections[reason.value] = (
+                self.rejections.get(reason.value, 0) + 1
+            )
         return reason
 
 

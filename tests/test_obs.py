@@ -1,0 +1,358 @@
+"""Flight-recorder observability: tracer ring + span sources, metrics
+registry, Chrome-trace export schema, span-tree well-formedness on a
+traced disagg run, the exact TTFT critical-path decomposition, and the
+unified rejection-reason taxonomy."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import MMAConfig, SimWorld
+from repro.core.simlink import FlowRecorder, SimLink
+from repro.obs import (
+    BinnedTimeline,
+    Counter,
+    Gauge,
+    LogHistogram,
+    MetricsRegistry,
+    NULL_TRACER,
+    PHASES,
+    Span,
+    Tracer,
+    current_tracer,
+    install,
+    to_chrome,
+    ttft_attribution,
+    uninstall,
+    validate_chrome_trace,
+    validate_span_tree,
+)
+from repro.serving import (
+    DecodeRouter,
+    DisaggOrchestrator,
+    DisaggRequest,
+    RejectReason,
+)
+
+
+def arange(n: int, start: int = 0) -> np.ndarray:
+    return np.arange(start, start + n, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Tracer core
+# ---------------------------------------------------------------------------
+def test_tracer_begin_end_complete_instant():
+    tr = Tracer()
+    root = tr.begin("req0", "request", "req:0", 1.0, tenant="gold")
+    child = tr.complete("fetch", "transfer", "engine:a", 1.0, 2.0,
+                        parent=root, nbytes=4096)
+    mark = tr.instant("replan", "replan", "worker:1", 1.5)
+    assert len(tr) == 2               # root still open
+    tr.end(root, 3.0, state="done")
+    spans = {s.span_id: s for s in tr.all_spans()}
+    assert spans[root].t0 == 1.0 and spans[root].t1 == 3.0
+    assert spans[root].args == {"tenant": "gold", "state": "done"}
+    assert spans[child].parent_id == root
+    assert spans[mark].t0 == spans[mark].t1 == 1.5
+    assert spans[mark].duration == 0.0
+
+
+def test_tracer_end_unknown_id_is_silent():
+    tr = Tracer()
+    tr.end(999, 1.0)
+    tr.end(0, 1.0)
+    assert len(tr) == 0
+
+
+def test_tracer_ring_bounds_and_drop_count():
+    tr = Tracer(max_spans=4)
+    for i in range(10):
+        tr.complete("s", "chunk", "t", float(i), float(i) + 1)
+    assert len(tr) == 4
+    assert tr.dropped == 6
+    # the ring keeps the newest spans
+    assert [s.t0 for s in tr.all_spans()] == [6.0, 7.0, 8.0, 9.0]
+
+
+def test_tracer_span_source_materializes_lazily():
+    tr = Tracer()
+    ring = [(0.5, 1.5, 4096), (2.0, 2.25, 512)]
+    tr.add_source(lambda t: [
+        Span(t.next_id(), None, "chunk", "link", "link:pcie0", a, b,
+             {"nbytes": n})
+        for (a, b, n) in ring
+    ])
+    tr.complete("x", "chunk", "worker:0", 0.0, 1.0)
+    spans = tr.all_spans()
+    assert len(spans) == 3
+    assert len(tr) == 1               # sources don't live in the ring
+    link = [s for s in spans if s.cat == "link"]
+    assert [s.args["nbytes"] for s in link] == [4096, 512]
+    assert len({s.span_id for s in spans}) == 3    # ids stay unique
+
+
+def test_null_tracer_and_install_cycle():
+    assert current_tracer() is NULL_TRACER
+    assert not NULL_TRACER.enabled
+    assert NULL_TRACER.begin("a", "b", "c", 0.0) == 0
+    assert NULL_TRACER.complete("a", "b", "c", 0.0, 1.0) == 0
+    assert NULL_TRACER.all_spans() == []
+    tr = install(Tracer())
+    try:
+        assert current_tracer() is tr
+        assert SimWorld().tracer is tr   # worlds snapshot the default
+    finally:
+        uninstall()
+    assert current_tracer() is NULL_TRACER
+    assert SimWorld().tracer is NULL_TRACER
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+def test_counter_labels_and_as_dict():
+    c = Counter("engine.bytes")
+    c.inc(10)
+    c.inc(5, dev=0)
+    c.inc(7, dev=1)
+    c.inc(3, dev=0)
+    assert c.get() == 10
+    assert c.get(dev=0) == 8
+    assert c.total() == 25
+
+
+def test_gauge_set_overwrites():
+    g = Gauge("kv.pinned_bytes")
+    g.set(100, tier="pinned")
+    g.set(40, tier="pinned")
+    assert g.get(tier="pinned") == 40
+
+
+def test_log_histogram_buckets():
+    h = LogHistogram("lat")
+    for v in (0.001, 0.002, 0.5, 4.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.sum == pytest.approx(4.503)
+    assert h.mean == pytest.approx(4.503 / 4)
+    assert h.quantile(1.0) >= 4.0
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    c1 = reg.counter("a.b")
+    assert reg.counter("a.b") is c1
+    with pytest.raises(TypeError):
+        reg.gauge("a.b")
+    assert "a.b" in reg
+    reg.gauge("a.g").set(3)
+    assert set(reg.as_dict(prefix="a.")) == {"a.b", "a.g"}
+
+
+def test_binned_timeline_rate_and_bounds():
+    tl = BinnedTimeline(bin_s=0.5)
+    tl.add(0.1, 100)
+    tl.add(0.4, 100)
+    tl.add(1.2, 300)
+    assert tl.total == 500
+    assert tl.bin(0) == 200
+    assert tl.bin(1) == 0
+    assert tl.bin(2) == 300
+    assert tl.value_between(0.0, 0.9) == 200
+    assert tl.rate(0.0, 0.5) == pytest.approx(400.0)
+
+
+# ---------------------------------------------------------------------------
+# Traced disagg run: tree well-formedness, export schema, attribution
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def traced_run():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    orch = DisaggOrchestrator(
+        cfg, config=MMAConfig(obs_trace=True), page_tokens=8,
+    )
+    rng = np.random.default_rng(7)
+    reqs = [
+        DisaggRequest(
+            tokens=arange(int(rng.integers(24, 120)), start=1000 * i),
+            arrival=0.002 * i, tenant=f"t{i % 2}", new_tokens=3,
+        )
+        for i in range(6)
+    ]
+    orch.serve(reqs)
+    assert all(r.state == "done" for r in reqs)
+    return orch, reqs, orch.world.tracer.all_spans()
+
+
+def test_disagg_trace_covers_the_taxonomy(traced_run):
+    _, _, spans = traced_run
+    cats = {s.cat for s in spans}
+    assert {"request", "phase", "transfer", "chunk", "link", "kvstore",
+            "prefill", "decode", "admission"} <= cats
+
+
+def test_disagg_span_tree_is_well_formed(traced_run):
+    _, _, spans = traced_run
+    assert validate_span_tree(spans, require_roots=True) == []
+
+
+def test_disagg_request_trees_link_full_lifecycle(traced_run):
+    orch, reqs, spans = traced_run
+    rows = ttft_attribution(spans)
+    assert set(rows) == {f"req{r.req_id}" for r in reqs}
+
+
+def test_chrome_trace_export_validates_and_round_trips(traced_run, tmp_path):
+    _, _, spans = traced_run
+    obj = to_chrome(spans)
+    validate_chrome_trace(obj)
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps(obj))
+    validate_chrome_trace(json.loads(path.read_text()))
+    # links render as their own rows: every link span carries a pid/tid
+    evs = [e for e in obj["traceEvents"] if e.get("cat") == "link"]
+    assert evs and all(e["ph"] == "X" for e in evs)
+
+
+def test_export_rejects_malformed_trace():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"no": "traceEvents"})
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"traceEvents": [{"ph": "X"}]})
+
+
+def test_ttft_decomposition_sums_to_measured_ttft(traced_run):
+    orch, reqs, spans = traced_run
+    rows = ttft_attribution(spans)
+    for r in reqs:
+        row = rows[f"req{r.req_id}"]
+        assert row["ttft_s"] == pytest.approx(r.ttft, abs=0.0, rel=1e-12)
+        # phase boundaries reuse the exact float (asserted by
+        # validate_span_tree above), so the only residue is summation
+        # associativity — ULPs, never a missing lifecycle segment
+        assert abs(row["residual_s"]) < 1e-12
+        assert all(row[p] >= 0.0 for p in PHASES)
+        # the marks-derived decomposition the report carries must agree
+        # with the span-derived one
+        for p in PHASES:
+            assert row[p] == r.attribution[p]
+
+
+def test_report_attribution_section(traced_run):
+    orch, reqs, _ = traced_run
+    rep = orch.report()
+    per_req = rep.attribution["per_request"]
+    assert set(per_req) == {f"req{r.req_id}" for r in reqs}
+    agg = rep.attribution["aggregate"]
+    assert agg["ttft"]["mean_s"] > 0.0
+    shares = sum(agg[p]["share"] for p in PHASES)
+    assert shares == pytest.approx(1.0, abs=1e-9)
+    for r in reqs:
+        assert per_req[f"req{r.req_id}"]["ttft_s"] == r.ttft
+
+
+def test_tracing_off_by_default_and_produces_no_spans():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    orch = DisaggOrchestrator(cfg, page_tokens=8)
+    orch.serve([DisaggRequest(tokens=arange(40), arrival=0.0,
+                              new_tokens=2)])
+    assert orch.world.tracer is NULL_TRACER
+    assert orch.world.tracer.all_spans() == []
+
+
+# ---------------------------------------------------------------------------
+# Rejection-reason taxonomy
+# ---------------------------------------------------------------------------
+def test_reject_reason_is_one_enum_with_string_compat():
+    assert RejectReason.EXPIRED == "expired"
+    assert str(RejectReason.STAGING_FLOOR) == "staging_floor"
+    assert {r.value for r in RejectReason} == {
+        "expired", "staging_floor", "unmeetable", "batch_full",
+    }
+
+
+def test_rejected_request_carries_reason_and_ledger_aggregates():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    orch = DisaggOrchestrator(
+        cfg, config=MMAConfig(obs_trace=True), page_tokens=8,
+    )
+    good = DisaggRequest(tokens=arange(40), arrival=0.0, new_tokens=2)
+    doomed = DisaggRequest(
+        tokens=arange(40, start=500), arrival=0.0, new_tokens=2,
+        deadline=1e-6,                # expires long before handoff
+    )
+    orch.serve([good, doomed])
+    assert good.state == "done" and good.reject_reason is None
+    assert doomed.state == "rejected"
+    assert doomed.reject_reason is RejectReason.EXPIRED
+    rep = orch.report()
+    assert rep.rejections == {"expired": 1}
+    assert rep.requests["rejected"] == 1
+    # the rejected request never saw a first token: no attribution row
+    assert f"req{doomed.req_id}" not in rep.attribution["per_request"]
+    # its root span ends at the rejection with the reason on it
+    roots = [s for s in orch.world.tracer.all_spans()
+             if s.cat == "request" and s.name == f"req{doomed.req_id}"]
+    assert len(roots) == 1
+    assert roots[0].args.get("reject_reason") == "expired"
+
+
+def test_router_ledger_keys_are_plain_strings():
+    router = DecodeRouter.__new__(DecodeRouter)   # ledger check only
+    router.rejections = {}
+    router.store = None
+    reason = RejectReason.BATCH_FULL
+    router.rejections[reason.value] = 1
+    assert router.rejections == {"batch_full": 1}
+    assert json.loads(json.dumps(router.rejections)) == {"batch_full": 1}
+
+
+# ---------------------------------------------------------------------------
+# Satellites: bounded link completions, incremental FlowRecorder
+# ---------------------------------------------------------------------------
+def test_simlink_completions_window_is_bounded():
+    world = SimWorld()
+    link = SimLink(world, "l", rate_gbps=1.0, completions_window=8)
+    link.record_completions = True
+    for _ in range(20):
+        link.submit(1024, lambda g: None)
+    world.run()
+    assert len(link.completions) == 8
+    assert link.bytes_done == 20 * 1024          # ledger sees everything
+    assert link.flow.total == 20 * 1024          # timeline too
+
+
+def test_simlink_occupancy_spans_only_when_tracing(tmp_path):
+    tr = install(Tracer())
+    try:
+        world = SimWorld()
+        link = SimLink(world, "pcie0", rate_gbps=1.0)
+        link.submit(1 << 20, lambda g: None, tag="fetch")
+        world.run()
+        spans = tr.all_spans()
+    finally:
+        uninstall()
+    link_spans = [s for s in spans if s.cat == "link"]
+    assert len(link_spans) == 1
+    s = link_spans[0]
+    assert s.track == "link:pcie0" and s.name == "fetch"
+    assert s.args["nbytes"] == 1 << 20
+    assert s.t1 - s.t0 == pytest.approx((1 << 20) / (1 << 30))
+
+
+def test_flow_recorder_total_is_o1_and_timeline_incremental():
+    world = SimWorld()
+    rec = FlowRecorder(world)
+    for i in range(10):
+        world.now = 0.1 * i
+        rec.record(100)
+    assert rec.total_bytes() == 1000
+    tl1 = rec.timeline(0.5)
+    world.now = 2.2
+    rec.record(500)
+    tl2 = rec.timeline(0.5)
+    assert rec.total_bytes() == 1500
+    assert len(tl2) > len(tl1)
+    assert sum(int(round(v * 0.5 * (1 << 30))) for _, v in tl2) == 1500
