@@ -49,6 +49,7 @@ MODULES = [
     ("disagg", "disagg_trace"),
     ("decode", "decode_batching"),
     ("adapt", "adaptive_paths"),
+    ("sim_throughput", "sim_throughput"),
     ("obs", "obs_overhead"),
     ("ablation", "ablation"),
     ("trace", "trace_serving"),
@@ -66,8 +67,19 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record flight-recorder spans across the run and "
                          "write a Chrome-trace/Perfetto JSON")
+    ap.add_argument("--profile", default=None, metavar="PATH",
+                    help="run under cProfile and write pstats to PATH; "
+                         "also prints the top 30 functions by cumulative "
+                         "time (profile one module at a time via --only)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+
+    profiler = None
+    if args.profile:
+        import cProfile
+
+        profiler = cProfile.Profile()
+        profiler.enable()
 
     tracer = None
     if args.trace:
@@ -106,6 +118,15 @@ def main() -> None:
         n = write_chrome_trace(tracer.all_spans(), args.trace)
         dropped = f" ({tracer.dropped} dropped)" if tracer.dropped else ""
         print(f"# wrote {args.trace}: {n} trace events{dropped}")
+    if profiler is not None:
+        import pstats
+
+        profiler.disable()
+        profiler.dump_stats(args.profile)
+        print(f"# wrote {args.profile} (pstats; top 30 cumulative below)")
+        pstats.Stats(profiler).strip_dirs().sort_stats(
+            "cumulative"
+        ).print_stats(30)
 
 
 if __name__ == "__main__":

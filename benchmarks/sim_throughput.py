@@ -1,0 +1,196 @@
+"""Sim-core event-throughput gate: 1M-request generated replay vs a
+frozen pre-refactor measurement.
+
+The PR-9 hot-path rewrite claims a >=20x event-throughput improvement
+on serving-scale traces while keeping scheduling semantics byte-for-
+byte identical (the semantics half is ``tests/test_golden_equivalence``;
+this bench is the throughput half). The workload is the seeded
+generator's default million-request trace (bursty diurnal arrivals,
+tenant churn, session trees, switching storms, link-degradation
+churn — see ``repro.workloads``), deliberately provisioned past fabric
+capacity so the transfer backlog *grows* over the trace: the seed
+engine's superlinear bookkeeping (full-heap size walks per push,
+all-task scans per chunk completion, heap rebuilds on escalation)
+collapses with backlog depth, which is exactly the regime a
+million-request replay lives in.
+
+``benchmarks/SIM_BASELINE.json`` is the checked-in measurement of the
+**seed (pre-refactor) engine** on a prefix of this exact trace — a
+prefix because the seed engine cannot replay the full trace in
+tolerable time, which is the point. The gate replays the full trace on
+the current engine and asserts
+
+    events_per_sec(current, full trace)
+        >= 20x events_per_sec(seed, trace prefix)
+
+Backlog only deepens past the prefix, so clearing the bar on the full
+trace is *harder* than clearing it on the prefix — the comparison is
+conservative. The baseline records the generator spec verbatim and the
+gate refuses to run against a mismatched spec (no quietly re-tuning
+the workload under a frozen number).
+
+Regenerating the baseline (only legitimate at a pre-refactor checkout,
+or when the workload spec intentionally changes — in which case
+re-measure with the OLD engine):
+
+    PYTHONPATH=src python -m benchmarks.sim_throughput --measure-baseline
+
+Env overrides: ``MMA_BENCH_SIM_PATH`` (bench JSON artifact path),
+``MMA_SIM_SUMMARY_PATH`` (trace-summary artifact path),
+``MMA_SIM_REQUESTS`` (replay only the first N requests — smoke runs;
+the >=20x assertion only arms on the full trace).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+from repro.workloads import WorkloadSpec, generate, replay
+
+from .common import CSV
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "SIM_BASELINE.json")
+
+# The gated trace: the generator's defaults ARE the bench definition
+# (seed 7, 1M primary requests, overload-provisioned arrival rate).
+SPEC = WorkloadSpec()
+
+GATE_SPEEDUP = 20.0
+
+
+def load_baseline() -> Dict:
+    with open(BASELINE_PATH) as f:
+        return json.load(f)
+
+
+def measure_baseline(prefix_requests: int) -> Dict:
+    """Measure the CURRENT engine on the trace prefix and freeze it as
+    the baseline. Only meaningful at a pre-refactor checkout."""
+    wl = generate(SPEC)
+    r = replay(wl, n_requests=prefix_requests)
+    out = {
+        "_comment": (
+            "events/sec of the SEED (pre-refactor) sim engine on the "
+            "first prefix_requests of the default generated trace. "
+            "benchmarks/sim_throughput.py asserts the current engine "
+            "clears >=20x this on the FULL trace. Regenerate only from "
+            "a pre-refactor checkout (see module docstring)."
+        ),
+        "prefix_requests": prefix_requests,
+        "events": r["events"],
+        "wall_s": r["wall_s"],
+        "events_per_sec": r["events_per_sec"],
+        "makespan_s": r["makespan_s"],
+        "spec": SPEC.digest_fields(),
+    }
+    with open(BASELINE_PATH, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {BASELINE_PATH}: "
+          f"{r['events_per_sec']:.0f} events/s over {r['events']} events "
+          f"({prefix_requests} requests, {r['wall_s']:.1f}s wall)")
+    return out
+
+
+def run(csv: CSV) -> None:
+    print("# Sim event throughput — full generated replay vs frozen "
+          "pre-refactor baseline (same seeded trace)")
+    baseline = load_baseline()
+    # JSON round-trip so tuples compare equal to their serialized lists.
+    spec_now = json.loads(json.dumps(SPEC.digest_fields()))
+    assert baseline["spec"] == spec_now, (
+        "workload spec drifted since the baseline was frozen — "
+        "re-measure benchmarks/SIM_BASELINE.json with the OLD engine "
+        "on the new spec (see benchmarks/sim_throughput.py docstring)"
+    )
+
+    n_env = int(os.environ.get("MMA_SIM_REQUESTS", "0"))
+    n: Optional[int] = n_env if n_env > 0 else None
+
+    wl = generate(SPEC)
+    summary = wl.summary()
+    full = n is None or n >= len(wl.requests)
+    print(f"trace: {summary['requests']} requests, "
+          f"{summary['bytes_total'] / 1e12:.2f} TB, "
+          f"{summary['tenants']} tenants, "
+          f"{summary['degradation_events']} degradation events, "
+          f"span {summary['span_s']:.0f}s sim")
+    if not full:
+        print(f"(MMA_SIM_REQUESTS={n}: smoke replay, gate not armed)")
+
+    r = replay(wl, n_requests=n)
+    speedup = r["events_per_sec"] / baseline["events_per_sec"]
+    print(f"replayed {r['requests']} requests: "
+          f"{r['events']} events in {r['wall_s']:.1f}s wall "
+          f"-> {r['events_per_sec']:.0f} events/s "
+          f"({r['completed']} completed, makespan {r['makespan_s']:.1f}s "
+          f"sim, {r['escalations']} escalations, "
+          f"{r['preempted_chunks']} preempted chunks)")
+    print(f"baseline (seed engine, {baseline['prefix_requests']}-request "
+          f"prefix): {baseline['events_per_sec']:.0f} events/s "
+          f"-> speedup {speedup:.1f}x (gate {GATE_SPEEDUP:.0f}x)")
+
+    csv.add("sim.events_per_sec", 0.0, f"{r['events_per_sec']:.0f}")
+    csv.add("sim.speedup_vs_seed", 0.0, f"{speedup:.2f}")
+    csv.add("sim.replay_wall_s", 0.0, f"{r['wall_s']:.2f}")
+    csv.add("sim.requests_per_sec", 0.0, f"{r['requests_per_sec']:.0f}")
+
+    # Artifacts first, assertions second — a failing run still uploads
+    # its evidence.
+    bench_path = os.environ.get("MMA_BENCH_SIM_PATH", "BENCH_sim.json")
+    with open(bench_path, "w") as f:
+        json.dump(
+            {
+                "result": r,
+                "speedup_vs_seed": speedup,
+                "gate_speedup": GATE_SPEEDUP,
+                "gate_armed": full,
+                "baseline": baseline,
+            },
+            f, indent=2, sort_keys=True,
+        )
+    print(f"wrote {bench_path}")
+
+    summary_path = os.environ.get(
+        "MMA_SIM_SUMMARY_PATH", "TRACE_sim_workload.json"
+    )
+    with open(summary_path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+    print(f"wrote {summary_path} (generator seed {SPEC.seed})")
+
+    assert r["completed"] == r["requests"], (
+        f"replay must drain: {r['completed']}/{r['requests']} completed"
+    )
+    if full:
+        assert speedup >= GATE_SPEEDUP, (
+            f"sim event throughput below the {GATE_SPEEDUP:.0f}x bar: "
+            f"{r['events_per_sec']:.0f} events/s vs seed baseline "
+            f"{baseline['events_per_sec']:.0f} events/s "
+            f"({speedup:.1f}x)"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--measure-baseline", action="store_true",
+        help="measure the CURRENT engine on the trace prefix and write "
+             "benchmarks/SIM_BASELINE.json (pre-refactor checkouts only)",
+    )
+    ap.add_argument(
+        "--prefix-requests", type=int, default=120_000,
+        help="prefix length for --measure-baseline",
+    )
+    args = ap.parse_args()
+    if args.measure_baseline:
+        measure_baseline(args.prefix_requests)
+        return
+    c = CSV()
+    run(c)
+    c.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -321,9 +321,21 @@ class MMAConfig:
     # Span ring-buffer capacity per tracer; the oldest spans are dropped
     # (and counted) beyond this, bounding trace memory on long replays.
     obs_trace_max_spans: int = 1_000_000
-    # Per-SimLink completion-record window (entries): the running window
-    # throughput_gbps() sums over. Completions beyond it age out.
+    # Per-SimLink window of opt-in per-chunk completion records
+    # (entries); oldest age out. Bandwidth queries read the always-on
+    # binned flow timeline, not this window.
     obs_link_completions: int = 65536
+    # ---- Sim core (discrete-event hot path) -----------------------------
+    # Escalation moves a task's queued chunks between class heaps by
+    # tombstoning the source entries (O(log n) per entry) instead of
+    # rebuilding the heap; a heap is compacted live-only once tombstones
+    # exceed this fraction of its entries. 1.0 never compacts (pure lazy
+    # deletion); must be in (0, 1].
+    sim_tombstone_compact_frac: float = 0.5
+    # MicroTask free-list capacity in TaskManager: landed chunk objects
+    # up to this count are recycled by later split() calls instead of
+    # re-allocated. 0 disables pooling.
+    sim_micro_pool_size: int = 4096
 
     def class_only(self) -> "MMAConfig":
         """Copy with the deadline machinery disabled (PR-1 class-only
@@ -565,6 +577,18 @@ class MMAConfig:
         )
         if cfg.obs_link_completions <= 0:
             raise ValueError("MMA_OBS_LINK_COMPLETIONS must be positive")
+        cfg.sim_tombstone_compact_frac = _env_float(
+            "MMA_SIM_TOMBSTONE_COMPACT_FRAC", cfg.sim_tombstone_compact_frac
+        )
+        if not 0 < cfg.sim_tombstone_compact_frac <= 1:
+            raise ValueError(
+                "MMA_SIM_TOMBSTONE_COMPACT_FRAC must be in (0, 1]"
+            )
+        cfg.sim_micro_pool_size = _env_int(
+            "MMA_SIM_MICRO_POOL_SIZE", cfg.sim_micro_pool_size
+        )
+        if cfg.sim_micro_pool_size < 0:
+            raise ValueError("MMA_SIM_MICRO_POOL_SIZE must be >= 0")
         return cfg
 
     def n_chunks(self, nbytes: int) -> int:
@@ -630,6 +654,8 @@ ENV_VARS: Dict[str, str] = {
     "obs_trace": "MMA_OBS_TRACE",
     "obs_trace_max_spans": "MMA_OBS_TRACE_MAX_SPANS",
     "obs_link_completions": "MMA_OBS_LINK_COMPLETIONS",
+    "sim_tombstone_compact_frac": "MMA_SIM_TOMBSTONE_COMPACT_FRAC",
+    "sim_micro_pool_size": "MMA_SIM_MICRO_POOL_SIZE",
 }
 
 # One-line meaning per field (every dataclass field must appear; the
@@ -713,7 +739,10 @@ KNOB_DOCS: Dict[str, str] = {
         "record flight-recorder spans on orchestrator-owned sim worlds",
     "obs_trace_max_spans": "span ring-buffer capacity; oldest spans drop",
     "obs_link_completions":
-        "per-link completion window throughput_gbps() sums over (entries)",
+        "per-link window of opt-in per-chunk completion records (entries)",
+    "sim_tombstone_compact_frac":
+        "compact a class heap once tombstones exceed this fraction",
+    "sim_micro_pool_size": "recycled MicroTask free-list capacity (0 = off)",
 }
 
 

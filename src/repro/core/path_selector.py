@@ -144,6 +144,20 @@ class LinkWorker:
         # (mt, route, class-at-pull, backend preemption handle). Only
         # entries whose backend returned a handle are recallable.
         self._inflight: Dict[int, tuple] = {}
+        # id(micro-task) -> queue epoch at which the preemption pass last
+        # found the chunk NOT to be a victim. Victim verdicts depend only
+        # on queue state (classes, tenant clocks, pending work), all of
+        # which bump the queue epoch when they change — so an unchanged
+        # epoch lets the pass skip the chunk wholesale. Only negative
+        # verdicts are cached: cancellability evolves with the chunk's
+        # stage progress, independent of the epoch.
+        self._preempt_skip: Dict[int, int] = {}
+        # Queue availability epoch at which this worker's last full
+        # (non-direct-only) select came up empty. While the epoch is
+        # unchanged the queue can only have shrunk, so every pull is a
+        # provable no-op and maybe_pull returns immediately. -1 = never
+        # starved (epochs start at 0).
+        self._starved_at = -1
 
     # -- backpressure: effective pull capacity ---------------------------
     def _capacity(self) -> int:
@@ -189,9 +203,17 @@ class LinkWorker:
         return (now - self.ewma_updated_at) >= self.config.adapt_probe_s
 
     def maybe_pull(self, direct_only: bool = False) -> None:
+        # A worker whose last full select found nothing stays empty until
+        # the queue's availability epoch advances (a full select's reach
+        # strictly contains a direct-only one's, so the skip is sound for
+        # both phases). Extra capacity can't cure work starvation.
+        if self._starved_at == self.selector.queue._avail_epoch:
+            return
         while self._capacity() > 0:
             picked = self.selector.select(self, direct_only=direct_only)
             if picked is None:
+                if not direct_only:
+                    self._starved_at = self.selector.queue._avail_epoch
                 return
             mt, route = picked
             self.outstanding += 1
@@ -226,6 +248,7 @@ class LinkWorker:
         self.bytes_by_tenant[mt.tenant] -= mt.nbytes
         self.chunks_preempted += 1
         self._inflight.pop(id(mt), None)
+        self._preempt_skip.pop(id(mt), None)
 
     def _chunk_spans(self, tracer) -> List:
         """Materialize the chunk-completion ring into ``chunk`` spans
@@ -242,6 +265,7 @@ class LinkWorker:
 
     def _on_chunk_done(self, mt: MicroTask, t0: float) -> None:
         self._inflight.pop(id(mt), None)
+        self._preempt_skip.pop(id(mt), None)
         self.outstanding -= 1
         now = self.backend.now()
         ring = self._chunk_ring
@@ -334,12 +358,20 @@ class PathSelector:
         self.task_manager = task_manager
         self.queue: MicroTaskQueue = task_manager.queue
         self.workers: Dict[int, LinkWorker] = {}
+        # Registration-order snapshot of ``workers.values()`` — the pull
+        # loop builds its order every kick, and kicks dominate the hot
+        # path, so avoid a fresh list per kick.
+        self._worker_list: List[LinkWorker] = []
         self.backend: Optional["Backend"] = None   # shared by all workers
         self._kicking = False
         self._probe_scheduled = False
+        # Preemption-pass tenant-clock mins, per class, valid for one
+        # queue mutation epoch (see _unrestricted_mins).
+        self._preempt_mins: Dict[TrafficClass, tuple] = {}
 
     def register_worker(self, worker: LinkWorker) -> None:
         self.workers[worker.dev] = worker
+        self._worker_list = list(self.workers.values())
         self.backend = worker.backend
 
     # -- cooperative in-flight preemption --------------------------------
@@ -370,50 +402,101 @@ class PathSelector:
         if not self.config.qos_preempt_inflight or not worker._inflight:
             return 0
         dev = worker.dev
-        latency_waiting = bool(
-            self._serveable_dests(dev, TrafficClass.LATENCY)
+        queue = self.queue
+        # With no relay restrictions every link can carry work for every
+        # destination, so "serveable" collapses to "pending anywhere" —
+        # O(1) existence checks and worker-independent tenant scans.
+        unrestricted = (
+            self.config.relay_devices is None
+            and not self.config.numa_local_only
         )
-        tenant_wfq = self.queue.tenant_wfq_active
+        if unrestricted:
+            latency_waiting = queue._class_size[TrafficClass.LATENCY] > 0
+        else:
+            latency_waiting = (
+                queue._class_size[TrafficClass.LATENCY] > 0
+                and bool(self._serveable_dests(dev, TrafficClass.LATENCY))
+            )
+        tenant_wfq = queue.tenant_wfq_active
         if not latency_waiting and not tenant_wfq:
             return 0
         n = 0
         # serveable dests depend only on (dev, class): compute once per
         # class, not per in-flight chunk — this runs on every kick_all
         dests_by_cls: Dict[TrafficClass, List[int]] = {}
+        # The tenant trigger is an existence check — "is any *other*
+        # tenant with queued work below my clock?" — so the two least
+        # distinct-tenant clocks answer it for every chunk in O(1).
+        # Cached per class; a successful recall requeues the chunk and
+        # refunds its tenant's clock, so it invalidates the cache.
+        mins_by_cls: Dict[TrafficClass, tuple] = {}
+        skip = worker._preempt_skip
+        # Verdicts are cached against the epoch they were computed at.
+        # After a mid-loop recall the epoch advances while this pass's
+        # latency_waiting/dests snapshots deliberately stay stale (the
+        # pass is one arbitration round), so post-recall verdicts are
+        # mixed-state: they are never recorded (epoch != epoch0), and
+        # no cached entry can match the freshly-bumped epoch either.
+        epoch0 = queue._epoch
         for mt, route, cls_at_pull, handle in list(
             worker._inflight.values()
         ):
-            cls = mt.traffic_class
-            victim = (
-                latency_waiting
-                and cls.value > TrafficClass.LATENCY.value
-            )
+            key = id(mt)
+            if handle._done or handle._stage > handle.wire_stage:
+                # Past the recall window for good: the stage index only
+                # advances, so try_cancel can never again succeed —
+                # drop the entry from every future scan. (Recalled and
+                # completed chunks are removed by preempt_inflight /
+                # _on_chunk_done; this catches chunks that crossed the
+                # wire un-recalled.)
+                del worker._inflight[key]
+                skip.pop(key, None)
+                continue
+            if skip.get(key) == queue._epoch:
+                continue
+            cls = mt.parent.qos_class     # .traffic_class, sans property hop
+            # IntEnum order: anything below LATENCY priority is fair game
+            victim = latency_waiting and cls > TrafficClass.LATENCY
             if not victim and tenant_wfq:
-                if cls not in dests_by_cls:
-                    dests_by_cls[cls] = self._serveable_dests(dev, cls)
-                # compare the clock the victim would return to after the
-                # recall refund, or the refund itself makes the victim
-                # the minimum again and the same chunk thrashes. If the
-                # task changed class since the pull, the refund goes to
-                # the pull-time class's clock, not this one — compare
-                # this clock unrefunded.
-                mine = (
-                    self.queue.tenants.refunded_vtime(
-                        cls, mt.tenant, mt.nbytes
+                if unrestricted:
+                    t1, v1, v2 = self._unrestricted_mins(cls)
+                else:
+                    if cls not in dests_by_cls:
+                        dests_by_cls[cls] = self._serveable_dests(dev, cls)
+                    mins = mins_by_cls.get(cls)
+                    if mins is None:
+                        mins = mins_by_cls[cls] = self._tenant_clock_mins(
+                            cls, dests_by_cls[cls]
+                        )
+                    t1, v1, v2 = mins
+                if t1 is not None:
+                    # compare the clock the victim would return to after
+                    # the recall refund, or the refund itself makes the
+                    # victim the minimum again and the same chunk
+                    # thrashes. If the task changed class since the
+                    # pull, the refund goes to the pull-time class's
+                    # clock, not this one — compare this clock
+                    # unrefunded.
+                    mine = (
+                        queue.tenants.refunded_vtime(
+                            cls, mt.tenant, mt.nbytes
+                        )
+                        if cls is cls_at_pull
+                        else queue.tenant_vtime(cls, mt.tenant)
                     )
-                    if cls is cls_at_pull
-                    else self.queue.tenant_vtime(cls, mt.tenant)
-                )
-                victim = any(
-                    t != mt.tenant
-                    and self.queue.tenant_vtime(cls, t) < mine
-                    for dest in dests_by_cls[cls]
-                    for t in self.queue.queued_tenants(cls, dest)
-                )
-            if victim and handle.try_cancel():
+                    if t1 != mt.tenant:
+                        victim = v1 < mine
+                    else:
+                        victim = v2 is not None and v2 < mine
+            if not victim:
+                if queue._epoch == epoch0:
+                    skip[key] = epoch0
+                continue
+            if handle.try_cancel():
                 worker.preempt_inflight(mt, route, cls_at_pull)
-                self.queue.requeue(mt, cls_at_pull=cls_at_pull)
+                queue.requeue(mt, cls_at_pull=cls_at_pull)
                 n += 1
+                mins_by_cls.clear()
                 tr = worker.backend.tracer
                 if tr.enabled:
                     tr.instant(
@@ -424,6 +507,54 @@ class PathSelector:
                         cls=cls.name, tenant=mt.tenant,
                     )
         return n
+
+    def _tenant_clock_mins(self, cls: TrafficClass, dests: List[int]):
+        """``(t1, v1, v2)``: the least virtual clock ``v1`` among tenants
+        with queued ``cls`` work on any of ``dests`` (held by tenant
+        ``t1``), and the least clock ``v2`` over the *other* tenants.
+        "Does any tenant other than X sit strictly below clock m" is then
+        ``v1 < m`` when ``t1 != X`` else ``v2 < m`` — exact, because
+        under ties ``v2 == v1`` regardless of which tied tenant is
+        reported as ``t1``. ``(None, _, _)`` when no tenant queues."""
+        queue = self.queue
+        by_dest = queue._by_class_dest[cls]
+        seen = set()
+        for dest in dests:
+            tq = by_dest.get(dest)
+            if tq:
+                seen.update(tq)
+        return self._two_min_clocks(cls, seen)
+
+    def _two_min_clocks(self, cls: TrafficClass, tenants):
+        t1 = None
+        v1 = 0.0
+        v2: Optional[float] = None
+        vtime = self.queue.tenants.vtime
+        for t in tenants:
+            v = vtime(cls, t)
+            if t1 is None or v < v1:
+                if t1 is not None and (v2 is None or v1 < v2):
+                    v2 = v1
+                t1, v1 = t, v
+            elif v2 is None or v < v2:
+                v2 = v
+        return t1, v1, v2
+
+    def _unrestricted_mins(self, cls: TrafficClass):
+        """Per-class tenant-clock mins when every link may relay for
+        every destination: the queued-tenant union across serveable
+        dests is then exactly the class's live-tenant set, and the
+        result is worker-independent — so it is cached against the
+        queue's mutation epoch (any push/pop/reclass, including a
+        recall's requeue, bumps the epoch and invalidates it)."""
+        queue = self.queue
+        epoch = queue._epoch
+        hit = self._preempt_mins.get(cls)
+        if hit is not None and hit[0] == epoch:
+            return hit[1]
+        mins = self._two_min_clocks(cls, queue._cls_tenant_live[cls])
+        self._preempt_mins[cls] = (epoch, mins)
+        return mins
 
     # -- online adaptation (tentpole: live estimates drive the plan) -----
     def best_fleet_rate(self) -> float:
@@ -551,9 +682,14 @@ class PathSelector:
             self.config.qos_background_pause
             and self.task_manager.deadline_pressure(now)
         ):
-            self.queue.paused = {TrafficClass.BACKGROUND}
+            paused = {TrafficClass.BACKGROUND}
         else:
-            self.queue.paused = set()
+            paused = set()
+        if paused != self.queue.paused:
+            self.queue.paused = paused
+            # Pausing or unpausing a class changes what a starved link
+            # could pop in either direction.
+            self.queue._avail_epoch += 1
 
     # ------------------------------------------------------------------
     def _may_relay_for(self, relay_dev: int, dest: int) -> bool:
@@ -707,7 +843,7 @@ class PathSelector:
         Centralized mode (paper §4): one dispatcher serves the least-loaded
         link first, then by best observed rate (beyond-paper tiebreak when
         score_based_selection is on)."""
-        ws = list(self.workers.values())
+        ws = self._worker_list
         if self.config.flow_control != "centralized":
             return ws
         if self.config.score_based_selection:
@@ -732,24 +868,38 @@ class PathSelector:
             # hysteresis band recall their queued chunks before anyone
             # pulls, so the recalled work re-places this same round.
             if self.config.adapt_replan:
-                for w in self.workers.values():
+                for w in self._worker_list:
                     self._adapt_worker(w)
             # Preemption pass: every dispatch round is a micro-task
             # boundary — in-flight chunks that queued work now outranks
             # yield here (their recalled slots are pulled again below).
             if self.config.qos_enabled and self.config.qos_preempt_inflight:
-                for w in self.workers.values():
-                    self._preempt_worker(w)
+                for w in self._worker_list:
+                    if w._inflight:
+                        self._preempt_worker(w)
             # Two-phase: direct pulls first so a synchronously-completing
             # backend cannot let one relay worker drain the queue before
             # the destination's own link gets its direct-priority chance.
             # (Skipped when direct priority is ablated — Table 2.)
             order = self._worker_order()
+            queue = self.queue
+            # Inline two provable no-op gates (the same checks maybe_pull
+            # / _capacity open with, read fresh per worker): in a deep-
+            # backlog replay most workers are either saturated
+            # (outstanding >= queue_depth forces _capacity() <= 0 on
+            # every branch — adapt weighting only shrinks depth, and the
+            # shed/backoff probes fire only at outstanding == 0) or
+            # starved, and neither is worth a method call per kick.
+            qd = self.config.queue_depth
             if self.config.direct_priority:
                 for w in order:
-                    w.maybe_pull(direct_only=True)
+                    if (w.outstanding < qd
+                            and w._starved_at != queue._avail_epoch):
+                        w.maybe_pull(direct_only=True)
             for w in order:
-                w.maybe_pull()
+                if (w.outstanding < qd
+                        and w._starved_at != queue._avail_epoch):
+                    w.maybe_pull()
             self._schedule_probe_wakeup()
         finally:
             self._kicking = False

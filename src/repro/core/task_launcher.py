@@ -95,6 +95,12 @@ class SimBackend(Backend):
                 lk.record_completions = True
         # Completion recorder hook (per engine flow); set by the engine.
         self.on_chunk_landed: Optional[Callable[[MicroTask], None]] = None
+        # Launch plans — (stages, pipelined, hold_from, wire) — depend
+        # only on (link_dev, dest, direction): topology and relay_streams
+        # are fixed after construction, and submit_path never mutates a
+        # stage list, so each route's plan is computed once. (Rate
+        # multipliers mutate link *state*, not the stage list.)
+        self._plan_cache: Dict[tuple, tuple] = {}
 
     def all_links(self) -> List[SimLink]:
         out = list(self.dram.values()) + [self.xgmi_h2d, self.xgmi_d2h]
@@ -203,32 +209,38 @@ class SimBackend(Backend):
     def launch(
         self, mt: MicroTask, route: Route, on_done: Callable[[], None]
     ) -> PreemptHandle:
-        stages = self.stages_for(route, mt.direction)
-        pipelined = self.config.relay_streams >= 2 or route.is_direct
-        # naive mode only serializes the relay GPU's own hops (PCIe,
-        # NVLink) — find the first relay-device stage
-        hold_from = 0
-        if not pipelined:
-            for i, (lk, _) in enumerate(stages):
-                if lk.name.startswith(("pcie", "nvl")):
-                    hold_from = i
-                    break
+        key = (route.link_dev, route.dest, mt.direction)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            stages = self.stages_for(route, mt.direction)
+            pipelined = self.config.relay_streams >= 2 or route.is_direct
+            # naive mode only serializes the relay GPU's own hops (PCIe,
+            # NVLink) — find the first relay-device stage
+            hold_from = 0
+            if not pipelined:
+                for i, (lk, _) in enumerate(stages):
+                    if lk.name.startswith(("pcie", "nvl")):
+                        hold_from = i
+                        break
+            # A chunk may be cooperatively recalled only while none of
+            # its interconnect hops (PCIe wire or NVLink) has begun —
+            # recalling after an NVLink hop would re-run it, double-
+            # counting that link's load. Host-side stages (DRAM read,
+            # xGMI) are re-run cheaply and don't gate the recall window.
+            wire = next(
+                (i for i, (lk, _) in enumerate(stages)
+                 if lk.name.startswith(("pcie", "nvl"))),
+                0,
+            )
+            plan = (stages, pipelined, hold_from, wire)
+            self._plan_cache[key] = plan
+        stages, pipelined, hold_from, wire = plan
 
         def landed() -> None:
             if self.on_chunk_landed is not None:
                 self.on_chunk_landed(mt)
             on_done()
 
-        # A chunk may be cooperatively recalled only while none of its
-        # interconnect hops (PCIe wire or NVLink) has begun — recalling
-        # after an NVLink hop would re-run it, double-counting that
-        # link's load. Host-side stages (DRAM read, xGMI) are re-run
-        # cheaply and don't gate the recall window.
-        wire = next(
-            (i for i, (lk, _) in enumerate(stages)
-             if lk.name.startswith(("pcie", "nvl"))),
-            0,
-        )
         handle = PreemptHandle(wire_stage=wire)
         submit_path(
             self.world,

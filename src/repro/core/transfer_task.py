@@ -252,42 +252,56 @@ class TransferTask:
         return self.nbytes / self.elapsed / (1 << 30)
 
 
-@dataclasses.dataclass
 class MicroTask:
     """A fixed-size fragment of a TransferTask (paper Fig 5).
 
     ``dest`` is the destination-GPU tag the Path Selector keys on ("color"
     in the paper's figure).
+
+    Slotted and pooled: a serving-scale replay creates millions of
+    chunks, so the parent fields that are fixed for the task's lifetime
+    (``dest``/``direction``/``tenant``/``deadline``) are copied into
+    slots at construction instead of delegating through ``parent`` on
+    every queue operation, and ``TaskManager`` recycles landed instances
+    through a bounded free list. ``traffic_class`` and ``allow_replan``
+    stay live properties — escalation changes the parent's effective
+    class while chunks are queued.
     """
 
-    parent: TransferTask
-    offset: int
-    nbytes: int
-    seq: int
+    __slots__ = ("parent", "offset", "nbytes", "seq",
+                 "dest", "direction", "tenant", "deadline")
 
-    @property
-    def dest(self) -> int:
-        return self.parent.target
+    def __init__(
+        self, parent: TransferTask, offset: int, nbytes: int, seq: int
+    ) -> None:
+        self._init(parent, offset, nbytes, seq)
 
-    @property
-    def direction(self) -> Direction:
-        return self.parent.direction
+    def _init(
+        self, parent: TransferTask, offset: int, nbytes: int, seq: int
+    ) -> None:
+        self.parent = parent
+        self.offset = offset
+        self.nbytes = nbytes
+        self.seq = seq
+        self.dest = parent.target
+        self.direction = parent.direction
+        self.tenant = parent.tenant
+        self.deadline = parent.deadline
 
     @property
     def traffic_class(self) -> TrafficClass:
         return self.parent.qos_class
 
     @property
-    def tenant(self) -> str:
-        return self.parent.tenant
-
-    @property
-    def deadline(self) -> Optional[float]:
-        return self.parent.deadline
-
-    @property
     def allow_replan(self) -> bool:
         return self.parent.allow_replan
+
+    def __repr__(self) -> str:
+        return (
+            f"MicroTask(task={self.parent.task_id}, seq={self.seq}, "
+            f"offset={self.offset}, nbytes={self.nbytes}, "
+            f"dest={self.dest})"
+        )
 
 
 class TenantArbiter:
@@ -353,12 +367,20 @@ class WFQTenantArbiter(TenantArbiter):
     def __init__(self, config: MMAConfig) -> None:
         self.config = config
         self._vtime: Dict[Tuple[TrafficClass, str], float] = {}
+        # Shares are fixed at config time, so the float each tenant
+        # divides by is memoized — the division itself stays (a cached
+        # reciprocal multiply differs in the last bit).
+        self._share_cache: Dict[str, float] = {}
 
     def key(self, mt: MicroTask) -> str:
         return mt.tenant
 
     def _share(self, tenant: str) -> float:
-        return max(self.config.tenant_share(tenant), 1e-9)
+        s = self._share_cache.get(tenant)
+        if s is None:
+            s = max(self.config.tenant_share(tenant), 1e-9)
+            self._share_cache[tenant] = s
+        return s
 
     def vtime(self, cls, tenant: str) -> float:
         return self._vtime.get((cls, tenant), 0.0)
@@ -457,18 +479,79 @@ class MicroTaskQueue:
                 else TenantArbiter()
             )
         self.tenants = tenant_arbiter
-        # class -> dest -> tenant -> heap of (deadline_key, arrival, mt).
-        # Drained tenant heaps are deleted (so a dest slot is falsy once
-        # empty); dest keys persist like the flat queue's did.
+        # class -> dest -> tenant -> heap of [deadline_key, arrival, mt]
+        # entries (mutable lists: escalation tombstones an entry in place
+        # by clearing slot 2 instead of rebuilding the heap — lazy
+        # deletion). Drained tenant heaps are deleted (so a dest slot is
+        # falsy once empty); dest keys persist like the flat queue's did.
         self._by_class_dest: Dict[
             TrafficClass,
-            Dict[int, Dict[str, List[Tuple[float, int, MicroTask]]]],
+            Dict[int, Dict[str, List[list]]],
         ] = {c: {} for c in TrafficClass}
         self._remaining: Dict[Tuple[TrafficClass, int], int] = {}
         self._vtime: Dict[TrafficClass, float] = {c: 0.0 for c in TrafficClass}
         self._arrivals = itertools.count()
         # Classes currently paused by the selector (deadline pressure).
         self.paused: Set[TrafficClass] = set()
+        # O(1) occupancy bookkeeping (the seed walked every heap to
+        # answer "is the queue empty?" / "is this class active?" on every
+        # push): total live entries, live entries per class, live entries
+        # per (class, tenant), and live/tombstoned counts per
+        # (class, dest, tenant) heap.
+        self._size = 0
+        self._class_size: Dict[TrafficClass, int] = {
+            c: 0 for c in TrafficClass
+        }
+        self._cls_tenant_live: Dict[TrafficClass, Dict[str, int]] = {
+            c: {} for c in TrafficClass
+        }
+        self._live: Dict[Tuple[TrafficClass, int, str], int] = {}
+        self._dead: Dict[Tuple[TrafficClass, int, str], int] = {}
+        # task_id -> {id(entry): entry} of the task's live queued entries
+        # (insertion = arrival order), so escalation finds them without
+        # scanning every heap.
+        self._entries_by_task: Dict[int, Dict[int, list]] = {}
+        # WFQ weights are fixed at config time; memoize the floats.
+        self._weight_cache: Dict[TrafficClass, float] = {}
+        # Mutation epoch: bumped by every operation that can change which
+        # tenants have queued work or any virtual clock (push, successful
+        # pop, reclass; requeue and busy-period resets route through
+        # push). Lets read-side consumers (the preemption pass) cache
+        # derived state exactly for as long as nothing changed.
+        self._epoch = 0
+        # Availability epoch: bumped only by events that can make a
+        # previously work-starved link's ``select`` succeed — push/
+        # requeue, reclass, pause-set changes, and active-flow changes
+        # (reservation; bumped by the TaskManager). Pops deliberately do
+        # NOT bump it: removing work or charging a clock can never turn
+        # a None select into a hit, so a worker whose last full select
+        # came up empty stays provably empty until this advances.
+        self._avail_epoch = 0
+
+    def _purge_top(self, heap: List[list], hkey) -> None:
+        """Drop tombstoned entries from the heap top so ``heap[0]`` is a
+        live entry (a heap with any live entries is never left empty —
+        all-dead heaps are deleted outright when their last live entry
+        goes)."""
+        n = self._dead.get(hkey, 0)
+        if not n:
+            return
+        while heap and heap[0][2] is None:
+            heapq.heappop(heap)
+            n -= 1
+        if n:
+            self._dead[hkey] = n
+        else:
+            del self._dead[hkey]
+
+    def _drop_task_entry(self, mt: MicroTask, entry: list) -> None:
+        """Unindex a popped entry from its task's live-entry map."""
+        tid = mt.parent.task_id
+        d = self._entries_by_task.get(tid)
+        if d is not None:
+            d.pop(id(entry), None)
+            if not d:
+                del self._entries_by_task[tid]
 
     def _deadline_key(self, mt: MicroTask) -> float:
         if (
@@ -481,24 +564,40 @@ class MicroTaskQueue:
 
     # -- class arbitration ----------------------------------------------
     def _weight(self, cls: TrafficClass) -> float:
-        return max(self.config.class_weight(cls), 1e-9)
+        w = self._weight_cache.get(cls)
+        if w is None:
+            w = max(self.config.class_weight(cls), 1e-9)
+            self._weight_cache[cls] = w
+        return w
 
     def _active_classes(self, dest: Optional[int]):
         """Classes with pending work (for ``dest``, or anywhere)."""
         for cls, by_dest in self._by_class_dest.items():
             if dest is None:
-                if any(by_dest.values()):
+                if self._class_size[cls]:
                     yield cls
             elif by_dest.get(dest):
                 yield cls
 
     def _head_arrival(self, cls: TrafficClass, dest: Optional[int]) -> int:
         by_dest = self._by_class_dest[cls]
+        best: Optional[int] = None
         if dest is not None:
-            return min(h[0][1] for h in by_dest[dest].values())
-        return min(
-            h[0][1] for q in by_dest.values() for h in q.values()
-        )
+            for t, h in by_dest[dest].items():
+                self._purge_top(h, (cls, dest, t))
+                a = h[0][1]
+                if best is None or a < best:
+                    best = a
+        else:
+            for d, q in by_dest.items():
+                for t, h in q.items():
+                    self._purge_top(h, (cls, d, t))
+                    a = h[0][1]
+                    if best is None or a < best:
+                        best = a
+        if best is None:
+            raise ValueError(f"no pending work for {cls} dest={dest}")
+        return best
 
     def class_order(self, dest: Optional[int] = None) -> List[TrafficClass]:
         """Pending classes in arbitration order (highest priority first).
@@ -514,8 +613,16 @@ class MicroTaskQueue:
             return []
         if not self.config.qos_enabled:
             return sorted(active, key=lambda c: self._head_arrival(c, dest))
-        order = sorted(active, key=lambda c: (self._vtime[c],
-                                              self._head_arrival(c, dest)))
+        # Head arrival only breaks exact virtual-time ties; it walks
+        # every (dest, tenant) lane of a class, so compute it lazily —
+        # distinct vtimes (the common case once classes have been
+        # served) sort on vtime alone.
+        vts = [self._vtime[c] for c in active]
+        if len(set(vts)) == len(vts):
+            order = sorted(active, key=lambda c: self._vtime[c])
+        else:
+            order = sorted(active, key=lambda c: (self._vtime[c],
+                                                  self._head_arrival(c, dest)))
         if (self.config.qos_strict_latency
                 and TrafficClass.LATENCY in active):
             order = [TrafficClass.LATENCY] + [
@@ -525,17 +632,12 @@ class MicroTaskQueue:
 
     # -- tenant helpers ---------------------------------------------------
     def _tenant_has_work(self, cls: TrafficClass, tenant: str) -> bool:
-        return any(
-            tenant in q for q in self._by_class_dest[cls].values()
-        )
+        return self._cls_tenant_live[cls].get(tenant, 0) > 0
 
     def _active_tenants(self, cls: TrafficClass) -> List[str]:
-        seen: List[str] = []
-        for q in self._by_class_dest[cls].values():
-            for t in q:
-                if t not in seen:
-                    seen.append(t)
-        return seen
+        # Live-count keys; consumers take min-floors or set membership,
+        # so ordering is immaterial.
+        return list(self._cls_tenant_live[cls])
 
     def tenant_vtime(self, cls: TrafficClass, tenant: str) -> float:
         """Level-2 virtual clock of ``tenant`` within ``cls`` (0.0 when
@@ -554,17 +656,19 @@ class MicroTaskQueue:
 
     # -- queue operations -------------------------------------------------
     def push(self, mt: MicroTask) -> None:
+        self._epoch += 1
+        self._avail_epoch += 1
         cls = mt.traffic_class
         tkey = self.tenants.key(mt)
         by_dest = self._by_class_dest[cls]
-        if self.is_empty():
+        if self._size == 0:
             # Whole backlog drained: the WFQ busy period is over. Reset all
             # virtual times so credit/debt earned while classes ran solo
             # does not starve (or favor) anyone when contention returns.
             self._vtime = {c: 0.0 for c in TrafficClass}
             self.tenants.reset()
         else:
-            if not any(by_dest.values()):
+            if self._class_size[cls] == 0:
                 # Class (re)activates into a busy system: advance its
                 # virtual time to the busiest active floor so an idle
                 # class cannot hoard credit and then monopolize the links
@@ -577,10 +681,19 @@ class MicroTaskQueue:
                 # Same re-activation rule one level down: a tenant joining
                 # a busy class starts at the least-served active floor.
                 self.tenants.on_activate(cls, tkey, self._active_tenants(cls))
+        entry = [self._deadline_key(mt), next(self._arrivals), mt]
         heapq.heappush(
-            by_dest.setdefault(mt.dest, {}).setdefault(tkey, []),
-            (self._deadline_key(mt), next(self._arrivals), mt),
+            by_dest.setdefault(mt.dest, {}).setdefault(tkey, []), entry
         )
+        self._entries_by_task.setdefault(
+            mt.parent.task_id, {}
+        )[id(entry)] = entry
+        hkey = (cls, mt.dest, tkey)
+        self._live[hkey] = self._live.get(hkey, 0) + 1
+        self._size += 1
+        self._class_size[cls] += 1
+        tl = self._cls_tenant_live[cls]
+        tl[tkey] = tl.get(tkey, 0) + 1
         key = (cls, mt.dest)
         self._remaining[key] = self._remaining.get(key, 0) + mt.nbytes
 
@@ -606,6 +719,7 @@ class MicroTaskQueue:
             0.0, self._vtime[cls] - mt.nbytes / self._weight(cls)
         )
         self.tenants.refund(cls, self.tenants.key(mt), mt.nbytes)
+        self._epoch += 1
 
     def pop_for_dest(
         self, dest: int, cls: Optional[TrafficClass] = None
@@ -625,16 +739,38 @@ class MicroTaskQueue:
         if len(q) == 1:
             tkey = next(iter(q))
         else:
+            for t, h in q.items():
+                self._purge_top(h, (cls, dest, t))
             tkey = self.tenants.pick(
                 cls, list(q), lambda t: q[t][0][1]
             )
         heap = q[tkey]
-        _, _, mt = heapq.heappop(heap)
-        if not heap:
+        hkey = (cls, dest, tkey)
+        self._purge_top(heap, hkey)
+        entry = heapq.heappop(heap)
+        mt = entry[2]
+        self._drop_task_entry(mt, entry)
+        live = self._live[hkey] - 1
+        if live:
+            self._live[hkey] = live
+        else:
+            del self._live[hkey]
+            if heap:
+                # Only tombstones left; drop them with the heap.
+                self._dead.pop(hkey, None)
             del q[tkey]
+        self._size -= 1
+        self._class_size[cls] -= 1
+        tl = self._cls_tenant_live[cls]
+        c = tl[tkey] - 1
+        if c:
+            tl[tkey] = c
+        else:
+            del tl[tkey]
         self._remaining[(cls, dest)] -= mt.nbytes
         self._vtime[cls] += mt.nbytes / self._weight(cls)
         self.tenants.charge(cls, tkey, mt.nbytes)
+        self._epoch += 1
         return mt
 
     def reclass_task(
@@ -643,45 +779,87 @@ class MicroTaskQueue:
         """Move every queued micro-task of ``task_id`` from ``old_cls`` to
         ``new_cls`` (slack-based escalation), preserving each entry's
         deadline key and arrival stamp. Returns the bytes moved.
-        In-flight chunks (already pulled by a link) are unaffected."""
-        moved_total = 0
-        src_map = self._by_class_dest[old_cls]
-        dst_map = self._by_class_dest[new_cls]
+        In-flight chunks (already pulled by a link) are unaffected.
+
+        A task's queued entries all live in one (dest, tenant) bucket
+        (both are fixed per task), found via the per-task entry index.
+        Each source entry is tombstoned in place — O(log n) per entry
+        instead of rebuilding the source heap — and a fresh entry with
+        the same (deadline key, arrival) lands in the destination heap,
+        so pop order is unchanged. Tombstone-heavy heaps are compacted
+        per ``sim_tombstone_compact_frac``."""
+        entries = self._entries_by_task.get(task_id)
+        if not entries:
+            return 0
+        self._epoch += 1
+        self._avail_epoch += 1
+        first = next(iter(entries.values()))
+        mt0 = first[2]
+        dest = mt0.dest
+        tkey = self.tenants.key(mt0)
         # Tenants entering new_cls through this move bypass push, so the
         # WFQ re-activation floor must be applied here too — an escalated
         # tenant must not enter the class with a zero clock and
         # monopolize it.
-        already_active = set(self._active_tenants(new_cls))
-        for dest, q in src_map.items():
-            nbytes = 0
-            for tkey, heap in list(q.items()):
-                moved = [e for e in heap if e[2].parent.task_id == task_id]
-                if not moved:
-                    continue
-                kept = [e for e in heap if e[2].parent.task_id != task_id]
-                if kept:
-                    heapq.heapify(kept)
-                    q[tkey] = kept
-                else:
-                    del q[tkey]
-                dq = dst_map.setdefault(dest, {}).setdefault(tkey, [])
-                for e in moved:
-                    heapq.heappush(dq, e)
-                    nbytes += e[2].nbytes
-            if nbytes == 0:
-                continue
-            self._remaining[(old_cls, dest)] -= nbytes
-            self._remaining[(new_cls, dest)] = (
-                self._remaining.get((new_cls, dest), 0) + nbytes
+        entering = (
+            self.tenants.enabled
+            and self._cls_tenant_live[new_cls].get(tkey, 0) == 0
+        )
+        q = self._by_class_dest[old_cls][dest]
+        heap = q[tkey]
+        dq = (
+            self._by_class_dest[new_cls]
+            .setdefault(dest, {})
+            .setdefault(tkey, [])
+        )
+        new_entries: Dict[int, list] = {}
+        nbytes = 0
+        for e in entries.values():
+            ne = [e[0], e[1], e[2]]
+            e[2] = None
+            heapq.heappush(dq, ne)
+            new_entries[id(ne)] = ne
+            nbytes += ne[2].nbytes
+        n = len(new_entries)
+        self._entries_by_task[task_id] = new_entries
+        hkey = (old_cls, dest, tkey)
+        live = self._live[hkey] - n
+        dead = self._dead.get(hkey, 0) + n
+        if live:
+            self._live[hkey] = live
+            frac = self.config.sim_tombstone_compact_frac
+            if dead > 16 and dead > frac * (dead + live):
+                kept = [e for e in heap if e[2] is not None]
+                heapq.heapify(kept)
+                q[tkey] = kept
+                self._dead.pop(hkey, None)
+            else:
+                self._dead[hkey] = dead
+        else:
+            del self._live[hkey]
+            self._dead.pop(hkey, None)
+            del q[tkey]
+        nhkey = (new_cls, dest, tkey)
+        self._live[nhkey] = self._live.get(nhkey, 0) + n
+        self._class_size[old_cls] -= n
+        self._class_size[new_cls] += n
+        tl = self._cls_tenant_live[old_cls]
+        c = tl[tkey] - n
+        if c:
+            tl[tkey] = c
+        else:
+            del tl[tkey]
+        tl = self._cls_tenant_live[new_cls]
+        tl[tkey] = tl.get(tkey, 0) + n
+        self._remaining[(old_cls, dest)] -= nbytes
+        self._remaining[(new_cls, dest)] = (
+            self._remaining.get((new_cls, dest), 0) + nbytes
+        )
+        if nbytes and entering:
+            self.tenants.on_activate(
+                new_cls, tkey, self._active_tenants(new_cls)
             )
-            moved_total += nbytes
-        if moved_total and self.tenants.enabled:
-            for tkey in self._active_tenants(new_cls):
-                if tkey not in already_active:
-                    self.tenants.on_activate(
-                        new_cls, tkey, self._active_tenants(new_cls)
-                    )
-        return moved_total
+        return nbytes
 
     def remaining_bytes(
         self, dest: int, cls: Optional[TrafficClass] = None
@@ -711,9 +889,9 @@ class MicroTaskQueue:
         total = 0
         for q in self._by_class_dest[cls].values():
             for heap in q.values():
-                for dkey, _, mt in heap:
-                    if dkey <= deadline:
-                        total += mt.nbytes
+                for e in heap:
+                    if e[2] is not None and e[0] <= deadline:
+                        total += e[2].nbytes
         return total
 
     def longest_remaining_dest(
@@ -743,8 +921,13 @@ class MicroTaskQueue:
         q = self._by_class_dest[cls].get(dest)
         if not q:
             return None
-        best = min(heap[0][0] for heap in q.values() if heap)
-        return None if best == float("inf") else best
+        best = None
+        for t, heap in q.items():
+            self._purge_top(heap, (cls, dest, t))
+            d = heap[0][0]
+            if best is None or d < best:
+                best = d
+        return None if best is None or best == float("inf") else best
 
     def pending_dests(self, cls: Optional[TrafficClass] = None) -> List[int]:
         out = []
@@ -759,7 +942,8 @@ class MicroTaskQueue:
         best, best_stamp = None, None
         for c in classes:
             for dest, q in self._by_class_dest[c].items():
-                for heap in q.values():
+                for t, heap in q.items():
+                    self._purge_top(heap, (c, dest, t))
                     if best_stamp is None or heap[0][1] < best_stamp:
                         best, best_stamp = dest, heap[0][1]
         return best
@@ -779,15 +963,10 @@ class MicroTaskQueue:
         return self._oldest_head_dest((cls,))
 
     def __len__(self) -> int:
-        return sum(
-            len(heap)
-            for by_dest in self._by_class_dest.values()
-            for q in by_dest.values()
-            for heap in q.values()
-        )
+        return self._size
 
     def is_empty(self) -> bool:
-        return len(self) == 0
+        return self._size == 0
 
 
 class TaskManager:
@@ -809,6 +988,10 @@ class TaskManager:
         self._active_flows: Dict[
             Tuple[TrafficClass, int, Direction], int
         ] = {}
+        # Direction-agnostic companion count: the reservation probe
+        # (has_active_flow with direction=None) runs on every select,
+        # and summing both directions there would walk every live flow.
+        self._active_cd: Dict[Tuple[TrafficClass, int], int] = {}
         self.escalations = 0                     # flows promoted so far
         # Congestion-adaptive chunk sizing hook: the engine points this at
         # PathSelector.adaptive_chunk_bytes. Returns None to keep the
@@ -816,6 +999,35 @@ class TaskManager:
         self.chunk_size_fn: Optional[
             Callable[[TransferTask], Optional[int]]
         ] = None
+        # Landed MicroTask free list (``sim_micro_pool_size``): a chunk's
+        # only terminal point is micro_task_done — preempted chunks
+        # requeue, never release — so recycling there is safe.
+        self._mt_pool: List[MicroTask] = []
+        # Deadline watch sets, replacing the seed's every-task scans on
+        # each selector kick:
+        #  * _deadlined — insertion-ordered (matching _tasks order, so
+        #    promotions fire in the same relative order) watch of tasks
+        #    escalate_at_risk can still act on: deadlined and declared
+        #    below LATENCY. Dropped on completion and on deadline
+        #    expiry — sim time is monotonic, an expired deadline never
+        #    re-arms either escalation branch.
+        #  * _latency_deadline — (onset_key, deadline, task_id) heap
+        #    feeding the boolean deadline_pressure probe; entries are
+        #    added when a deadlined task is (or becomes) LATENCY-class
+        #    and pruned once expired. Stale entries (completed/demoted
+        #    tasks) are dropped when they surface at the head.
+        #
+        # Both sets are gated by *onset keys*: a conservative lower
+        # bound on the first instant a task can become at-risk (see
+        # _onset_key). Unlanded bytes only shrink, so the true onset
+        # only moves later — before the bound, the exact at_risk test
+        # provably returns False and the scan is skipped entirely.
+        self._deadlined: Dict[int, TransferTask] = {}
+        self._latency_deadline: List[Tuple[float, float, int]] = []
+        # Earliest onset bound over the _deadlined watch set; inf when
+        # nothing is watched. escalate_at_risk returns without scanning
+        # while now is below it.
+        self._escalate_next_k: float = float("inf")
 
     def add_completion_listener(self, cb: Callable[[TransferTask], None]) -> None:
         self._completion_cbs.append(cb)
@@ -832,11 +1044,17 @@ class TaskManager:
         if chunk is None:
             chunk = self.config.chunk_bytes
         micro: List[MicroTask] = []
+        pool = self._mt_pool
         off = 0
         seq = 0
         while off < task.nbytes:
             n = min(chunk, task.nbytes - off)
-            micro.append(MicroTask(parent=task, offset=off, nbytes=n, seq=seq))
+            if pool:
+                mt = pool.pop()
+                mt._init(task, off, n, seq)
+            else:
+                mt = MicroTask(parent=task, offset=off, nbytes=n, seq=seq)
+            micro.append(mt)
             off += n
             seq += 1
         self._outstanding[task.task_id] = len(micro)
@@ -844,6 +1062,19 @@ class TaskManager:
         self._tasks[task.task_id] = task
         key = (task.qos_class, task.target, task.direction)
         self._active_flows[key] = self._active_flows.get(key, 0) + 1
+        cd = (task.qos_class, task.target)
+        self._active_cd[cd] = self._active_cd.get(cd, 0) + 1
+        if task.deadline is not None:
+            k = self._onset_key(task)
+            if task.traffic_class is not TrafficClass.LATENCY:
+                self._deadlined[task.task_id] = task
+                if k < self._escalate_next_k:
+                    self._escalate_next_k = k
+            if task.qos_class is TrafficClass.LATENCY:
+                heapq.heappush(
+                    self._latency_deadline,
+                    (k, task.deadline, task.task_id),
+                )
         for mt in micro:
             self.queue.push(mt)
         return micro
@@ -859,24 +1090,34 @@ class TaskManager:
         so e.g. the fallback bypass only applies same-direction)?"""
         if direction is not None:
             return self._active_flows.get((cls, dest, direction), 0) > 0
-        return any(
-            n > 0 for (c, d, _), n in self._active_flows.items()
-            if c is cls and d == dest
-        )
+        return self._active_cd.get((cls, dest), 0) > 0
 
     def micro_task_done(self, mt: MicroTask, now: float) -> None:
-        """Called by the Task Launcher when a micro-task's last hop lands."""
+        """Called by the Task Launcher when a micro-task's last hop lands.
+        The landed chunk object is recycled through the bounded free
+        list (this is a chunk's only terminal point — preemption
+        requeues the same object)."""
         tid = mt.parent.task_id
         self._outstanding[tid] -= 1
         self._bytes_left[tid] -= mt.nbytes
+        if len(self._mt_pool) < self.config.sim_micro_pool_size:
+            self._mt_pool.append(mt)
         if self._outstanding[tid] == 0:
             task = self._tasks.pop(tid)
             del self._outstanding[tid]
             del self._bytes_left[tid]
+            self._deadlined.pop(tid, None)
+            # An active-flow retirement can lift a direct-path
+            # reservation, widening what starved links may pop.
+            self.queue._avail_epoch += 1
             key = (task.qos_class, task.target, task.direction)
             self._active_flows[key] -= 1
             if self._active_flows[key] == 0:
                 del self._active_flows[key]
+            cd = (task.qos_class, task.target)
+            self._active_cd[cd] -= 1
+            if self._active_cd[cd] == 0:
+                del self._active_cd[cd]
             task.state = TaskState.COMPLETE
             task.complete_time = now
             for cb in self._completion_cbs:
@@ -896,6 +1137,25 @@ class TaskManager:
         configured per-flow estimate rate."""
         rate = self.config.qos_deadline_est_gbps * GB
         return self.bytes_left(task.task_id) / rate
+
+    # Slop absorbing float-rearrangement rounding between the exact
+    # ``at_risk`` comparison (deadline - now < slack * projected) and the
+    # onset key's rearranged form (now > deadline - slack * projected):
+    # sim times are O(1e3) s, so last-bit error is ~1e-13 — six orders
+    # below this margin. Scans triggered inside the margin re-run the
+    # exact test, so the slop can only cost a no-op scan, never a
+    # missed or spurious escalation.
+    _ONSET_EPS = 1e-9
+
+    def _onset_key(self, task: TransferTask) -> float:
+        """Conservative lower bound on the first sim time ``at_risk`` can
+        flip True for ``task``, computed from its *current* unlanded
+        bytes. Bytes only shrink and float division/multiplication/
+        subtraction are monotone, so a key computed earlier is a valid
+        bound later — at-risk onset only moves away."""
+        return task.deadline - (
+            self.config.qos_deadline_slack * self._projected_finish_s(task)
+        )
 
     def at_risk(self, task: TransferTask, now: float) -> bool:
         """Deadline jeopardy: remaining slack below the safety margin.
@@ -917,15 +1177,45 @@ class TaskManager:
         old_cls = task.qos_class
         if old_cls is new_cls:
             return 0
+        # Reclassing moves the task's active-flow reservation between
+        # classes even when no chunks are queued (reclass_task bumps
+        # only when it moves entries).
+        self.queue._avail_epoch += 1
         old_key = (old_cls, task.target, task.direction)
         self._active_flows[old_key] -= 1
         if self._active_flows[old_key] == 0:
             del self._active_flows[old_key]
         new_key = (new_cls, task.target, task.direction)
         self._active_flows[new_key] = self._active_flows.get(new_key, 0) + 1
+        old_cd = (old_cls, task.target)
+        self._active_cd[old_cd] -= 1
+        if self._active_cd[old_cd] == 0:
+            del self._active_cd[old_cd]
+        new_cd = (new_cls, task.target)
+        self._active_cd[new_cd] = self._active_cd.get(new_cd, 0) + 1
         task.effective_class = new_cls
         if new_cls is TrafficClass.LATENCY:
             self.escalations += 1
+            if task.deadline is not None:
+                heapq.heappush(
+                    self._latency_deadline,
+                    (self._onset_key(task), task.deadline, task.task_id),
+                )
+        elif task.deadline is not None:
+            if (
+                task.traffic_class is TrafficClass.LATENCY
+                and task.task_id in self._tasks
+            ):
+                # A declared-LATENCY task demoted by an external caller
+                # is escalation-eligible again (branch 2 below); watch it.
+                self._deadlined[task.task_id] = task
+            if task.task_id in self._deadlined:
+                # Demotion re-arms the at-risk branch for a watched task
+                # whose recorded bound was its expiry; pull the scan gate
+                # back to its at-risk onset.
+                k = self._onset_key(task)
+                if k < self._escalate_next_k:
+                    self._escalate_next_k = k
         return self.queue.reclass_task(task.task_id, old_cls, new_cls)
 
     def escalate_at_risk(self, now: float) -> List[TransferTask]:
@@ -933,33 +1223,88 @@ class TaskManager:
         to LATENCY (``qos_deadline_escalate``), and demote an escalated
         flow back to its declared class once its deadline is lost —
         strict priority for a guaranteed miss only hurts the deadlines
-        that are still winnable. Returns the promoted tasks."""
+        that are still winnable. Returns the promoted tasks.
+
+        Scans the ``_deadlined`` watch set (tasks either branch can
+        still act on), not every active task; watch order matches task
+        registration order, so promotions fire in the seed's relative
+        order. The scan itself is gated on the earliest onset bound
+        across the watch set (``_escalate_next_k``): below it no watched
+        task can be at risk *or* expired (the bound never exceeds the
+        deadline), so the call is O(1). Each scan re-tightens the bound
+        from every surviving task's current unlanded bytes."""
         if not (
             self.config.qos_enabled and self.config.qos_deadline_escalate
         ):
             return []
+        if now + self._ONSET_EPS < self._escalate_next_k:
+            return []
         promoted = []
-        for task in list(self._tasks.values()):
+        expired: List[int] = []
+        next_k = float("inf")
+        for task in list(self._deadlined.values()):
+            if now > task.deadline:
+                if (
+                    task.effective_class is TrafficClass.LATENCY
+                    and task.traffic_class is not TrafficClass.LATENCY
+                ):
+                    self.promote(task, task.traffic_class)
+                # An expired deadline never re-arms either branch (sim
+                # time is monotonic): stop watching.
+                expired.append(task.task_id)
+                continue
             if (
-                task.effective_class is TrafficClass.LATENCY
-                and task.traffic_class is not TrafficClass.LATENCY
-                and task.deadline is not None
-                and now > task.deadline
-            ):
-                self.promote(task, task.traffic_class)
-            elif (
                 task.qos_class is not TrafficClass.LATENCY
                 and self.at_risk(task, now)
             ):
                 self.promote(task, TrafficClass.LATENCY)
                 promoted.append(task)
+                # Now LATENCY: the only remaining action is expiry.
+                k = task.deadline
+            elif task.qos_class is TrafficClass.LATENCY:
+                k = task.deadline
+            else:
+                k = self._onset_key(task)
+            if k < next_k:
+                next_k = k
+        for tid in expired:
+            self._deadlined.pop(tid, None)
+        self._escalate_next_k = next_k
         return promoted
 
     def deadline_pressure(self, now: float) -> bool:
         """True while any active LATENCY-class flow's deadline is in
-        jeopardy — the trigger for pausing BACKGROUND pulls."""
-        return any(
-            task.qos_class is TrafficClass.LATENCY
-            and self.at_risk(task, now)
-            for task in self._tasks.values()
-        )
+        jeopardy — the trigger for pausing BACKGROUND pulls.
+
+        Reads the ``_latency_deadline`` watch heap, ordered by onset
+        bound: entries whose bound lies in the future provably cannot be
+        at risk yet and are never touched, so each call examines only
+        the entries at the boundary. An examined entry is dropped if
+        stale (completed/demoted task) or expired (a lost deadline is
+        never again at risk), confirmed against the *exact* ``at_risk``
+        test otherwise, and re-keyed at the task's current — smaller —
+        unlanded-bytes projection when the exact test says not-yet (the
+        bound only moves later, so re-keying always makes progress).
+        The existence check is order-independent: which at-risk entry
+        surfaces first cannot change the boolean."""
+        heap = self._latency_deadline
+        tasks = self._tasks
+        thresh = now + self._ONSET_EPS
+        hit = False
+        keep: List[Tuple[float, float, int]] = []
+        while heap and heap[0][0] <= thresh:
+            entry = heapq.heappop(heap)
+            task = tasks.get(entry[2])
+            if task is None or task.qos_class is not TrafficClass.LATENCY:
+                continue                    # stale — drop
+            deadline = entry[1]
+            if now > deadline:
+                continue                    # lost, never at risk again
+            if self.at_risk(task, now):
+                keep.append(entry)          # still watched, bound unchanged
+                hit = True
+                break
+            keep.append((self._onset_key(task), deadline, entry[2]))
+        for entry in keep:
+            heapq.heappush(heap, entry)
+        return hit

@@ -1,0 +1,257 @@
+"""Golden equivalence harness for the sim-core fast path.
+
+The PR-9 hot-path rewrite (batched event loop, slotted micro-tasks,
+incremental arbitration bookkeeping) must keep scheduling semantics
+**byte-for-byte identical**: same per-request completion times, same
+byte ledgers, same preemption/escalation counts on the existing
+qos/slo/tenant/disagg benches. This module captures those outputs into
+canonical JSON payloads and digests them; ``tests/GOLDEN_sim.json``
+holds the digests produced by the *seed* (pre-refactor) engine, and
+``tests/test_golden_equivalence.py`` asserts the current engine
+reproduces every digest exactly.
+
+Canonicalization: payloads are plain dict/list/str/int/float trees
+serialized with ``json.dumps(..., sort_keys=True)``. Python's float
+repr is the shortest exact round-trip form, so two payloads digest
+equal iff every captured float is bit-identical — which is precisely
+the equivalence bar the rewrite has to clear (no tolerance, no
+epsilon).
+
+Scenario scale: each bench contributes a ``fast`` variant (reduced
+trace duration, runs in the tier-1 suite) and a ``full`` variant (the
+bench's exact shipped trace, slow-marked). Both are captured from the
+same seed engine.
+
+Regenerating the digests (ONLY legitimate when the scheduling
+semantics intentionally change, never to paper over a fast-path
+divergence):
+
+    PYTHONPATH=src python tests/golden_equivalence.py --write
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sys
+from contextlib import contextmanager
+from typing import Dict, List
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:  # `benchmarks` lives at the repo root
+    sys.path.insert(0, _REPO_ROOT)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "GOLDEN_sim.json")
+
+# Reduced trace durations for the tier-1 (fast) variants.
+FAST_SLO_DURATION_S = 0.30
+FAST_TENANT_DURATION_S = 0.06
+FAST_DISAGG_REQUESTS = 12
+
+
+def _f(x) -> str:
+    """Exact float canonicalization (repr round-trips bit-exactly)."""
+    return repr(float(x))
+
+
+@contextmanager
+def _patched(module, **attrs):
+    """Temporarily override module-level trace constants (the bench
+    modules read them at make_trace() time)."""
+    saved = {k: getattr(module, k) for k in attrs}
+    try:
+        for k, v in attrs.items():
+            setattr(module, k, v)
+        yield
+    finally:
+        for k, v in saved.items():
+            setattr(module, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Scenario captures: each returns a canonical payload (plain JSON tree).
+# ---------------------------------------------------------------------------
+
+def capture_qos() -> Dict:
+    """QoS contention bench, both arms: per-flow completion times and
+    per-class byte ledgers."""
+    from benchmarks.qos_contention import _scenario
+
+    out = {}
+    for arm, qos in (("qos", True), ("fifo", False)):
+        r = _scenario(qos_enabled=qos)
+        out[arm] = {
+            "fetch_s": _f(r["fetch_s"]),
+            "wake_s": _f(r["wake_s"]),
+            "offload_s": _f(r["offload_s"]),
+            "makespan_s": _f(r["makespan_s"]),
+            "bytes_moved": int(r["bytes_moved"]),
+            "by_class": {
+                c.name: int(b) for c, b in sorted(r["by_class"].items())
+            },
+        }
+    return out
+
+
+def _capture_slo(duration_s: float) -> Dict:
+    from benchmarks import slo_trace
+
+    out = {}
+    with _patched(slo_trace, DURATION_S=duration_s):
+        for arm, slo in (("edf", True), ("classonly", False)):
+            events = slo_trace.make_trace()
+            r = slo_trace.replay(events, slo=slo)
+            out[arm] = {
+                # Per-request ledger: arrival, tenant, dest, when the
+                # admission gate actually submitted it, and when the
+                # engine completed it.
+                "requests": [
+                    [
+                        _f(e.t), e.tenant, e.dest, int(e.nbytes),
+                        _f(e.submitted_at), _f(e.task.complete_time),
+                    ]
+                    for e in events
+                ],
+                "bytes_moved": int(r["bytes_moved"]),
+                "escalations": int(r["escalations"]),
+                "hits": int(r["hits"]),
+                "makespan_s": _f(r["makespan_s"]),
+            }
+    return out
+
+
+def _capture_tenant(duration_s: float) -> Dict:
+    from benchmarks import tenant_isolation
+
+    out = {}
+    with _patched(tenant_isolation, DURATION_S=duration_s):
+        for arm, wfq in (("wfq", True), ("classonly", False)):
+            events = tenant_isolation.make_trace()
+            r = tenant_isolation.replay(events, hierarchical=wfq)
+            out[arm] = {
+                "requests": [
+                    [
+                        _f(e.t), e.tenant, e.dest, int(e.nbytes),
+                        _f(e.task.complete_time),
+                    ]
+                    for e in events
+                ],
+                "bytes_moved": int(r["bytes_moved"]),
+                "preempted_chunks": int(r["preempted_chunks"]),
+                "makespan_s": _f(r["makespan_s"]),
+                "tenant_bytes": {
+                    t: int(s["bytes"]) for t, s in r["per_tenant"].items()
+                },
+            }
+    return out
+
+
+def _capture_disagg(n_requests: int | None) -> Dict:
+    """Disagg bench dataflow with per-request TTFT/handoff ledgers.
+    ``n_requests=None`` replays the bench's full request list."""
+    from benchmarks import disagg_trace
+    from repro.configs import PAPER_MODELS
+    from repro.serving import DisaggOrchestrator
+
+    out = {}
+    for arm, multipath in (("multipath", True), ("singlepath", False)):
+        requests = disagg_trace.make_requests()
+        if n_requests is not None:
+            requests = requests[:n_requests]
+        cfg = PAPER_MODELS[disagg_trace.MODEL]
+        orch = DisaggOrchestrator(
+            cfg,
+            multipath=multipath,
+            kv_dtype_size=disagg_trace.KV_DTYPE_SIZE,
+            page_tokens=disagg_trace.PAGE_TOKENS,
+            pinned_bytes=disagg_trace.PINNED_BYTES,
+            pageable_bytes=disagg_trace.PAGEABLE_BYTES,
+            decode_slots=disagg_trace.DECODE_SLOTS,
+        )
+        orch.serve(requests)
+        out[arm] = {
+            "requests": [
+                [
+                    _f(r.arrival), r.tenant, r.state,
+                    _f(r.ttft), _f(r.handoff_fetch_s),
+                    int(r.handoff_bytes),
+                ]
+                for r in requests
+            ],
+            "delivered_bytes": int(orch.delivered_bytes()),
+        }
+    return out
+
+
+# name -> (fast?, capture fn). Fast scenarios run in tier-1; full ones
+# are slow-marked replicas of the shipped bench traces.
+SCENARIOS: Dict[str, tuple] = {
+    "qos": (True, capture_qos),
+    "slo.fast": (True, lambda: _capture_slo(FAST_SLO_DURATION_S)),
+    "tenant.fast": (True, lambda: _capture_tenant(FAST_TENANT_DURATION_S)),
+    "disagg.fast": (True, lambda: _capture_disagg(FAST_DISAGG_REQUESTS)),
+    "slo.full": (False, lambda: _capture_slo(2.0)),
+    "tenant.full": (False, lambda: _capture_tenant(0.5)),
+    "disagg.full": (False, lambda: _capture_disagg(None)),
+}
+
+FAST_SCENARIOS: List[str] = [k for k, (fast, _) in SCENARIOS.items() if fast]
+FULL_SCENARIOS: List[str] = [k for k, (fast, _) in SCENARIOS.items()
+                             if not fast]
+
+
+def digest(payload) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def capture(name: str) -> Dict:
+    return SCENARIOS[name][1]()
+
+
+def load_golden() -> Dict[str, str]:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)["digests"]
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate tests/GOLDEN_sim.json from the "
+                         "CURRENT engine (only for intentional semantic "
+                         "changes)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated scenario names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SCENARIOS)
+
+    digests: Dict[str, str] = {}
+    if args.write and os.path.exists(GOLDEN_PATH):
+        digests.update(load_golden())
+    for name in names:
+        payload = capture(name)
+        d = digest(payload)
+        print(f"{name}: {d}")
+        digests[name] = d
+    if args.write:
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(
+                {
+                    "_comment": (
+                        "Frozen digests of the seed engine's scheduling "
+                        "outputs (per-request completion times + byte "
+                        "ledgers) on the qos/slo/tenant/disagg benches. "
+                        "See tests/golden_equivalence.py."
+                    ),
+                    "digests": digests,
+                },
+                f, indent=2, sort_keys=True,
+            )
+            f.write("\n")
+        print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

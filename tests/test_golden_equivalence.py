@@ -1,0 +1,42 @@
+"""Golden equivalence suite: the sim-core fast path must reproduce the
+seed engine's scheduling outputs byte-for-byte.
+
+``tests/GOLDEN_sim.json`` holds sha256 digests of canonical payloads
+(per-request completion times, byte ledgers, preemption/escalation
+counts) captured from the pre-refactor engine on the qos/slo/tenant/
+disagg benches. Any divergence — a single float changing in its last
+bit — fails here. See tests/golden_equivalence.py for the capture
+definitions and the (rarely legitimate) regeneration procedure.
+"""
+from __future__ import annotations
+
+import pytest
+
+import golden_equivalence as ge
+
+GOLDEN = ge.load_golden()
+
+
+def _check(name: str) -> None:
+    assert name in GOLDEN, (
+        f"scenario {name!r} missing from GOLDEN_sim.json — regenerate "
+        "with: PYTHONPATH=src python tests/golden_equivalence.py --write"
+    )
+    got = ge.digest(ge.capture(name))
+    assert got == GOLDEN[name], (
+        f"golden divergence on {name!r}: scheduling semantics changed "
+        f"(digest {got[:16]}… != frozen {GOLDEN[name][:16]}…). The sim "
+        "fast path must reproduce the seed engine's per-request "
+        "completion times and byte ledgers exactly."
+    )
+
+
+@pytest.mark.parametrize("name", ge.FAST_SCENARIOS)
+def test_golden_fast(name):
+    _check(name)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ge.FULL_SCENARIOS)
+def test_golden_full(name):
+    _check(name)
