@@ -45,6 +45,7 @@ MODULES = [
     ("qos", "qos_contention"),
     ("slo", "slo_trace"),
     ("kvstore", "kvstore_trace"),
+    ("kvstore_disk", "kvstore_disk"),
     ("tenant", "tenant_isolation"),
     ("disagg", "disagg_trace"),
     ("decode", "decode_batching"),

@@ -232,6 +232,31 @@ class MMAConfig:
     # Assumed prefill recompute rate (tokens/s) for cost-aware eviction:
     # a page is worth keeping in proportion to recompute_cost - fetch_cost.
     kvstore_recompute_tok_per_s: float = 4000.0
+    # ---- Disk (SSD) fourth tier -----------------------------------------
+    # Capacity of the disk tier below pageable DRAM. 0 (the default)
+    # disables the tier entirely: eviction removes pages outright and the
+    # store behaves byte-for-byte like the three-tier store (the control
+    # arm benchmarks compare against).
+    kvstore_disk_bytes: int = 0
+    # Disk cost model — distinct from the wire model: a read costs one
+    # seek plus nbytes at the sequential bandwidth, and reads serialize
+    # on the disk's own channel rather than contending on PCIe links.
+    kvstore_disk_gbps: float = 3.0
+    # Per-read seek/issue latency (seconds; the env mirror takes
+    # microseconds). One contiguous read of a prefix path pays it once.
+    kvstore_disk_seek_s: float = 100e-6
+    # Predictive promotion: when a fetch touches a stored prefix,
+    # speculatively stage hot disk-resident descendants of the touched
+    # path (ref-count/recency scored) disk->pageable->pinned as
+    # BACKGROUND traffic the class->tenant->flow arbiter deprioritizes.
+    kvstore_disk_spec_prefetch: bool = False
+    # Cap on speculative bytes in flight. Speculation can never displace
+    # the pinned working set: staged pages land in the pinned tier only
+    # when free slab space exists (no spills), else in pageable DRAM.
+    kvstore_disk_spec_max_bytes: int = 256 * MB
+    # Radix-subtree scan budget per speculation trigger (pages examined
+    # when scoring candidates).
+    kvstore_disk_spec_scan_pages: int = 4096
     # ---- Prefill/decode disaggregation ----------------------------------
     # Number of decode engines sharing the decode-side GPU slice (the
     # decode devices are split round-robin among them).
@@ -484,6 +509,43 @@ class MMAConfig:
         )
         if cfg.kvstore_recompute_tok_per_s <= 0:
             raise ValueError("MMA_KVSTORE_RECOMPUTE_TPS must be positive")
+        cfg.kvstore_disk_bytes = int(
+            _env_float("MMA_KVSTORE_DISK_GB", cfg.kvstore_disk_bytes / GB)
+            * GB
+        )
+        if cfg.kvstore_disk_bytes < 0:
+            raise ValueError("MMA_KVSTORE_DISK_GB must be >= 0")
+        cfg.kvstore_disk_gbps = _env_float(
+            "MMA_KVSTORE_DISK_GBPS", cfg.kvstore_disk_gbps
+        )
+        if cfg.kvstore_disk_gbps <= 0:
+            raise ValueError("MMA_KVSTORE_DISK_GBPS must be positive")
+        cfg.kvstore_disk_seek_s = _env_float(
+            "MMA_KVSTORE_DISK_SEEK_US", cfg.kvstore_disk_seek_s * 1e6
+        ) * 1e-6
+        if cfg.kvstore_disk_seek_s < 0:
+            raise ValueError("MMA_KVSTORE_DISK_SEEK_US must be >= 0")
+        cfg.kvstore_disk_spec_prefetch = bool(
+            _env_int(
+                "MMA_KVSTORE_DISK_SPEC", int(cfg.kvstore_disk_spec_prefetch)
+            )
+        )
+        cfg.kvstore_disk_spec_max_bytes = int(
+            _env_float(
+                "MMA_KVSTORE_DISK_SPEC_MAX_MB",
+                cfg.kvstore_disk_spec_max_bytes / MB,
+            ) * MB
+        )
+        if cfg.kvstore_disk_spec_max_bytes <= 0:
+            raise ValueError("MMA_KVSTORE_DISK_SPEC_MAX_MB must be positive")
+        cfg.kvstore_disk_spec_scan_pages = _env_int(
+            "MMA_KVSTORE_DISK_SPEC_SCAN_PAGES",
+            cfg.kvstore_disk_spec_scan_pages,
+        )
+        if cfg.kvstore_disk_spec_scan_pages <= 0:
+            raise ValueError(
+                "MMA_KVSTORE_DISK_SPEC_SCAN_PAGES must be positive"
+            )
         cfg.disagg_decode_engines = _env_int(
             "MMA_DISAGG_DECODE_ENGINES", cfg.disagg_decode_engines
         )
@@ -635,6 +697,12 @@ ENV_VARS: Dict[str, str] = {
     "kvstore_writeback_batch_pages": "MMA_KVSTORE_WB_BATCH",
     "kvstore_tenant_quota_frac": "MMA_KVSTORE_TENANT_QUOTA",
     "kvstore_recompute_tok_per_s": "MMA_KVSTORE_RECOMPUTE_TPS",
+    "kvstore_disk_bytes": "MMA_KVSTORE_DISK_GB",
+    "kvstore_disk_gbps": "MMA_KVSTORE_DISK_GBPS",
+    "kvstore_disk_seek_s": "MMA_KVSTORE_DISK_SEEK_US",
+    "kvstore_disk_spec_prefetch": "MMA_KVSTORE_DISK_SPEC",
+    "kvstore_disk_spec_max_bytes": "MMA_KVSTORE_DISK_SPEC_MAX_MB",
+    "kvstore_disk_spec_scan_pages": "MMA_KVSTORE_DISK_SPEC_SCAN_PAGES",
     "disagg_decode_engines": "MMA_DISAGG_DECODE_ENGINES",
     "disagg_prefill_devices": "MMA_DISAGG_PREFILL_GPUS",
     "disagg_decode_devices": "MMA_DISAGG_DECODE_GPUS",
@@ -705,6 +773,17 @@ KNOB_DOCS: Dict[str, str] = {
         "per-tenant soft quota as a fraction of host capacity",
     "kvstore_recompute_tok_per_s":
         "assumed prefill rate for cost-aware eviction scoring",
+    "kvstore_disk_bytes":
+        "disk (SSD) tier capacity; 0 = three-tier store; env value in GiB",
+    "kvstore_disk_gbps": "disk sequential read bandwidth (GB/s)",
+    "kvstore_disk_seek_s":
+        "per-read disk seek/issue latency; env value in microseconds",
+    "kvstore_disk_spec_prefetch":
+        "predictively stage hot disk descendants of touched prefixes",
+    "kvstore_disk_spec_max_bytes":
+        "cap on speculative staging bytes in flight; env value in MiB",
+    "kvstore_disk_spec_scan_pages":
+        "radix-subtree pages scanned per speculation trigger",
     "disagg_decode_engines": "decode engines sharing the decode GPU slice",
     "disagg_prefill_devices":
         "GPU indices owned by the prefill engine; unset = first half",

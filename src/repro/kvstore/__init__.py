@@ -6,8 +6,9 @@ Layering:
     boundaries) + the legacy whole-prefix SHA-1 shim;
   * ``radix``    — page-granular radix prefix index with ref-counted
     pages (SGLang/vLLM-style partial-prefix sharing across tenants);
-  * ``tiers``    — residency tiers (GPU / pinned-host slabs / pageable)
-    and the explicit-capacity pinned slab allocator;
+  * ``tiers``    — residency tiers (GPU / pinned-host slabs / pageable /
+    disk), the explicit-capacity pinned slab allocator, and the disk
+    seek+throughput cost model;
   * ``store``    — ``TieredKVStore`` facade: tier manager routing
     promotion (LATENCY, deadline-carrying) and demotion/writeback
     (BACKGROUND, batched) through ``MMAEngine``, cost-aware eviction
@@ -27,11 +28,11 @@ orchestrator that drives them.
 from .hashing import chain_keys, legacy_prefix_key
 from .radix import Page, RadixPrefixIndex
 from .store import FetchSpec, KVHandle, PageLease, TierManager, TieredKVStore
-from .tiers import PinnedSlabPool, Tier, TierCounters
+from .tiers import DiskCostModel, PinnedSlabPool, Tier, TierCounters
 
 __all__ = [
     "chain_keys", "legacy_prefix_key",
     "Page", "RadixPrefixIndex",
     "FetchSpec", "KVHandle", "PageLease", "TierManager", "TieredKVStore",
-    "PinnedSlabPool", "Tier", "TierCounters",
+    "DiskCostModel", "PinnedSlabPool", "Tier", "TierCounters",
 ]

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+from collections import deque
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
@@ -52,6 +53,7 @@ class Page:
     terminal: bool = False        # a stored sequence ends at this page
     exact_only: bool = False      # SSM snapshot: only exact-prefix reuse
     payload: Any = None           # terminal payload (full-hit round trips)
+    spec: bool = False            # staged by predictive promotion, unhit yet
 
 
 class _Node:
@@ -121,6 +123,24 @@ class RadixPrefixIndex:
             out.append(node.page)
             node = node.parent
         out.reverse()
+        return out
+
+    def subtree(self, page: Page, budget: int) -> List[Page]:
+        """Pages strictly below ``page``, BFS order (shallow first),
+        visiting at most ``budget`` nodes — the predictive-promotion
+        candidate walk: the descendants of a touched prefix are the
+        continuations (this session's own deeper turns, sibling sessions
+        forked off the same shared prefix) most likely to be fetched
+        next. Deterministic: children iterate in insertion order."""
+        node = self._nodes.get(page.key)
+        out: List[Page] = []
+        if node is None or budget <= 0:
+            return out
+        queue = deque(node.children.values())
+        while queue and len(out) < budget:
+            n = queue.popleft()
+            out.append(n.page)
+            queue.extend(n.children.values())
         return out
 
     # -- mutation -------------------------------------------------------

@@ -58,7 +58,7 @@ from ..core import Direction, TrafficClass, TransferSpec
 from ..core.config import MMAConfig
 from ..obs import NULL_TRACER, MetricsRegistry
 from .radix import Page, RadixPrefixIndex
-from .tiers import GB, PinnedSlabPool, Tier, TierCounters
+from .tiers import GB, DiskCostModel, PinnedSlabPool, Tier, TierCounters
 
 
 _UNSET: Any = object()     # sentinel: keyword not explicitly passed
@@ -140,6 +140,7 @@ class TierManager:
         target_device: int = 0,
         pinned_bytes: Optional[int] = None,
         pageable_bytes: Optional[int] = None,
+        disk_bytes: Optional[int] = None,
     ) -> None:
         self.engine = engine
         self.config = config or getattr(engine, "config", None) or MMAConfig()
@@ -153,6 +154,23 @@ class TierManager:
             self.config.kvstore_pageable_bytes
             if pageable_bytes is None else pageable_bytes
         )
+        # Disk (SSD) tier below pageable: capacity 0 disables it and the
+        # store behaves byte-for-byte like the three-tier store.
+        self.disk_capacity = (
+            self.config.kvstore_disk_bytes
+            if disk_bytes is None else disk_bytes
+        )
+        self.disk = DiskCostModel(
+            seek_s=self.config.kvstore_disk_seek_s,
+            gbps=self.config.kvstore_disk_gbps,
+        )
+        # The disk is its own serial channel: speculative reads queue
+        # behind each other at seek + bytes/bandwidth, independent of the
+        # wire fabric (demand reads preempt — they are charged
+        # synchronously against the fetch's deadline slack instead).
+        self._disk_free_at = 0.0
+        self.spec_inflight_bytes = 0
+        self._spec_inflight_ids: set = set()
         self.tier_bytes: Dict[Tier, int] = {t: 0 for t in Tier}
         # Unified metrics registry: all TierCounters cells live here
         # under ``kvstore.*`` names.
@@ -186,6 +204,10 @@ class TierManager:
     @property
     def host_bytes(self) -> int:
         return self.tier_bytes[Tier.PINNED] + self.tier_bytes[Tier.PAGEABLE]
+
+    @property
+    def disk_bytes_used(self) -> int:
+        return self.tier_bytes[Tier.DISK]
 
     def register(self, page: Page) -> None:
         """Account a freshly-inserted page in its (GPU) tier."""
@@ -346,16 +368,58 @@ class TierManager:
             self.counters.hits[p.tier] += 1
             self.counters.hit_bytes[p.tier] += p.nbytes
             p.hits += 1
+            if p.spec:
+                # speculation-accuracy ledger: a predictively staged page
+                # counts as a speculative hit only if it is still in a
+                # fast tier when demand arrives (demoted-back-to-disk
+                # pages were staged in vain)
+                p.spec = False
+                if p.tier is not Tier.DISK:
+                    self.counters.spec_hits += 1
+                    self.counters.spec_hit_bytes += p.nbytes
+
+        tr = self._tracer(engine)
+        disk = by_tier[Tier.DISK]
+        disk_s = 0.0
+        if disk:
+            # Demand read: the whole disk-resident run of the prefix path
+            # is one contiguous read (one seek + sequential drain),
+            # charged synchronously against the caller's deadline slack
+            # like pageable staging. The read lands in host DRAM: pinned
+            # when slab space can be made (it is working set — spilling
+            # colder pinned pages is fair), else pageable.
+            disk_s = self.disk.read_seconds(disk, reads=1)
+            self.counters.disk_reads += 1
+            self.counters.disk_staged_bytes += disk
+            if tr.enabled:
+                tr.instant(
+                    "disk_stage", "kvstore", "kvstore",
+                    engine.backend.now(), parent=parent_span,
+                    nbytes=disk, disk_s=disk_s,
+                )
+            protect = {id(p) for p in pages}
+            for p in pages:
+                if p.tier is not Tier.DISK:
+                    continue
+                if not self.pinned.can_alloc(p.nbytes):
+                    self._spill_for(p.nbytes, protect)
+                if self.pinned.can_alloc(p.nbytes):
+                    self._set_tier(p, Tier.PINNED)
+                    self.counters.promotions += 1
+                    self.counters.promoted_bytes += p.nbytes
+                else:
+                    self._set_tier(p, Tier.PAGEABLE)
 
         staged = by_tier[Tier.PAGEABLE]
-        staged_s = staged / (self.config.kvstore_pageable_gbps * GB)
-        tr = self._tracer(engine)
+        page_stage_s = staged / (self.config.kvstore_pageable_gbps * GB)
+        staged_s = disk_s + page_stage_s
         if staged:
             self.counters.staged_bytes += staged
             if tr.enabled:
                 tr.instant(
                     "stage", "kvstore", "kvstore", engine.backend.now(),
-                    parent=parent_span, nbytes=staged, staged_s=staged_s,
+                    parent=parent_span, nbytes=staged,
+                    staged_s=page_stage_s,
                 )
             promoted = 0
             if self.config.kvstore_promote_on_hit:
@@ -379,8 +443,13 @@ class TierManager:
         # GPU-tier pages (writeback still in flight) are already on the
         # device — they cost no wire time at all. That shortcut only
         # holds for the producing device: a cross-device fetch must move
-        # them over the wire like host-resident bytes.
-        dma_bytes = by_tier[Tier.PINNED] + by_tier[Tier.PAGEABLE]
+        # them over the wire like host-resident bytes. Disk bytes always
+        # cross the wire too: the demand read above landed them in host
+        # DRAM, from where the multipath DMA carries them.
+        dma_bytes = (
+            by_tier[Tier.PINNED] + by_tier[Tier.PAGEABLE]
+            + by_tier[Tier.DISK]
+        )
         if cross_device:
             dma_bytes += by_tier[Tier.GPU]
         if pin is not None:
@@ -403,6 +472,91 @@ class TierManager:
         if unpin is not None:
             _when_done(task, lambda: unpin(pages))
         return task, staged_s
+
+    def stage_speculative(
+        self,
+        pages: List[Page],
+        tenant: str,
+        pin: Callable[[List[Page]], None],
+        unpin: Callable[[List[Page]], None],
+        touch: Optional[Callable[[List[Page]], None]] = None,
+        parent_span: Optional[int] = None,
+    ) -> Optional[object]:
+        """Predictive promotion: read disk-resident ``pages`` into host
+        DRAM ahead of demand. Two costs compose:
+
+          * the **disk channel** — reads serialize behind each other at
+            seek + bytes/bandwidth on the disk's own clock
+            (``_disk_free_at``), independent of the wire;
+          * the **host-bound DMA** — the NVMe read into DRAM shares the
+            host root complex with D2H traffic, so it rides the engine
+            as a BACKGROUND transfer the class->tenant->flow arbiter
+            deprioritizes (and pauses under deadline pressure).
+
+        Pages land once both are done: in the pinned tier only when free
+        slab space exists — speculation never spills, so it can never
+        displace the pinned working set — else in pageable DRAM. Landed
+        pages carry ``spec=True`` until a demand fetch resolves them
+        into the speculation-accuracy ledger."""
+        nbytes = sum(p.nbytes for p in pages)
+        if nbytes <= 0:
+            return None
+        pin(pages)
+        self.spec_inflight_bytes += nbytes
+        self._spec_inflight_ids.update(id(p) for p in pages)
+        t0 = self.engine.backend.now()
+        start = max(t0, self._disk_free_at)
+        ready = start + self.disk.read_seconds(nbytes, reads=1)
+        self._disk_free_at = ready
+        task = self.engine.memcpy(
+            nbytes, device=self.target, direction=Direction.D2H,
+            spec=TransferSpec(
+                traffic_class=TrafficClass.BACKGROUND, tenant=tenant,
+                parent_span=parent_span,
+            ),
+        )
+        self.counters.spec_promotions += len(pages)
+        self.counters.spec_promoted_bytes += nbytes
+        self._charge_owner(self.engine, nbytes)
+
+        def land() -> None:
+            for p in pages:
+                if p.tier is Tier.DISK:
+                    self._set_tier(
+                        p,
+                        Tier.PINNED if self.pinned.can_alloc(p.nbytes)
+                        else Tier.PAGEABLE,
+                    )
+                    p.spec = True
+            if touch is not None:
+                # landing IS the predicted touch: without it the staged
+                # pages keep their cold LRU tick and the very next
+                # over-capacity insert demotes them straight back to
+                # disk before the burst they were staged for arrives
+                touch(pages)
+            unpin(pages)
+            self.spec_inflight_bytes -= nbytes
+            self._spec_inflight_ids.difference_update(id(p) for p in pages)
+            tr = self._tracer()
+            if tr.enabled:
+                tr.complete(
+                    "speculate", "kvstore", "kvstore",
+                    t0, self.engine.backend.now(), parent=parent_span,
+                    nbytes=nbytes, pages=len(pages),
+                )
+
+        def arm() -> None:
+            # landing waits on the slower of the BACKGROUND transfer and
+            # the disk channel; without a sim world (non-sim backends)
+            # the channel floor degrades to landing at task completion
+            world = getattr(self.engine.backend, "world", None)
+            if world is not None and ready > self.engine.backend.now():
+                world.at(ready, land)
+            else:
+                land()
+
+        _when_done(task, arm)
+        return task
 
 
 @dataclasses.dataclass(frozen=True)
@@ -462,6 +616,7 @@ class TieredKVStore:
         target_device: int = 0,
         pinned_bytes: Optional[int] = None,
         pageable_bytes: Optional[int] = None,
+        disk_bytes: Optional[int] = None,
     ) -> None:
         self.engine = engine
         self.config = config or getattr(engine, "config", None) or MMAConfig()
@@ -472,6 +627,7 @@ class TieredKVStore:
         self.tiers = TierManager(
             engine, self.config, target_device,
             pinned_bytes=pinned_bytes, pageable_bytes=pageable_bytes,
+            disk_bytes=disk_bytes,
         )
         self.tiers._pinned_pages = lambda: [
             p for p in self.index.pages() if p.tier is Tier.PINNED
@@ -603,6 +759,7 @@ class TieredKVStore:
             engine=p["engine"], target=p["target"], step=p["step"],
             parent_span=p["parent_span"],
         )
+        self._speculate(pages, tenant_v, parent_span=p["parent_span"])
         last = pages[-1]
         payload = last.payload if last.terminal else None
         return hit, task, payload, staged_s
@@ -754,57 +911,146 @@ class TieredKVStore:
         )
         lease.bytes_fetched += task.nbytes
         lease.fetches += 1
+        self._speculate(
+            lease.pages,
+            lease.owner if p["tenant"] is None else p["tenant"],
+            parent_span=p["parent_span"],
+        )
         return task, staged_s
+
+    # -- predictive promotion -------------------------------------------
+    def _speculate(
+        self,
+        matched: List[Page],
+        tenant: str,
+        parent_span: Optional[int] = None,
+    ) -> None:
+        """Touching a prefix predicts its neighborhood: stage hot
+        disk-resident descendants of the matched path ahead of demand.
+
+        The candidate walk widens from the deepest touched page upward —
+        descendants of the terminal first (this session's own deeper
+        turns), then subtrees under ever-shallower ancestors (sibling
+        sessions forked off the same shared prefix; the same structural
+        lookup ``path_to`` exploits, read in the other direction).
+        Candidates are scored hottest-first by (hits, recency, depth)
+        and staged until the ``kvstore_disk_spec_max_bytes`` in-flight
+        cap; landing never spills pinned working set (see
+        ``TierManager.stage_speculative``)."""
+        cfg = self.config
+        tm = self.tiers
+        if (
+            not cfg.kvstore_disk_spec_prefetch
+            or tm.disk_capacity <= 0
+            or not matched
+        ):
+            return
+        budget = cfg.kvstore_disk_spec_max_bytes - tm.spec_inflight_bytes
+        if budget <= 0:
+            return
+        scan = cfg.kvstore_disk_spec_scan_pages
+        seen = {id(p) for p in matched}
+        cands: List[Page] = []
+        for anchor in reversed(matched):
+            if scan <= 0:
+                break
+            for d in self.index.subtree(anchor, scan):
+                scan -= 1
+                if id(d) not in seen:
+                    seen.add(id(d))
+                    cands.append(d)
+                if scan <= 0:
+                    break
+        picks: List[Page] = []
+        total = 0
+        for d in sorted(
+            cands, key=lambda p: (-p.hits, -p.last_used, p.depth)
+        ):
+            if d.tier is not Tier.DISK or id(d) in tm._spec_inflight_ids:
+                continue
+            if total + d.nbytes > budget:
+                break
+            picks.append(d)
+            total += d.nbytes
+        if picks:
+            tm.stage_speculative(
+                picks, tenant,
+                pin=self.index.pin, unpin=self.index.unpin,
+                touch=self.index.touch,
+                parent_span=parent_span,
+            )
+
+    def _staging_floor_seconds(self, pages: List[Page]) -> float:
+        """Backlog-independent staging floor for a page set: pageable
+        bytes at the staging bandwidth plus — for disk-resident bytes —
+        one contiguous seek + sequential read. Pure arithmetic; at
+        ``kvstore_disk_bytes=0`` no page is ever disk-resident and this
+        is exactly the three-tier pageable floor."""
+        staged = sum(p.nbytes for p in pages if p.tier is Tier.PAGEABLE)
+        floor = staged / (self.config.kvstore_pageable_gbps * GB)
+        disk = sum(p.nbytes for p in pages if p.tier is Tier.DISK)
+        if disk:
+            floor += self.tiers.disk.read_seconds(disk, reads=1)
+        return floor
 
     def estimate_lease_floor_seconds(self, lease: PageLease) -> float:
         """Backlog-independent staging floor for fetching the leased
         pages — the decode-side admission input: if this alone blows the
         handoff deadline, the request is provably unserveable on time
-        regardless of queue drain."""
-        staged = sum(
-            p.nbytes for p in lease.pages if p.tier is Tier.PAGEABLE
-        )
-        return staged / (self.config.kvstore_pageable_gbps * GB)
+        regardless of queue drain. Disk-resident pages add their seek +
+        sequential-read cost on top of the pageable staging floor."""
+        return self._staging_floor_seconds(lease.pages)
 
     # -- admission estimates --------------------------------------------
     def estimate_fetch_floor_seconds(self, tokens: np.ndarray) -> float:
         """Backlog-independent lower bound on fetch time: the pageable
-        staging cost. Unlike queueing backlog this never drains — if the
-        floor alone blows a deadline, the fetch is provably unmeetable.
-        Pure estimate: touches no LRU state or counters."""
-        pages = self.match_pages(tokens)
-        staged = sum(p.nbytes for p in pages if p.tier is Tier.PAGEABLE)
-        return staged / (self.config.kvstore_pageable_gbps * GB)
+        staging cost plus the disk read cost for disk-resident bytes.
+        Unlike queueing backlog this never drains — if the floor alone
+        blows a deadline, the fetch is provably unmeetable. Pure
+        estimate: touches no LRU state or counters."""
+        return self._staging_floor_seconds(self.match_pages(tokens))
 
     def estimate_fetch_seconds(
         self, tokens: np.ndarray, deadline: Optional[float] = None
     ) -> float:
         """Tier-aware admission estimate: pinned bytes go at the engine's
-        backlogged multipath rate; pageable bytes pay the staging floor on
-        top. Does not move data or bump hit counters."""
+        backlogged multipath rate; pageable bytes pay the staging floor,
+        and disk bytes the seek + sequential read, on top. Does not move
+        data or bump hit counters."""
         pages = self.match_pages(tokens)
         if not pages:
             return 0.0
-        staged = sum(p.nbytes for p in pages if p.tier is Tier.PAGEABLE)
         dma = sum(p.nbytes for p in pages if p.tier is not Tier.GPU)
         est = getattr(self.engine, "estimate_service_seconds", None)
         dma_s = (
             est(dma, TrafficClass.LATENCY, deadline=deadline)
             if est is not None else 0.0
         )
-        return staged / (self.config.kvstore_pageable_gbps * GB) + dma_s
+        return self._staging_floor_seconds(pages) + dma_s
 
     # -- cost-aware eviction --------------------------------------------
     def _keep_benefit(self, page: Page) -> float:
         """Seconds saved per byte by keeping this page: recompute cost of
         its tokens minus the cost of fetching it from its current tier.
-        Cold pageable pages with cheap recompute score lowest."""
+        Cold pageable pages with cheap recompute score lowest; disk pages
+        score by the seek + sequential-read cost of touching them."""
         recompute_s = page.n_tokens / self.config.kvstore_recompute_tok_per_s
-        if page.tier is Tier.PAGEABLE:
+        if page.tier is Tier.DISK:
+            fetch_s = self.tiers.disk.read_seconds(page.nbytes)
+        elif page.tier is Tier.PAGEABLE:
             fetch_s = page.nbytes / (self.config.kvstore_pageable_gbps * GB)
         else:
             fetch_s = page.nbytes / (self.config.qos_deadline_est_gbps * GB)
         return (recompute_s - fetch_s) / max(page.nbytes, 1)
+
+    def _disk_worthwhile(self, page: Page) -> bool:
+        """The disk-fetch-vs-re-prefill crossover: demotion beats outright
+        eviction only while re-reading the page (seek + sequential drain)
+        is cheaper than recomputing its tokens at the assumed prefill
+        rate. Tiny pages on a slow, high-seek disk fail the test and are
+        evicted exactly as in the three-tier store."""
+        recompute_s = page.n_tokens / self.config.kvstore_recompute_tok_per_s
+        return self.tiers.disk.read_seconds(page.nbytes) < recompute_s
 
     def tenant_bytes(self, tenant: str) -> int:
         """Bytes attributable solely to ``tenant`` (shared pages are a
@@ -812,40 +1058,106 @@ class TieredKVStore:
         return self._tenant_bytes_map().get(tenant, 0)
 
     def _tenant_bytes_map(self) -> Dict[str, int]:
-        """Exclusive host bytes per tenant, one O(pages) pass."""
+        """Exclusive host bytes per tenant, one O(pages) pass. Disk
+        bytes do not count: the quota protects scarce host DRAM, not the
+        cheap capacity tier below it."""
         out: Dict[str, int] = {}
         for p in self.index.pages():
-            if len(p.tenants) == 1 and p.tier is not Tier.GPU:
+            if len(p.tenants) == 1 and p.tier in (
+                Tier.PINNED, Tier.PAGEABLE
+            ):
                 (t,) = p.tenants
                 out[t] = out.get(t, 0) + p.nbytes
         return out
 
+    def _over_quota(
+        self, candidates: List[Page], by_tenant: Dict[str, int],
+        quota: float, tenant: str,
+    ) -> List[Page]:
+        return [
+            p for p in candidates
+            if p.tenants and all(
+                by_tenant.get(t, 0) > quota for t in p.tenants
+            ) and tenant not in p.tenants
+        ]
+
+    def _demote_one_to_disk(
+        self, by_tenant: Dict[str, int], quota: float, tenant: str
+    ) -> bool:
+        """Demote one cold host page to the disk tier (capacity-pressure
+        relief that keeps the page matchable). Victims need ``refs == 0``
+        but not leaf-ness — demotion is a tier change, not a removal, so
+        interior pages of a long prefix chain qualify and a single deep
+        path can drain to disk page by page. Only pages that pass the
+        disk-fetch-vs-re-prefill crossover are worth the disk bytes; when
+        the disk itself is full, its lowest-benefit unreferenced leaves
+        are evicted to make room. Returns False when nothing could be
+        demoted (caller falls back to outright eviction)."""
+        tm = self.tiers
+        if tm.disk_capacity <= 0:
+            return False
+        cands = [
+            p for p in self.index.pages()
+            if p.refs == 0
+            and p.tier in (Tier.PINNED, Tier.PAGEABLE)
+            and self._disk_worthwhile(p)
+        ]
+        if not cands:
+            return False
+        pool = self._over_quota(cands, by_tenant, quota, tenant) or cands
+        victim = min(pool, key=lambda p: (self._keep_benefit(p),
+                                          p.last_used))
+        while tm.disk_bytes_used + victim.nbytes > tm.disk_capacity:
+            disk_leaves = [
+                p for p in self.index.evictable() if p.tier is Tier.DISK
+            ]
+            if not disk_leaves:
+                return False
+            dv = min(disk_leaves, key=lambda p: (self._keep_benefit(p),
+                                                 p.last_used))
+            tm.deregister(dv)
+            self.index.remove(dv)
+            tm.counters.disk_evictions += 1
+            tm.counters.disk_evicted_bytes += dv.nbytes
+        tm._set_tier(victim, Tier.DISK)
+        victim.spec = False
+        tm.counters.demotions_disk += 1
+        tm.counters.demoted_disk_bytes += victim.nbytes
+        return True
+
     def _evict_for(self, need: int, tenant: str) -> int:
-        """Free host capacity for ``need`` incoming bytes. Victims are
-        unreferenced leaves, over-quota tenants first, then lowest
-        keep-benefit (fetch-cost vs recompute-cost). Never touches
-        pinned-refs pages — asserted again in ``RadixPrefixIndex.remove``."""
+        """Free host capacity for ``need`` incoming bytes. With a disk
+        tier, cold host pages whose disk read beats re-prefill are
+        *demoted* first (they stay matchable); only crossover losers —
+        or everything, once the disk cannot take more — are removed
+        outright. Victims are unreferenced (leaves, for removal),
+        over-quota tenants first, then lowest keep-benefit (fetch-cost
+        vs recompute-cost). Never touches pinned-refs pages — asserted
+        again in ``RadixPrefixIndex.remove``."""
         freed = 0
+        demoted = 0
         quota = (
             self.config.kvstore_tenant_quota_frac * self.tiers.host_capacity
         )
         # host_bytes already drops as victims go; ``need`` stays constant
         # (the incoming bytes still have to land in full)
         while self.tiers.host_bytes + need > self.tiers.host_capacity:
-            candidates = self.index.evictable()
-            candidates = [p for p in candidates if p.tier is not Tier.GPU]
-            if not candidates:
-                break
-            # one O(pages) accounting pass per eviction, not one per
+            # one O(pages) accounting pass per victim, not one per
             # (candidate x tenant)
             by_tenant = self._tenant_bytes_map()
-            over_quota = [
-                p for p in candidates
-                if p.tenants and all(
-                    by_tenant.get(t, 0) > quota for t in p.tenants
-                ) and tenant not in p.tenants
+            if self._demote_one_to_disk(by_tenant, quota, tenant):
+                demoted += 1
+                continue
+            candidates = [
+                p for p in self.index.evictable()
+                if p.tier in (Tier.PINNED, Tier.PAGEABLE)
             ]
-            pool = over_quota or candidates
+            if not candidates:
+                break
+            pool = (
+                self._over_quota(candidates, by_tenant, quota, tenant)
+                or candidates
+            )
             victim = min(pool, key=lambda p: (self._keep_benefit(p),
                                               p.last_used))
             self.tiers.deregister(victim)
@@ -853,12 +1165,13 @@ class TieredKVStore:
             self.tiers.counters.evictions += 1
             self.tiers.counters.evicted_bytes += victim.nbytes
             freed += victim.nbytes
-        if freed:
+        if freed or demoted:
             tr = self.tiers._tracer()
             if tr.enabled:
                 tr.instant(
                     "evict", "kvstore", "kvstore",
                     self.engine.backend.now(), nbytes=freed, tenant=tenant,
+                    demoted_pages=demoted,
                 )
         return freed
 
@@ -880,6 +1193,23 @@ class TieredKVStore:
                 "high_water_slabs": self.tiers.pinned.high_water_slabs,
                 "allocs": self.tiers.pinned.allocs,
                 "frees": self.tiers.pinned.frees,
+            },
+            "disk": {
+                "capacity_bytes": self.tiers.disk_capacity,
+                "bytes": self.tiers.disk_bytes_used,
+                "gbps": self.tiers.disk.gbps,
+                "seek_s": self.tiers.disk.seek_s,
+            },
+            "speculation": {
+                "staged_pages": c.spec_promotions,
+                "staged_bytes": c.spec_promoted_bytes,
+                "hit_pages": c.spec_hits,
+                "hit_bytes": c.spec_hit_bytes,
+                "inflight_bytes": self.tiers.spec_inflight_bytes,
+                "accuracy": (
+                    c.spec_hits / c.spec_promotions
+                    if c.spec_promotions else None
+                ),
             },
             "live_leases": len(self._leases),
             "lease_bytes_by_owner": self._lease_bytes_map(),

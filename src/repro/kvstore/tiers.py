@@ -1,12 +1,16 @@
 """Residency tiers and the pinned-host slab pool.
 
-Three tiers (paper §3/§5.2.1): KV pages live on GPU HBM while a request
-runs, in a **pinned-host slab pool** (pre-registered DMA-able memory — the
-paper's relay/staging buffers, explicitly capacity-bounded), or in
-pageable host DRAM. Only pinned memory is directly reachable by the
-multipath DMA engines; a pageable page must first be *staged* into a
-pinned slab at ``kvstore_pageable_gbps`` — the tier difference the
-scheduler's admission estimates must account for.
+Four tiers (paper §3/§5.2.1 + the ROADMAP's capacity wall): KV pages
+live on GPU HBM while a request runs, in a **pinned-host slab pool**
+(pre-registered DMA-able memory — the paper's relay/staging buffers,
+explicitly capacity-bounded), in pageable host DRAM, or on **disk**
+(NVMe SSD below pageable — the tier that keeps a working set far past
+DRAM exhaustion fetchable instead of recomputed). Only pinned memory is
+directly reachable by the multipath DMA engines; a pageable page must
+first be *staged* into a pinned slab at ``kvstore_pageable_gbps``, and a
+disk page must be *read* first under ``DiskCostModel`` — per-read seek
+latency plus sequential bandwidth, a cost model deliberately distinct
+from the wire model (an NVMe queue, not a PCIe link fabric).
 
 Accounting invariants (property-tested in ``tests/test_kvstore.py``):
 
@@ -19,12 +23,14 @@ Accounting invariants (property-tested in ``tests/test_kvstore.py``):
     than exceed the slab-backed capacity; callers must spill first. A
     ``free`` below zero is a double-free and asserts.
   * **staging precedes DMA** — pageable bytes always pay the
-    ``kvstore_pageable_gbps`` staging cost *before* the multipath
-    transfer, and that cost is charged against the caller's deadline
-    slack (see ``TierManager.fetch``).
+    ``kvstore_pageable_gbps`` staging cost, and disk bytes the seek +
+    sequential-read cost, *before* the multipath transfer; both are
+    charged against the caller's deadline slack (see
+    ``TierManager.fetch``).
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 from typing import Dict, Iterator, Optional, Tuple
 
@@ -39,6 +45,27 @@ class Tier(enum.IntEnum):
     GPU = 0          # on-device (freshly produced, writeback in flight)
     PINNED = 1       # pinned-host slab pool: direct multipath DMA
     PAGEABLE = 2     # pageable host DRAM: must stage through pinned
+    DISK = 3         # SSD below pageable: seek + sequential-read to touch
+
+
+@dataclasses.dataclass(frozen=True)
+class DiskCostModel:
+    """Seek + sequential-throughput cost model for the disk tier.
+
+    Distinct from the wire model on purpose: a disk read is one queue
+    with a fixed per-read issue latency and a sequential drain rate —
+    there is no multipath, no chunking, no per-link arbitration. One
+    contiguous read of a prefix path (pages of one prefix are laid out
+    sequentially) pays the seek once; each separate read pays its own.
+    """
+
+    seek_s: float
+    gbps: float
+
+    def read_seconds(self, nbytes: int, reads: int = 1) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return max(reads, 1) * self.seek_s + nbytes / (self.gbps * GB)
 
 
 class PinnedSlabPool:
@@ -136,6 +163,16 @@ class TierCounters:
         "staged_bytes",         # pageable bytes staged before DMA
         "evictions",
         "evicted_bytes",
+        "demotions_disk",       # host -> disk (capacity pressure)
+        "demoted_disk_bytes",
+        "disk_reads",           # demand reads (one seek each)
+        "disk_staged_bytes",    # disk bytes read on the fetch path
+        "disk_evictions",       # removed from disk (disk full)
+        "disk_evicted_bytes",
+        "spec_promotions",      # pages staged by predictive promotion
+        "spec_promoted_bytes",
+        "spec_hits",            # speculatively staged pages later hit
+        "spec_hit_bytes",
     )
 
     def __init__(self, registry: Optional[MetricsRegistry] = None) -> None:

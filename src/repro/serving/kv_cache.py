@@ -183,6 +183,7 @@ class KVCacheManager:
         use_radix: Optional[bool] = None,
         pinned_bytes: Optional[int] = None,
         pageable_bytes: Optional[int] = None,
+        disk_bytes: Optional[int] = None,
     ) -> None:
         self.cfg = cfg
         self.engine = engine
@@ -204,6 +205,7 @@ class KVCacheManager:
                 target_device=target_device,
                 pinned_bytes=pinned_bytes,
                 pageable_bytes=pageable_bytes,
+                disk_bytes=disk_bytes,
             )
         else:
             self.pool = HostKVPool()
@@ -329,10 +331,11 @@ class KVCacheManager:
         return staged + est(nbytes, TrafficClass.LATENCY, deadline=deadline)
 
     def estimate_fetch_floor_seconds(self, tokens: np.ndarray) -> float:
-        """Backlog-independent floor on the fetch time (pageable staging
-        only). Queue backlog drains; this floor does not — if it alone
-        exceeds a request's deadline budget, admission can reject
-        immediately instead of holding."""
+        """Backlog-independent floor on the fetch time: pageable staging
+        plus, on the tiered store, the seek + sequential-read cost of
+        disk-resident bytes. Queue backlog drains; this floor does not —
+        if it alone exceeds a request's deadline budget, admission can
+        reject immediately instead of holding."""
         if self.store is not None:
             return self.store.estimate_fetch_floor_seconds(tokens)
         hit, _ = self.prefix.match(tokens)

@@ -310,12 +310,28 @@ class Orchestrator:
         }
         agg_hits: Dict[str, int] = {}
         agg_bytes: Dict[str, int] = {}
+        disk_reads = disk_bytes = spec_staged = spec_hits = 0
         for stats in report.values():
             for tier, n in stats["hits"].items():
                 agg_hits[tier] = agg_hits.get(tier, 0) + n
             for tier, b in stats["hit_bytes"].items():
                 agg_bytes[tier] = agg_bytes.get(tier, 0) + b
-        report["aggregate"] = {"hits": agg_hits, "hit_bytes": agg_bytes}
+            disk_reads += stats["disk_reads"]
+            disk_bytes += stats["disk_staged_bytes"]
+            spec_staged += stats["speculation"]["staged_pages"]
+            spec_hits += stats["speculation"]["hit_pages"]
+        report["aggregate"] = {
+            "hits": agg_hits,
+            "hit_bytes": agg_bytes,
+            "disk": {"reads": disk_reads, "staged_bytes": disk_bytes},
+            "speculation": {
+                "staged_pages": spec_staged,
+                "hit_pages": spec_hits,
+                "accuracy": (
+                    spec_hits / spec_staged if spec_staged else None
+                ),
+            },
+        }
         return report
 
     def _tenant_section(

@@ -8,16 +8,24 @@ drives it through an ``MMAEngine`` on a ``SimWorld``. See
 """
 from .generator import (
     GeneratedWorkload,
+    SessionTrace,
+    SessionTreeSpec,
+    SessionTurn,
     WorkloadRequest,
     WorkloadSpec,
     generate,
+    generate_session_trace,
     replay,
 )
 
 __all__ = [
     "GeneratedWorkload",
+    "SessionTrace",
+    "SessionTreeSpec",
+    "SessionTurn",
     "WorkloadRequest",
     "WorkloadSpec",
     "generate",
+    "generate_session_trace",
     "replay",
 ]

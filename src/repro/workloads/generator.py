@@ -31,6 +31,7 @@ a trace prefix against today's engine on the same trace.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import time
 from typing import Dict, List, Optional, Tuple
@@ -303,6 +304,188 @@ def generate(spec: WorkloadSpec) -> GeneratedWorkload:
 
     return GeneratedWorkload(
         spec=spec, requests=requests, degradations=degradations
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionTreeSpec:
+    """Seeded session-tree trace for KV working-set-overflow shaping.
+
+    ``working_set_multiplier`` is the knob the disk-tier gate turns: the
+    number of sessions is solved so the trace's unique KV bytes land at
+    ``multiplier x pinned_bytes``. Emission is round-robin over rounds
+    with per-tenant *bursts* — in each round every tenant advances all
+    of its sessions by one turn, consecutively — so (a) a session's
+    reuse distance spans every other tenant's round (at multiplier >~
+    the turn count, that alone overflows pinned+pageable DRAM and pushes
+    cold turns to disk), and (b) the first request of a tenant's burst
+    touches the tenant-shared prefix whose radix descendants are exactly
+    the sibling sessions the rest of the burst will fetch — the access
+    structure predictive promotion exploits.
+    """
+
+    seed: int = 11
+    n_tenants: int = 4
+    turns_per_session: int = 4
+    tenant_prefix_tokens: int = 512
+    turn_tokens: int = 256
+    page_tokens: int = 256
+    bytes_per_token: int = 4096
+    pinned_bytes: int = 64 * MB
+    working_set_multiplier: float = 4.0
+    vocab: int = 32000
+    spacing_s: float = 0.05        # arrival spacing between requests
+
+    @property
+    def sessions_per_tenant(self) -> int:
+        """Sessions per tenant solved from the working-set target."""
+        target = self.working_set_multiplier * self.pinned_bytes
+        prefix_bytes = (
+            self.n_tenants * self.tenant_prefix_tokens
+            * self.bytes_per_token
+        )
+        per_session = (
+            self.turns_per_session * self.turn_tokens * self.bytes_per_token
+        )
+        return max(
+            1,
+            round((target - prefix_bytes) / (self.n_tenants * per_session)),
+        )
+
+    def digest_fields(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class SessionTurn:
+    """One request of a session-tree trace: turn ``turn`` of session
+    ``session`` arrives at ``t`` with a prompt of ``n_tokens`` tokens
+    (the session's cumulative prefix). ``reuse_distance_bytes`` counts
+    the unique KV bytes inserted since this session's previous turn
+    (-1 on a session's first turn) — the overflow-shaping assertion."""
+
+    t: float
+    tenant: str
+    session: int
+    turn: int
+    n_tokens: int
+    reuse_distance_bytes: int
+
+
+@dataclasses.dataclass
+class SessionTrace:
+    spec: SessionTreeSpec
+    session_tokens: List[np.ndarray]    # full final token array per session
+    session_tenant: List[str]
+    turns: List[SessionTurn]
+
+    def tokens_for(self, turn: SessionTurn) -> np.ndarray:
+        return self.session_tokens[turn.session][:turn.n_tokens]
+
+    def unique_kv_bytes(self) -> int:
+        """Unique page-aligned KV bytes the full trace stores (shared
+        tenant prefixes counted once — radix semantics)."""
+        sp = self.spec
+        prefix_pages = sp.tenant_prefix_tokens // sp.page_tokens
+        total_pages = 0
+        for s in self.session_tokens:
+            total_pages += len(s) // sp.page_tokens - prefix_pages
+        total_pages += sp.n_tenants * prefix_pages
+        return total_pages * sp.page_tokens * sp.bytes_per_token
+
+    def digest(self) -> str:
+        """Seed-stable content digest: token streams + emission order."""
+        h = hashlib.sha256()
+        h.update(json.dumps(self.spec.digest_fields(),
+                            sort_keys=True).encode())
+        for s in self.session_tokens:
+            h.update(np.ascontiguousarray(s).tobytes())
+        for t in self.turns:
+            h.update(f"{t.session}:{t.turn}:{t.n_tokens}".encode())
+        return h.hexdigest()
+
+    def summary(self) -> Dict:
+        distances = [
+            t.reuse_distance_bytes for t in self.turns
+            if t.reuse_distance_bytes >= 0
+        ]
+        return {
+            "spec": self.spec.digest_fields(),
+            "requests": len(self.turns),
+            "sessions": len(self.session_tokens),
+            "unique_kv_bytes": self.unique_kv_bytes(),
+            "working_set_over_pinned": (
+                self.unique_kv_bytes() / max(self.spec.pinned_bytes, 1)
+            ),
+            "reuse_distance_min": min(distances) if distances else 0,
+            "reuse_distance_median": (
+                int(np.median(distances)) if distances else 0
+            ),
+            "digest": self.digest(),
+        }
+
+
+def generate_session_trace(spec: SessionTreeSpec) -> SessionTrace:
+    """Generate the session-tree trace for ``spec`` (deterministic in
+    the seed; same spec -> bit-identical tokens, order, and digest)."""
+    if spec.tenant_prefix_tokens % spec.page_tokens:
+        raise ValueError("tenant_prefix_tokens must be page-aligned")
+    if spec.turn_tokens % spec.page_tokens:
+        raise ValueError("turn_tokens must be page-aligned")
+    rng = np.random.default_rng(spec.seed)
+    tenants = [f"tenant-{i:02d}" for i in range(spec.n_tenants)]
+    prefixes = [
+        rng.integers(0, spec.vocab, spec.tenant_prefix_tokens,
+                     dtype=np.int32)
+        for _ in range(spec.n_tenants)
+    ]
+    spt = spec.sessions_per_tenant
+    session_tokens: List[np.ndarray] = []
+    session_tenant: List[str] = []
+    body = spec.turns_per_session * spec.turn_tokens
+    for ti in range(spec.n_tenants):
+        for _ in range(spt):
+            session_tokens.append(np.concatenate([
+                prefixes[ti],
+                rng.integers(0, spec.vocab, body, dtype=np.int32),
+            ]))
+            session_tenant.append(tenants[ti])
+
+    turns: List[SessionTurn] = []
+    # unique-byte clock: prefix pages count once per tenant, turn bodies
+    # once per (session, turn)
+    cum = 0
+    last_touch = [-1] * len(session_tokens)
+    prefix_seen = [False] * spec.n_tenants
+    prefix_bytes = spec.tenant_prefix_tokens * spec.bytes_per_token
+    turn_bytes = spec.turn_tokens * spec.bytes_per_token
+    i = 0
+    for rnd in range(spec.turns_per_session):
+        for ti in range(spec.n_tenants):
+            for s in range(ti * spt, (ti + 1) * spt):
+                dist = cum - last_touch[s] if last_touch[s] >= 0 else -1
+                if rnd == 0 and not prefix_seen[ti]:
+                    prefix_seen[ti] = True
+                    cum += prefix_bytes
+                cum += turn_bytes
+                last_touch[s] = cum
+                turns.append(SessionTurn(
+                    t=i * spec.spacing_s,
+                    tenant=tenants[ti],
+                    session=s,
+                    turn=rnd,
+                    n_tokens=(
+                        spec.tenant_prefix_tokens
+                        + (rnd + 1) * spec.turn_tokens
+                    ),
+                    reuse_distance_bytes=dist,
+                ))
+                i += 1
+    return SessionTrace(
+        spec=spec,
+        session_tokens=session_tokens,
+        session_tenant=session_tenant,
+        turns=turns,
     )
 
 

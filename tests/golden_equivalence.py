@@ -183,6 +183,77 @@ def _capture_disagg(n_requests: int | None) -> Dict:
     return out
 
 
+def capture_kvdisk() -> Dict:
+    """Four-tier KV store drive, three arms on one deterministic op
+    sequence: ``disk0`` (SSD tier disabled — must stay byte-for-byte
+    the pre-disk three-tier behavior), ``disk`` (demand paging only),
+    and ``spec`` (predictive promotion on — its landing order is
+    deterministic on the sim clock, so the digest is stable even though
+    it differs from the demand-only arm)."""
+    import numpy as np
+
+    from repro.core import MMAConfig, make_sim_engine
+    from repro.kvstore import TieredKVStore
+
+    def seq(start: int, n: int) -> np.ndarray:
+        return np.arange(start, start + n, dtype=np.int32)
+
+    # two tenants' session forest off one shared 2-page prefix
+    prefix = seq(0, 8)
+    sessions = [np.concatenate([prefix, seq(1000 * i, 8)])
+                for i in (1, 2, 3)]
+    pressure = [seq(5000 * i, 8) for i in (1, 2, 3, 4)]
+
+    out = {}
+    arms = (("disk0", (0, False)), ("disk", (16, False)),
+            ("spec", (16, True)))
+    for arm, (disk_pages, spec) in arms:
+        cfg = MMAConfig(
+            kvstore_slab_bytes=1024,
+            kvstore_disk_bytes=disk_pages * 4 * 64,
+            kvstore_disk_spec_prefetch=spec,
+        )
+        eng, world, _ = make_sim_engine(config=cfg)
+        store = TieredKVStore(
+            eng, bytes_per_token=64, page_size=4,
+            pinned_bytes=2 * 4 * 64, pageable_bytes=2 * 4 * 64,
+        )
+        ops = []
+
+        def record(kind, hit, staged_s):
+            ops.append([
+                kind, int(hit), _f(staged_s),
+                {t.name: int(b) for t, b in store.tiers.tier_bytes.items()},
+                int(store.index.total_bytes),
+            ])
+
+        for i, s in enumerate(sessions):
+            store.insert(s, tenant=f"t{i % 2}")
+            world.run()
+            record("insert", 0, 0.0)
+        for p in pressure:                   # demote the forest to disk
+            store.insert(p, tenant="cold")
+            world.run()
+            record("insert", 0, 0.0)
+        # touching the shared prefix is what arms speculation
+        hit, _, _, staged_s = store.fetch(prefix, tenant="t0")
+        world.run()
+        record("fetch.prefix", hit, staged_s)
+        for i, s in enumerate(sessions):     # the burst
+            hit, _, _, staged_s = store.fetch(s, tenant=f"t{i % 2}")
+            world.run()
+            record(f"fetch.s{i}", hit, staged_s)
+        c = store.tiers.counters
+        out[arm] = {
+            "ops": ops,
+            "counters": {
+                k: int(v) for k, v in sorted(c.as_dict().items())
+                if isinstance(v, int)
+            },
+        }
+    return out
+
+
 # name -> (fast?, capture fn). Fast scenarios run in tier-1; full ones
 # are slow-marked replicas of the shipped bench traces.
 SCENARIOS: Dict[str, tuple] = {
@@ -190,6 +261,7 @@ SCENARIOS: Dict[str, tuple] = {
     "slo.fast": (True, lambda: _capture_slo(FAST_SLO_DURATION_S)),
     "tenant.fast": (True, lambda: _capture_tenant(FAST_TENANT_DURATION_S)),
     "disagg.fast": (True, lambda: _capture_disagg(FAST_DISAGG_REQUESTS)),
+    "kvdisk": (True, capture_kvdisk),
     "slo.full": (False, lambda: _capture_slo(2.0)),
     "tenant.full": (False, lambda: _capture_tenant(0.5)),
     "disagg.full": (False, lambda: _capture_disagg(None)),

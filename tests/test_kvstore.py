@@ -478,7 +478,7 @@ def test_manager_tier_report_shapes():
     kv.offload(arange(64))
     world.run()
     rep = kv.tier_report()
-    assert set(rep["tier_bytes"]) == {"gpu", "pinned", "pageable"}
+    assert set(rep["tier_bytes"]) == {"gpu", "pinned", "pageable", "disk"}
     flat, _, _ = _manager(use_radix=False)
     assert "pageable" in flat.tier_report()["tier_bytes"]
 
@@ -537,6 +537,12 @@ def test_kvstore_env_mirrors(monkeypatch):
         "MMA_KVSTORE_WB_BATCH": "7",
         "MMA_KVSTORE_TENANT_QUOTA": "0.3",
         "MMA_KVSTORE_RECOMPUTE_TPS": "9000",
+        "MMA_KVSTORE_DISK_GB": "64",
+        "MMA_KVSTORE_DISK_GBPS": "1.5",
+        "MMA_KVSTORE_DISK_SEEK_US": "250",
+        "MMA_KVSTORE_DISK_SPEC": "1",
+        "MMA_KVSTORE_DISK_SPEC_MAX_MB": "512",
+        "MMA_KVSTORE_DISK_SPEC_SCAN_PAGES": "1024",
     }
     for k, v in env.items():
         monkeypatch.setenv(k, v)
@@ -551,7 +557,17 @@ def test_kvstore_env_mirrors(monkeypatch):
     assert c.kvstore_writeback_batch_pages == 7
     assert c.kvstore_tenant_quota_frac == 0.3
     assert c.kvstore_recompute_tok_per_s == 9000.0
+    assert c.kvstore_disk_bytes == 64 * GB
+    assert c.kvstore_disk_gbps == 1.5
+    assert c.kvstore_disk_seek_s == pytest.approx(250e-6)
+    assert c.kvstore_disk_spec_prefetch is True
+    assert c.kvstore_disk_spec_max_bytes == 512 << 20
+    assert c.kvstore_disk_spec_scan_pages == 1024
     monkeypatch.setenv("MMA_KVSTORE_TENANT_QUOTA", "0")
+    with pytest.raises(ValueError):
+        MMAConfig.from_env()
+    monkeypatch.setenv("MMA_KVSTORE_TENANT_QUOTA", "0.3")
+    monkeypatch.setenv("MMA_KVSTORE_DISK_GBPS", "0")
     with pytest.raises(ValueError):
         MMAConfig.from_env()
 
@@ -576,7 +592,7 @@ except ImportError:                                    # pragma: no cover
         @staticmethod
         def _nop(*a, **kw):
             return None
-        integers = lists = tuples = _nop
+        integers = lists = tuples = booleans = _nop
 
 
 @given(
@@ -686,6 +702,188 @@ def test_prop_tier_byte_accounting_conserves(page, ops):
 
 
 # ---------------------------------------------------------------------------
+# Disk tier: four-tier conservation, lease safety, zero-capacity
+# equivalence
+# ---------------------------------------------------------------------------
+def make_disk_store(page: int = 4, disk_pages: int = 16, spec: bool = False,
+                    host_pages: int = 2):
+    """Tiny four-tier store: ``host_pages`` per DRAM tier, a
+    ``disk_pages`` SSD below them, recompute slow enough that every
+    page passes the disk-vs-re-prefill crossover."""
+    return make_store(
+        page_size=page, bytes_per_token=64,
+        pinned_bytes=host_pages * page * 64,
+        pageable_bytes=host_pages * page * 64,
+        kvstore_disk_bytes=disk_pages * page * 64,
+        kvstore_disk_spec_prefetch=spec,
+    )
+
+
+def assert_conserved(store):
+    assert sum(store.tiers.tier_bytes.values()) == store.index.total_bytes
+    assert store.tiers.tier_bytes[Tier.PINNED] == (
+        store.tiers.pinned.allocated_bytes
+    )
+    assert all(v >= 0 for v in store.tiers.tier_bytes.values())
+    assert store.tiers.disk_bytes_used <= store.tiers.disk_capacity
+    assert store.tiers.spec_inflight_bytes >= 0
+
+
+def test_overflow_demotes_to_disk_and_demand_fetch_promotes_back():
+    store, _, world = make_disk_store()
+    a = arange(3 * 4)
+    store.insert(a, tenant="a")
+    world.run()
+    for i in range(1, 4):                               # pressure
+        store.insert(arange(2 * 4, start=100 * i), tenant="b")
+        world.run()
+    c = store.tiers.counters
+    assert c.demotions_disk > 0 and c.evictions == 0
+    assert store.tiers.disk_bytes_used > 0
+    assert_conserved(store)
+    hit, task, _, staged_s = store.fetch(a)
+    world.run()
+    assert hit == len(a)
+    assert c.disk_reads >= 1 and c.disk_staged_bytes > 0
+    # the demand read is charged synchronously: seek + bytes/bandwidth
+    assert staged_s >= store.tiers.disk.seek_s
+    assert all(p.tier is not Tier.DISK for p in store.index.match(a))
+    assert_conserved(store)
+
+
+def test_disk_pages_with_live_leases_never_reaped():
+    store, _, world = make_disk_store(disk_pages=4)
+    a = arange(3 * 4)
+    store.insert(a, tenant="a")
+    world.run()
+    # pressure until the first insert has been demoted to disk — then
+    # lease it THERE, before disk-full reaping can reach it
+    for i in range(1, 4):
+        store.insert(arange(2 * 4, start=100 * i), tenant="b")
+        world.run()
+        if any(p.tier is Tier.DISK for p in store.index.match(a)):
+            break
+    on_disk = [p for p in store.index.match(a) if p.tier is Tier.DISK]
+    assert on_disk, "pressure must have demoted the first insert"
+    lease = store.acquire_lease(tokens=a, owner="reader")
+    assert lease is not None
+    # hammer: every demotion now needs disk space, and the disk is
+    # mostly leased pages — the reaper must only ever take unreferenced
+    # leaves, never a leased page, and fall back to host eviction
+    for i in range(4, 12):
+        store.insert(arange(2 * 4, start=100 * i), tenant="b")
+        world.run()
+        assert_conserved(store)
+    for p in lease.pages:
+        assert store.index.get(p.key) is p
+    store.release_lease(lease)
+
+
+@given(
+    page=st.integers(2, 6),
+    spec=st.booleans(),
+    ops=st.lists(
+        st.tuples(st.integers(0, 3), st.integers(1, 40),
+                  st.integers(0, 2**31)),
+        min_size=1, max_size=12,
+    ),
+)
+@settings(max_examples=30, deadline=None)
+def test_prop_four_tier_conservation_under_interleavings(page, spec, ops):
+    store, _, world = make_store(
+        page_size=page, bytes_per_token=64,
+        pinned_bytes=2 * page * 64, pageable_bytes=2 * page * 64,
+        kvstore_disk_bytes=16 * page * 64,
+        kvstore_disk_spec_prefetch=spec,
+    )
+    known, leases = [], []
+    for kind, n, seed in ops:
+        rng = np.random.default_rng(seed)
+        t = rng.integers(0, 20, size=n).astype(np.int32)
+        if kind == 0 or not known:
+            store.insert(t, tenant=f"t{seed % 2}")
+            known.append(t)
+        elif kind == 1:
+            # demand fetch: disk pages promote; with spec on, the
+            # match also speculatively stages radix descendants
+            store.fetch(known[seed % len(known)])
+        elif kind == 2:
+            ls = store.acquire_lease(tokens=known[seed % len(known)])
+            if ls is not None:
+                leases.append(ls)
+        elif leases:
+            store.release_lease(leases.pop(seed % len(leases)))
+        world.run()
+        assert_conserved(store)
+        for ls in leases:
+            for p in ls.pages:
+                assert store.index.get(p.key) is p
+                assert p.refs > 0
+    for ls in leases:
+        store.release_lease(ls)
+    world.run()
+    assert_conserved(store)
+    assert all(p.refs == 0 for p in store.index.pages())
+
+
+def test_disk_zero_capacity_is_byte_identical_to_three_tiers():
+    """``kvstore_disk_bytes=0`` must reproduce the three-tier store
+    byte-for-byte — even with speculation switched on, which has
+    nothing to stage when no page can ever reach DISK."""
+    def drive(**cfg_kw):
+        store, _, world = make_store(
+            page_size=4, bytes_per_token=64,
+            pinned_bytes=2 * 4 * 64, pageable_bytes=2 * 4 * 64,
+            **cfg_kw,
+        )
+        log = []
+        for i in range(6):
+            store.insert(arange(2 * 4, start=50 * i), tenant=f"t{i % 2}")
+            world.run()
+            hit, task, _, staged_s = store.fetch(
+                arange(2 * 4, start=50 * (i // 2)))
+            world.run()
+            log.append((hit, repr(staged_s),
+                        dict(store.tiers.tier_bytes),
+                        store.index.total_bytes))
+        st_ = store.stats()
+        return log, st_, store
+
+    base_log, base_stats, _ = drive()
+    disk_log, disk_stats, disk_store = drive(
+        kvstore_disk_bytes=0, kvstore_disk_spec_prefetch=True,
+    )
+    assert disk_log == base_log
+    # no disk page ever existed: eviction removed, never demoted
+    assert disk_stats["demotions_disk"] == 0
+    assert disk_stats["disk_reads"] == 0
+    assert disk_stats["spec_promotions"] == 0
+    assert disk_stats["tier_bytes"]["disk"] == 0
+    assert disk_stats["evictions"] == base_stats["evictions"]
+    assert disk_stats["hits"] == base_stats["hits"]
+    # and the staging floor is the pure pageable formula
+    t = arange(2 * 4)
+    _, pages = disk_store.match(t)
+    pageable = sum(p.nbytes for p in pages
+                   if p.tier is Tier.PAGEABLE)
+    want = pageable / (disk_store.config.kvstore_pageable_gbps * GB)
+    assert disk_store.estimate_fetch_floor_seconds(t) == want
+
+
+def test_manager_zero_disk_floor_matches_pageable_formula():
+    kv, _, world = _manager(
+        pinned_bytes=0, pageable_bytes=1 << 20, disk_bytes=0,
+    )
+    t = arange(32)
+    kv.offload(t)
+    world.run()
+    stored = kv.store.match(t)[1]
+    pageable = sum(p.nbytes for p in stored)
+    want = pageable / (kv.mma_config.kvstore_pageable_gbps * GB)
+    assert kv.estimate_fetch_floor_seconds(t) == want
+
+
+# ---------------------------------------------------------------------------
 # Trace benchmark (slow tier)
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
@@ -702,3 +900,24 @@ def test_kvstore_trace_benchmark_clears_bar(tmp_path):
     data = json.loads(out.read_text())
     assert data["improvement"] >= 1.3
     assert data["radix"]["hit_rate"] >= data["flat"]["hit_rate"]
+
+
+@pytest.mark.slow
+def test_kvstore_disk_benchmark_clears_bars(tmp_path):
+    out = tmp_path / "BENCH_kvdisk.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["MMA_BENCH_KVDISK_PATH"] = str(out)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.kvstore_disk"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(out.read_text())
+    # predictive promotion >= 1.3x demand paging at byte-equal tokens
+    assert data["improvement"] >= 1.3
+    assert (data["disk_spec"]["total_tokens"]
+            == data["disk_demand"]["total_tokens"])
+    # flat TTFT curve past DRAM exhaustion: 10x within 1.5x of 1x
+    assert data["curve_10x_over_1x"] <= 1.5
+    assert data["disk_spec"]["disk_reads"] < data["disk_demand"]["disk_reads"]

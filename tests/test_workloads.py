@@ -1,0 +1,80 @@
+"""Session-tree overflow-shaping trace (``repro.workloads``).
+
+The disk-tier bench gate replays ``generate_session_trace`` output and
+asserts TTFT curves, so the trace itself must hold two properties or
+the gate measures noise:
+
+  * **seed determinism** — same spec, bit-identical tokens, emission
+    order, and digest (the bench's arms replay the *same* trace);
+  * **overflow shaping** — at the gate's working-set multiplier, every
+    session re-touch has more unique KV bytes inserted since its last
+    turn than pinned DRAM holds, so an LRU-ish three-tier store *must*
+    have evicted the session by the time it returns. Without this the
+    "flat TTFT past DRAM exhaustion" claim isn't exercised.
+"""
+import numpy as np
+
+from repro.core.config import MB
+from repro.workloads import SessionTreeSpec, generate_session_trace
+
+
+def test_session_trace_digest_stable_across_generations():
+    spec = SessionTreeSpec(seed=7, working_set_multiplier=3.0)
+    a = generate_session_trace(spec)
+    b = generate_session_trace(spec)
+    assert a.digest() == b.digest()
+    assert [t.n_tokens for t in a.turns] == [t.n_tokens for t in b.turns]
+    for sa, sb in zip(a.session_tokens, b.session_tokens):
+        assert np.array_equal(sa, sb)
+
+
+def test_session_trace_digest_moves_with_seed_and_spec():
+    base = generate_session_trace(SessionTreeSpec(seed=7))
+    assert base.digest() != generate_session_trace(
+        SessionTreeSpec(seed=8)).digest()
+    assert base.digest() != generate_session_trace(
+        SessionTreeSpec(seed=7, working_set_multiplier=6.0)).digest()
+
+
+def test_session_trace_working_set_tracks_multiplier():
+    for mult in (2.0, 6.0):
+        tr = generate_session_trace(
+            SessionTreeSpec(working_set_multiplier=mult))
+        got = tr.unique_kv_bytes() / tr.spec.pinned_bytes
+        # sessions_per_tenant rounds, so allow ~one session of slack
+        assert abs(got - mult) / mult < 0.35
+
+
+def test_overflow_reuse_distances_exceed_pinned_capacity():
+    spec = SessionTreeSpec(
+        working_set_multiplier=8.0, pinned_bytes=32 * MB)
+    tr = generate_session_trace(spec)
+    dists = [t.reuse_distance_bytes for t in tr.turns
+             if t.reuse_distance_bytes >= 0]
+    assert dists, "trace must contain session re-touches"
+    assert min(dists) > spec.pinned_bytes
+
+
+def test_session_trace_shape_invariants():
+    spec = SessionTreeSpec()
+    tr = generate_session_trace(spec)
+    spt = spec.sessions_per_tenant
+    assert len(tr.session_tokens) == spec.n_tenants * spt
+    assert len(tr.turns) == len(tr.session_tokens) * spec.turns_per_session
+    # tenant-shared prefix: sessions of one tenant share the first
+    # prefix tokens; sessions of different tenants do not
+    assert np.array_equal(
+        tr.session_tokens[0][:spec.tenant_prefix_tokens],
+        tr.session_tokens[spt - 1][:spec.tenant_prefix_tokens])
+    assert not np.array_equal(
+        tr.session_tokens[0][:spec.tenant_prefix_tokens],
+        tr.session_tokens[spt][:spec.tenant_prefix_tokens])
+    # turns within a burst are consecutive per tenant and arrivals are
+    # monotone
+    times = [t.t for t in tr.turns]
+    assert times == sorted(times)
+    # every turn's prompt length is the cumulative session prefix
+    for t in tr.turns:
+        assert t.n_tokens == (spec.tenant_prefix_tokens
+                              + (t.turn + 1) * spec.turn_tokens)
+        assert t.n_tokens <= len(tr.session_tokens[t.session])
